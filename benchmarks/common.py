@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: warmed, synchronized wall-time measurement."""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Callable
+
+import jax
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+
+def timeit_us(fn: Callable, *args, warmup: int = 2, repeats: int = 5,
+              **kw) -> float:
+    """Mean wall microseconds of fn(*args) with device sync (paper method:
+    averaged repeats, explicit completion boundaries)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def write_csv(name: str, header: list[str], rows: list[list]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name + ".csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def print_table(title: str, header: list[str], rows: list[list]) -> None:
+    print(f"\n== {title} ==")
+    widths = [
+        max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows else len(h)
+        for i, h in enumerate(header)
+    ]
+    print("  ".join(str(h).ljust(w) for h, w in zip(header, widths)))
+    for r in rows:
+        print("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))

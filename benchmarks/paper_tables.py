@@ -1,0 +1,222 @@
+"""One benchmark per paper table (Tables 1, 2, 3, 6, 7).
+
+The paper's numbers are cycles on FireSim'd RISC-V cores; ours are wall
+microseconds on this host.  What reproduces is the *structure* the paper's
+argument rests on — which phase dominates, which stage benefits from the
+matrix unit, which stage is immune — and the speedup methodology (fixed
+baseline, per-stage ratios).  Each function returns (header, rows) and
+writes a CSV.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    CannyConfig, HoughConfig, LineDetector, LinesConfig, PipelineConfig,
+    canny, get_lines, hough_paper_loop, hough_transform,
+)
+from repro.core.lines import render_lines
+from repro.data.images import synthetic_road
+
+from .common import print_table, timeit_us, write_csv
+
+H, W = 240, 320            # paper-scale frame (Fig. 4 is a road photo)
+
+
+def _frame():
+    return jnp.asarray(synthetic_road(H, W, seed=5).image, jnp.float32)
+
+
+def table1_full_pipeline():
+    """T1: phase profile including output-image generation."""
+    img_u8 = synthetic_road(H, W, seed=5).image
+    det = LineDetector(PipelineConfig(render_output=True))
+    load_us = timeit_us(lambda: det.load(jnp.asarray(img_u8)))
+    image = det.load(jnp.asarray(img_u8))
+    detect_us = timeit_us(lambda: det.detect(image))
+    res = det.detect(image)
+    render_us = timeit_us(
+        lambda: render_lines(image.astype(jnp.uint8), res.lines, res.valid)
+    )
+    total = load_us + detect_us + render_us
+    rows = [
+        ["image_load", f"{load_us:.0f}", f"{100*load_us/total:.1f}%"],
+        ["line_detection", f"{detect_us:.0f}", f"{100*detect_us/total:.1f}%"],
+        ["image_generation", f"{render_us:.0f}",
+         f"{100*render_us/total:.1f}%"],
+        ["total", f"{total:.0f}", ""],
+    ]
+    header = ["phase", "time(us)", "% over total"]
+    write_csv("t1_full_pipeline", header, rows)
+    print_table("Table 1 analogue: full pipeline phases", header, rows)
+    return {"render_share": render_us / total, "total_us": total}
+
+
+def table2_elided():
+    """T2: the paper's 4.2x elision — drop image generation."""
+    img_u8 = synthetic_road(H, W, seed=5).image
+    det = LineDetector(PipelineConfig(render_output=False))
+    load_us = timeit_us(lambda: det.load(jnp.asarray(img_u8)))
+    image = det.load(jnp.asarray(img_u8))
+    detect_us = timeit_us(lambda: det.detect(image))
+    total = load_us + detect_us
+    rows = [
+        ["image_load", f"{load_us:.0f}", f"{100*load_us/total:.1f}%"],
+        ["line_detection", f"{detect_us:.0f}", f"{100*detect_us/total:.1f}%"],
+        ["total", f"{total:.0f}", ""],
+    ]
+    header = ["phase", "time(us)", "% over total"]
+    write_csv("t2_elided", header, rows)
+    print_table("Table 2 analogue: output generation elided", header, rows)
+    return {"total_us": total}
+
+
+def table3_stage_split():
+    """T3: Canny vs Hough vs get-coordinates inside line detection."""
+    image = _frame()
+    ccfg, hcfg, lcfg = CannyConfig(), HoughConfig(), LinesConfig()
+    canny_j = jax.jit(lambda im: canny(im, ccfg))
+    hough_j = jax.jit(lambda e: hough_transform(e, hcfg))
+    lines_j = jax.jit(lambda v: get_lines(v, height=H, width=W, cfg=lcfg))
+    edges = canny_j(image)
+    votes = hough_j(edges)
+    c = timeit_us(canny_j, image)
+    h = timeit_us(hough_j, edges)
+    g = timeit_us(lines_j, votes)
+    total = c + h + g
+    rows = [
+        ["canny", f"{c:.0f}", f"{100*c/total:.1f}%"],
+        ["hough", f"{h:.0f}", f"{100*h/total:.1f}%"],
+        ["get_coordinates", f"{g:.0f}", f"{100*g/total:.1f}%"],
+        ["total", f"{total:.0f}", ""],
+    ]
+    header = ["stage", "time(us)", "% over total"]
+    write_csv("t3_stage_split", header, rows)
+    print_table("Table 3 analogue: line-detection stages", header, rows)
+    return {"canny_share": c / total}
+
+
+def _stage_times(canny_cfg: CannyConfig, hough_fast: bool):
+    """(canny_us, hough_us, coords_us) for one execution configuration."""
+    image = _frame()
+    ccfg, hcfg, lcfg = canny_cfg, HoughConfig(), LinesConfig()
+    canny_j = jax.jit(lambda im: canny(im, ccfg))
+    edges = canny_j(image)
+    if hough_fast:
+        hough_j = jax.jit(lambda e: hough_transform(e, hcfg))
+    else:
+        hough_j = jax.jit(lambda e: hough_paper_loop(e, hcfg))
+    votes = hough_j(edges)
+    lines_j = jax.jit(lambda v: get_lines(v, height=H, width=W, cfg=lcfg))
+    return (
+        timeit_us(canny_j, image),
+        timeit_us(hough_j, edges, repeats=2),
+        timeit_us(lines_j, votes),
+    )
+
+
+def table6_core_paths():
+    """T6 analogue: per-stage cost on the two execution paths.
+
+    'rocket' = stencil Canny + paper-loop Hough (the scalar-core program);
+    'boom'   = vectorized Canny + GEMM Hough.  The paper's observation —
+    Hough's serial data dependencies defeat a better core while Canny gains
+    — maps to the loop-form Hough barely moving between paths.
+    """
+    slow = _stage_times(CannyConfig(impl="stencil"), hough_fast=False)
+    fast = _stage_times(CannyConfig(), hough_fast=True)
+    header = ["stage", "scalar-path(us)", "vector-path(us)", "speedup"]
+    names = ["canny", "hough", "get_coordinates"]
+    rows = [
+        [n, f"{s:.0f}", f"{f:.0f}", f"{s/f:.2f}x"]
+        for n, s, f in zip(names, slow, fast)
+    ]
+    write_csv("t6_core_paths", header, rows)
+    print_table("Table 6 analogue: scalar vs vector execution", header, rows)
+    return {"hough_speedup": slow[1] / fast[1],
+            "canny_speedup": slow[0] / fast[0]}
+
+
+def table7_speedup_matrix():
+    """T7: speedups vs the fixed baseline (paper: Rocket@50MHz; here the
+    stencil-Canny + loop-Hough configuration).
+
+    Configurations mirror the paper's platforms:
+      baseline        stencil conv, loop Hough      (Rocket, no accel)
+      gemm            conv-as-GEMM offload          (+Gemmini — the paper's
+                                                     Workload 3 move)
+      gemm+hough      GEMM Hough too                (beyond paper: offload
+                                                     the stage the paper
+                                                     left on the core)
+      +fused          single-pass 7x7 fused masks   (beyond paper)
+      +int            integer pipeline (§4.4)
+    """
+    base = _stage_times(CannyConfig(impl="stencil"), hough_fast=False)
+    configs = [
+        ("gemm", _stage_times(CannyConfig(), hough_fast=False)),
+        ("gemm+hough", _stage_times(CannyConfig(), hough_fast=True)),
+        ("gemm+hough+fused", _stage_times(CannyConfig(fused=True),
+                                          hough_fast=True)),
+        ("gemm+hough+int", _stage_times(CannyConfig(integer=True),
+                                        hough_fast=True)),
+    ]
+    header = ["config", "canny", "hough", "coords", "total"]
+    bt = sum(base)
+    rows = [["baseline", "1.00x", "1.00x", "1.00x", "1.00x"]]
+    best = 1.0
+    for name, t in configs:
+        total = bt / sum(t)
+        best = max(best, total)
+        rows.append([
+            name,
+            f"{base[0]/t[0]:.2f}x", f"{base[1]/t[1]:.2f}x",
+            f"{base[2]/t[2]:.2f}x", f"{total:.2f}x",
+        ])
+    write_csv("t7_speedup_matrix", header, rows)
+    print_table(
+        "Table 7 analogue: speedups vs baseline (MEASURED on CPU host — "
+        "no matrix unit, so the GEMM rewrite loses here; see projection)",
+        header, rows,
+    )
+    return {"best_total_speedup": best}
+
+
+def table7_projected():
+    """Table 7 on the *target*: TPU v5e projection via the offload model.
+
+    The host has no systolic array, so measured numbers invert the paper's
+    result (conv-as-GEMM loses to fused stencils on a vector CPU — the
+    mirror image of the paper's 'stencil loses on a 16x16 array' finding).
+    The projection puts every stage on the VPU (the scalar-core baseline,
+    paper's Rocket) vs the planner's MXU/VPU placement (paper's
+    core+Gemmini), using the §Roofline hardware constants — the same
+    methodology the roofline section uses for the LM cells.
+    """
+    from repro.core.offload import PEAK_FLOPS_VPU, place
+    from repro.core.profiling import line_detection_costs
+
+    H, W = 720, 1280          # deployment-resolution frame
+    stages = line_detection_costs(H, W)
+    rows = []
+    total_base = total_acc = 0.0
+    for s in stages:
+        t_base = max(s.flops / PEAK_FLOPS_VPU, s.bytes_moved / 819e9)
+        pl = place(s)
+        total_base += t_base
+        total_acc += pl.est_time_s
+        rows.append([
+            s.name, pl.unit.upper(), f"{t_base*1e6:.1f}",
+            f"{pl.est_time_s*1e6:.1f}", f"{t_base/pl.est_time_s:.2f}x",
+        ])
+    rows.append(["total", "", f"{total_base*1e6:.1f}",
+                 f"{total_acc*1e6:.1f}", f"{total_base/total_acc:.2f}x"])
+    header = ["stage", "unit", "vpu-only(us)", "offloaded(us)", "speedup"]
+    write_csv("t7_projected_tpu", header, rows)
+    print_table(
+        "Table 7 projection on TPU v5e (paper's platform comparison: "
+        "scalar-core baseline vs matrix-unit offload)", header, rows,
+    )
+    return {"projected_total_speedup": total_base / total_acc}

@@ -1,0 +1,72 @@
+"""Run every paper-table benchmark; print tables; write CSVs.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import sys
+
+from .paper_tables import (
+    table1_full_pipeline,
+    table2_elided,
+    table3_stage_split,
+    table6_core_paths,
+    table7_projected,
+    table7_speedup_matrix,
+)
+from .t5_dp_scaling import table5_dp_scaling
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    summary = {}
+
+    t1 = table1_full_pipeline()
+    t2 = table2_elided()
+    summary["elision_speedup"] = t1["total_us"] / t2["total_us"]
+    summary["render_share"] = t1["render_share"]
+
+    t3 = table3_stage_split()
+    summary["canny_share"] = t3["canny_share"]
+
+    if not quick:
+        t5 = table5_dp_scaling((1, 2, 4))
+        summary["dp_scaling"] = t5["scaling_at_max"]
+
+    t6 = table6_core_paths()
+    summary["t6_canny_speedup"] = t6["canny_speedup"]
+    summary["t6_hough_speedup"] = t6["hough_speedup"]
+
+    t7 = table7_speedup_matrix()
+    summary["best_total_speedup"] = t7["best_total_speedup"]
+    t7p = table7_projected()
+    summary["projected_total_speedup"] = t7p["projected_total_speedup"]
+
+    print("\n== summary (paper claims -> this platform) ==")
+    print("  [methodology: the host is a vector CPU with no matrix unit, "
+          "so GEMM-offload wins appear in the TPU projection, not the "
+          "host wall-clock — the mirror image of the paper's platform]")
+    print(f"  image generation share (paper: 76% on 50MHz core): "
+          f"{summary['render_share']:.0%} here (vectorized renderer)")
+    print(f"  elision win (paper: 4.2x): {summary['elision_speedup']:.2f}x "
+          f"here")
+    print(f"  canny share of detection (paper: 87.6% scalar): "
+          f"{summary['canny_share']:.0%} here (canny already vectorized; "
+          f"the scatter-bound Hough dominates a CPU)")
+    if "dp_scaling" in summary:
+        import os
+        cores = os.cpu_count() or 1
+        note = (" — NOTE: this host has 1 physical core, so virtual "
+                "devices time-share and wall-clock cannot scale; the "
+                "table verifies correctness of the pmap program, the "
+                "paper's 2x needs 2 real cores" if cores == 1 else "")
+        print(f"  DP scaling (paper: ~2x on 2 cores): "
+              f"{summary['dp_scaling']:.2f}x on 4 devices{note}")
+    print(f"  projected total speedup, VPU-only vs MXU-offload on TPU v5e "
+          f"(paper: 3.7x vs Rocket): "
+          f"{summary['projected_total_speedup']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

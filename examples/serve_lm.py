@@ -1,0 +1,11 @@
+"""Continuous-batching serving demo: requests of mixed lengths share slots.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch falcon-mamba-7b
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

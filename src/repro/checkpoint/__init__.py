@@ -1,0 +1,8 @@
+"""Checkpointing: async save, manifest, restore-with-resharding (elastic)."""
+
+from .store import (  # noqa: F401
+    CheckpointManager,
+    latest_step,
+    restore,
+    save,
+)

@@ -1,0 +1,18 @@
+"""Architecture configs: one module per assigned arch + the paper's own.
+
+``get(name)`` returns the full-size ModelConfig; ``get_smoke(name)`` a
+family-preserving reduced config for CPU smoke tests.  ``ARCHS`` lists every
+selectable ``--arch`` id.
+"""
+
+from .base import (  # noqa: F401
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    SHAPES,
+    ShapeSpec,
+    get,
+    get_smoke,
+    ARCHS,
+    shapes_for,
+)

@@ -1,0 +1,39 @@
+"""The paper's own application as a config: line detection pipelines.
+
+Not an LM arch — this parameterizes ``repro.core`` the way the paper's
+platform matrix (Table 7) does, so drivers/benchmarks can select execution
+variants by name the same way ``--arch`` selects a model.
+
+    from repro.configs.paper_lines import PLATFORMS
+    det = LineDetector(PLATFORMS["boom+gemmini"])
+"""
+
+from repro.core import CannyConfig, HoughConfig, LinesConfig, PipelineConfig
+
+# The paper's platform matrix, as execution variants of the same algorithm.
+PLATFORMS = {
+    # Rocket 50MHz baseline: scalar stencils, loop-form Hough semantics
+    "rocket": PipelineConfig(
+        canny=CannyConfig(impl="stencil"),
+    ),
+    # BOOM: same program on a better core (vectorized paths)
+    "boom": PipelineConfig(
+        canny=CannyConfig(),
+    ),
+    # +Gemmini (the paper's Workload 3): conv-as-GEMM offload, int pipeline
+    "rocket+gemmini": PipelineConfig(
+        canny=CannyConfig(integer=True),
+    ),
+    "boom+gemmini": PipelineConfig(
+        canny=CannyConfig(integer=True),
+    ),
+    # beyond-paper: fused 7x7 single-pass masks + GEMM-form Hough voting
+    "tpu-fused": PipelineConfig(
+        canny=CannyConfig(fused=True),
+    ),
+}
+
+# The paper's frame geometry (Fig. 4-scale) and deployment target.
+FRAME_HW = (240, 320)
+DEPLOY_HW = (720, 1280)
+REALTIME_BUDGET_S = 0.300     # paper: 300 ms/frame -> ~4 m at 50 km/h

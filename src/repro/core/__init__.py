@@ -1,0 +1,15 @@
+"""The paper's primary contribution, as composable JAX modules.
+
+Line detection for autonomous vehicles: Canny (conv-as-GEMM, MXU) ->
+Hough transform (GEMM + histogram voting) -> get-lines-coordinates, with
+the paper's float->int rewrite, phase profiling, and heterogeneous
+placement planning as first-class features.
+"""
+
+from .canny import GAUSS_5x5, SOBEL_X, SOBEL_Y, CannyConfig, canny  # noqa: F401
+from .hough import HoughConfig, hough_paper_loop, hough_transform, rho_bins  # noqa: F401
+from .lines import LinesConfig, get_lines, render_lines  # noqa: F401
+from .offload import Placement, place, plan, plan_line_detection  # noqa: F401
+from .pipeline import DetectionResult, LineDetector, PipelineConfig  # noqa: F401
+from .profiling import PhaseProfiler, StageCost, line_detection_costs  # noqa: F401
+from .quantize import Quantized, dequantize, quantize, quantized_matmul  # noqa: F401

@@ -1,0 +1,220 @@
+"""Canny edge detection in conv-as-GEMM form (paper Section 4.1 / Algorithm 1).
+
+The paper's hot loop — 87.6% of line-detection time (Table 3) — is the Canny
+stage, whose stencils it rewrites as mask x neighbourhood matrix products for
+Gemmini.  Here the same stages lower to the ``conv2d_gemm`` Pallas kernel
+(MXU) while the control-heavy stages (thresholding, non-max suppression,
+hysteresis) stay element-wise (VPU) — the TPU version of the paper's
+core/accelerator partition, decided by ``core.offload``.
+
+Two execution variants:
+  * ``paper``   — faithful to the paper's Algorithm 1: gradient-magnitude
+    threshold, direction quantization, double threshold, one-step hysteresis.
+  * ``full``    — textbook Canny with direction-aware non-max suppression and
+    iterative hysteresis (better lines; used by default in the pipeline).
+
+Two arithmetic modes (paper Section 4.4):
+  * float (f32) and integer (uint8 image -> int32 accumulation, L1 gradient
+    magnitude, tan-ratio direction tests) — the paper's float->int rewrite,
+    validated for detection parity in tests.
+
+One beyond-paper fusion (EXPERIMENTS.md #Perf): ``fused=True`` composes the
+Gaussian into the Sobel masks offline (convolution associativity), so one
+im2col GEMM pass with 7x7 masks replaces the two chained 5x5 passes — one
+pass over HBM instead of two, and wider GEMMs that fill the MXU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+# The classic integer-friendly 5x5 Gaussian (sums to 159) and Sobel masks.
+GAUSS_5x5 = np.array(
+    [
+        [2, 4, 5, 4, 2],
+        [4, 9, 12, 9, 4],
+        [5, 12, 15, 12, 5],
+        [4, 9, 12, 9, 4],
+        [2, 4, 5, 4, 2],
+    ],
+    np.float32,
+)
+GAUSS_NORM = 159.0
+SOBEL_X = np.array([[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]], np.float32)
+SOBEL_Y = SOBEL_X.T.copy()
+
+# tan(22.5 deg) and tan(67.5 deg) as integer ratios (paper's int rewrite:
+# direction tests become cross-multiplications, no arctan anywhere).
+TAN_22_NUM, TAN_22_DEN = 53, 128     # 53/128  = 0.4141 ~ tan 22.5
+TAN_67_NUM, TAN_67_DEN = 309, 128    # 309/128 = 2.4141 ~ tan 67.5
+
+
+def _pad_to(mask: np.ndarray, k: int) -> np.ndarray:
+    p = (k - mask.shape[0]) // 2
+    return np.pad(mask, ((p, p), (p, p)))
+
+
+def _compose(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Full 2-D convolution of two masks (associativity: (a*b)*img == a*(b*img))."""
+    ka, kb = a.shape[0], b.shape[0]
+    k = ka + kb - 1
+    out = np.zeros((k, k), np.float32)
+    for i in range(ka):
+        for j in range(ka):
+            out[i : i + kb, j : j + kb] += a[i, j] * b
+    return out
+
+
+@functools.cache
+def fused_masks() -> np.ndarray:
+    """(3, 7, 7): [gauss(padded), gauss(*)sobel_x, gauss(*)sobel_y]."""
+    g = GAUSS_5x5 / GAUSS_NORM
+    return np.stack(
+        [
+            _pad_to(g, 7),
+            _compose(g, SOBEL_X),
+            _compose(g, SOBEL_Y),
+        ]
+    ).astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class CannyConfig:
+    low: float = 40.0          # weak-edge threshold (on 0..255 magnitudes)
+    high: float = 90.0         # strong-edge threshold
+    variant: str = "full"      # "full" | "paper"
+    integer: bool = False      # paper Section 4.4 float->int rewrite
+    fused: bool = False        # beyond-paper single-pass 7x7 masks
+    hysteresis_iters: int = 8
+    border: int = 4            # suppress zero-padding artifacts at the rim
+    impl: str | None = None    # kernel dispatch (None => backend default)
+
+
+def _gradients(image: jax.Array, cfg: CannyConfig):
+    """Stages 1-2: noise reduction + intensity gradient, all GEMM-form."""
+    if cfg.integer:
+        img = image.astype(jnp.int32)
+        if cfg.fused:
+            # Integer fusion: scale fused float masks to int (x GAUSS_NORM).
+            m = jnp.asarray(
+                np.round(fused_masks() * GAUSS_NORM).astype(np.int32)
+            )
+            out = ops.conv2d_gemm(img, m, impl=cfg.impl)
+            nr = out[0] // int(GAUSS_NORM)
+            gx = out[1] // int(GAUSS_NORM)
+            gy = out[2] // int(GAUSS_NORM)
+        else:
+            g = jnp.asarray(GAUSS_5x5.astype(np.int32))
+            nr = ops.conv2d_gemm(img, g[None], impl=cfg.impl)[0] // int(
+                GAUSS_NORM
+            )
+            sob = jnp.asarray(
+                np.stack([SOBEL_X, SOBEL_Y]).astype(np.int32)
+            )
+            gxy = ops.conv2d_gemm(nr, sob, impl=cfg.impl)
+            gx, gy = gxy[0], gxy[1]
+        return nr, gx, gy
+
+    img = image.astype(jnp.float32)
+    if cfg.fused:
+        out = ops.conv2d_gemm(img, jnp.asarray(fused_masks()), impl=cfg.impl)
+        return out[0], out[1], out[2]
+    g = jnp.asarray(GAUSS_5x5 / GAUSS_NORM)
+    nr = ops.conv2d_gemm(img, g[None], impl=cfg.impl)[0]
+    sob = jnp.asarray(np.stack([SOBEL_X, SOBEL_Y]))
+    gxy = ops.conv2d_gemm(nr, sob, impl=cfg.impl)
+    return nr, gxy[0], gxy[1]
+
+
+def _magnitude_direction(gx, gy, integer: bool):
+    """Stage 2b: |G| and direction bin in {0, 45, 90, 135} (VPU work)."""
+    ax, ay = jnp.abs(gx), jnp.abs(gy)
+    if integer:
+        mag = ax + ay  # L1 magnitude: no sqrt in the int pipeline
+        # direction via cross-multiplied tan thresholds (no arctan):
+        d0 = TAN_22_DEN * ay < TAN_22_NUM * ax            # ~horizontal grad
+        d90 = TAN_67_DEN * ay >= TAN_67_NUM * ax          # ~vertical grad
+    else:
+        mag = jnp.sqrt(gx * gx + gy * gy)
+        t = ay / jnp.maximum(ax, 1e-9)
+        d0 = t < (TAN_22_NUM / TAN_22_DEN)
+        d90 = t >= (TAN_67_NUM / TAN_67_DEN)
+    diag = jnp.logical_not(d0 | d90)
+    same_sign = (gx >= 0) == (gy >= 0)
+    # bins: 0 => E-W neighbour pair, 1 => NE-SW, 2 => N-S, 3 => NW-SE
+    dirs = jnp.where(
+        d0, 0, jnp.where(d90, 2, jnp.where(same_sign & diag, 1, 3))
+    ).astype(jnp.int32)
+    return mag, dirs
+
+
+def _shift(x, dy, dx):
+    """Zero-padded spatial shift."""
+    H, W = x.shape
+    pad = jnp.pad(x, ((1, 1), (1, 1)))
+    return jax.lax.dynamic_slice(pad, (1 + dy, 1 + dx), (H, W))
+
+
+def _nms(mag, dirs):
+    """Direction-aware non-max suppression (full variant, stage 3)."""
+    pairs = [((0, 1), (0, -1)), ((-1, 1), (1, -1)),
+             ((1, 0), (-1, 0)), ((1, 1), (-1, -1))]
+    keep = jnp.zeros_like(mag, dtype=bool)
+    for b, (p, q) in enumerate(pairs):
+        n1 = _shift(mag, *p)
+        n2 = _shift(mag, *q)
+        keep = keep | ((dirs == b) & (mag >= n1) & (mag >= n2))
+    return jnp.where(keep, mag, 0)
+
+
+def _dilate3(x):
+    out = x
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            if dy or dx:
+                out = out | _shift(x, dy, dx)
+    return out
+
+
+def _clear_border(x: jax.Array, b: int) -> jax.Array:
+    if b <= 0:
+        return x
+    H, W = x.shape
+    yy = jnp.arange(H)[:, None]
+    xx = jnp.arange(W)[None, :]
+    inside = (yy >= b) & (yy < H - b) & (xx >= b) & (xx < W - b)
+    return jnp.where(inside, x, jnp.zeros_like(x))
+
+
+def canny(image: jax.Array, cfg: CannyConfig = CannyConfig()) -> jax.Array:
+    """Edge map (H, W) uint8 in {0, 255} (paper's ``image_out``)."""
+    nr, gx, gy = _gradients(image, cfg)
+    mag, dirs = _magnitude_direction(gx, gy, cfg.integer)
+    mag = _clear_border(mag, cfg.border)
+
+    if cfg.variant == "paper":
+        # Algorithm 1 stages 3-5: pure thresholds, one hysteresis pass.
+        edge = (mag >= cfg.low)
+        strong = edge & (mag >= cfg.high)
+        out = strong | (edge & _dilate3(strong))
+        return jnp.where(out, 255, 0).astype(jnp.uint8)
+
+    sup = _nms(mag, dirs)
+    strong = sup >= cfg.high
+    weak = (sup >= cfg.low) & ~strong
+
+    def body(_, s):
+        return s | (weak & _dilate3(s))
+
+    strong = jax.lax.fori_loop(0, cfg.hysteresis_iters, body, strong)
+    return jnp.where(strong, 255, 0).astype(jnp.uint8)
+
+
+canny_jit = jax.jit(canny, static_argnames=("cfg",))

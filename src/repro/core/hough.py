@@ -1,0 +1,108 @@
+"""Hough transform (paper Section 4.2 / Algorithm 2) in GEMM + histogram form.
+
+The paper keeps this stage on the scalar core: its voting loop is a chain of
+data-dependent read-modify-writes (CPI > 3 on both Rocket and BOOM, Table 6)
+and Gemmini buys it nothing (Table 7).  The TPU adaptation dissolves the
+dependency — see ``kernels/hough_vote.py``.  This module provides:
+
+  * ``hough_transform``   — the accelerated path: homogeneous-coordinate rho
+    GEMM + blockwise one-hot vote accumulation.
+  * ``hough_paper_loop``  — a faithful scalar-form reference implementing
+    Algorithm 2's per-pixel/per-theta loop nest (``lax`` loops, one pixel at
+    a time).  This is the measured "no-accelerator baseline" in the
+    benchmarks, the analogue of the paper's Rocket/BOOM-only runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class HoughConfig:
+    n_theta: int = 180          # 1-degree bins, theta in [0, 180)
+    rho_res: float = 1.0        # rho bin width (pixels)
+    edge_threshold: float = 250.0  # paper: image[i*width+j] >= 250
+    impl: str | None = None
+
+
+def rho_bins(height: int, width: int, cfg: HoughConfig) -> int:
+    diag = math.hypot(height, width)
+    return int(2.0 * diag / cfg.rho_res) + 1
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg",)
+)
+def hough_transform(edges: jax.Array, cfg: HoughConfig = HoughConfig()
+                    ) -> jax.Array:
+    """Vote accumulator (n_rho, n_theta) from an edge map (H, W).
+
+    rho = j*cos(theta) + i*sin(theta)  (paper's convention: x=col, y=row),
+    shifted by +rho_max and binned at cfg.rho_res.  The shift and the
+    resolution are folded into a homogeneous third coordinate so the whole
+    stage is literally one GEMM + histogram.
+    """
+    H, W = edges.shape
+    n_rho = rho_bins(H, W, cfg)
+    diag = math.hypot(H, W)
+
+    theta = np.arange(cfg.n_theta, dtype=np.float32) * (
+        math.pi / cfg.n_theta
+    )
+    trig = np.stack(
+        [
+            np.cos(theta) / cfg.rho_res,
+            np.sin(theta) / cfg.rho_res,
+            np.full_like(theta, diag / cfg.rho_res),
+        ]
+    ).astype(np.float32)
+
+    jj, ii = jnp.meshgrid(jnp.arange(W), jnp.arange(H))
+    xy = jnp.stack(
+        [jj.ravel(), ii.ravel(), jnp.ones(H * W, jnp.int32)], axis=1
+    ).astype(jnp.float32)
+    weights = (edges.ravel() >= cfg.edge_threshold).astype(jnp.float32)
+
+    return ops.hough_vote(
+        xy, weights, jnp.asarray(trig), n_rho=n_rho, impl=cfg.impl
+    )
+
+
+def hough_paper_loop(edges: jax.Array, cfg: HoughConfig = HoughConfig()
+                     ) -> jax.Array:
+    """Paper Algorithm 2, faithfully serial: for each edge point, for each
+    theta, ``accumulators[(rho + c_rho)*n_theta + theta]++``.
+
+    Implemented as a ``lax.fori_loop`` over pixels with a vectorized inner
+    theta sweep — the closest a data-parallel host gets to the scalar-core
+    loop while staying jittable.  Used as the measured baseline for the
+    Table 7 speedup analogue.
+    """
+    H, W = edges.shape
+    n_rho = rho_bins(H, W, cfg)
+    diag = math.hypot(H, W)
+    theta = jnp.arange(cfg.n_theta, dtype=jnp.float32) * (
+        math.pi / cfg.n_theta
+    )
+    cos_t, sin_t = jnp.cos(theta), jnp.sin(theta)
+    flat = edges.ravel().astype(jnp.float32)
+
+    def body(p, acc):
+        i = p // W
+        j = p % W
+        rho = j * cos_t + i * sin_t + diag
+        idx = jnp.floor(rho / cfg.rho_res).astype(jnp.int32)
+        w = jnp.where(flat[p] >= cfg.edge_threshold, 1.0, 0.0)
+        return acc.at[idx, jnp.arange(cfg.n_theta)].add(w)
+
+    acc0 = jnp.zeros((n_rho, cfg.n_theta), jnp.float32)
+    return jax.lax.fori_loop(0, H * W, body, acc0)

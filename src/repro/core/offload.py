@@ -1,0 +1,73 @@
+"""Heterogeneous placement planning (paper Sections 4.4-5.3, generalized).
+
+The paper decides *which stages go to the accelerator* by profiling and by
+an implicit cost model: offload pays only if
+
+    t_core(stage) > t_accel(stage) + t_transfer(operands)
+
+On the paper's platform t_transfer is real (RoCC + scratchpad mvin/mvout) and
+the Hough stage's serial dependencies make t_accel ~ t_core, so only Canny's
+GEMMs move.  On TPU the "accelerator" (MXU) and the "core" (VPU) share VMEM
+inside one fused program, so t_transfer ~ 0 and the placement rule reduces
+to: *GEMM-expressible -> MXU; element-wise/control -> VPU; host only for
+I/O*.  This module encodes that rule as an explicit, testable planner and
+documents the assumption change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+from .profiling import StageCost
+
+# TPU v5e model constants (also used by launch/roofline.py).
+PEAK_FLOPS_BF16 = 197e12      # per chip
+PEAK_FLOPS_VPU = 4e12         # rough VPU f32 throughput
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s/link
+MXU_MIN_DIM = 128             # systolic array edge (Gemmini: 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    stage: str
+    unit: str        # "mxu" | "vpu" | "host"
+    reason: str
+    est_time_s: float
+
+
+def place(stage: StageCost, *, transfer_bytes: float = 0.0,
+          link_bw: float = HBM_BW) -> Placement:
+    """Place one stage. The paper's rule with TPU constants."""
+    t_transfer = transfer_bytes / link_bw
+    t_mxu = stage.flops * stage.matmul_fraction / PEAK_FLOPS_BF16 + (
+        stage.flops * (1 - stage.matmul_fraction) / PEAK_FLOPS_VPU
+    )
+    t_mem = stage.bytes_moved / HBM_BW
+    t_vpu = max(stage.flops / PEAK_FLOPS_VPU, t_mem)
+
+    if stage.matmul_fraction >= 0.5:
+        t_accel = max(t_mxu, t_mem) + t_transfer
+        if t_accel < t_vpu:
+            return Placement(
+                stage.name, "mxu",
+                f"GEMM-dominant (AI={stage.arithmetic_intensity:.1f}); "
+                f"t_mxu={t_accel:.2e}s < t_vpu={t_vpu:.2e}s", t_accel,
+            )
+    return Placement(
+        stage.name, "vpu",
+        "element-wise/control-bound; offload gains nothing "
+        "(the paper's Hough-on-core decision)", t_vpu,
+    )
+
+
+def plan(stages: Iterable[StageCost]) -> list[Placement]:
+    return [place(s) for s in stages]
+
+
+def plan_line_detection(H: int, W: int, *, fused: bool = False
+                        ) -> list[Placement]:
+    from .profiling import line_detection_costs
+
+    return plan(line_detection_costs(H, W, fused=fused))

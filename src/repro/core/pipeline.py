@@ -1,0 +1,114 @@
+"""End-to-end line detection pipeline (paper Section 4.3-4.4).
+
+Three phases, exactly the paper's Table 1 decomposition:
+
+  1. image load        — decode/normalize the input frame (host -> device),
+  2. line detection    — Canny -> Hough -> get-coordinates (device),
+  3. image generation  — render detected lines into an output frame.
+
+Phase 3 is implemented *and elidable* (``render_output=False``), reproducing
+the paper's 4.2x elision win.  ``detect_profiled`` produces the paper-style
+phase tables; ``benchmarks/`` consumes them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .canny import CannyConfig, canny
+from .hough import HoughConfig, hough_transform
+from .lines import LinesConfig, get_lines, render_lines
+from .profiling import PhaseProfiler
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    canny: CannyConfig = CannyConfig()
+    hough: HoughConfig = HoughConfig()
+    lines: LinesConfig = LinesConfig()
+    render_output: bool = False   # paper's elision: off by default
+
+
+class DetectionResult(NamedTuple):
+    lines: jax.Array      # (K, 4) endpoints
+    valid: jax.Array      # (K,) mask
+    peaks: jax.Array      # (K, 2) (rho, theta)
+    edges: jax.Array      # (H, W) uint8 Canny output
+    rendered: jax.Array | None
+
+
+class LineDetector:
+    """The paper's application as a composable, jittable module."""
+
+    def __init__(self, cfg: PipelineConfig = PipelineConfig()):
+        self.cfg = cfg
+
+    # --- phase 1: image load ------------------------------------------
+    @staticmethod
+    def load(raw: jax.Array) -> jax.Array:
+        """uint8 frame (possibly RGB) -> grayscale f32-ready device array."""
+        img = jnp.asarray(raw)
+        if img.ndim == 3:  # luma conversion
+            img = (
+                0.299 * img[..., 0] + 0.587 * img[..., 1]
+                + 0.114 * img[..., 2]
+            )
+        return img
+
+    # --- phase 2: line detection --------------------------------------
+    @functools.partial(jax.jit, static_argnames=("self",))
+    def detect(self, image: jax.Array) -> DetectionResult:
+        H, W = image.shape
+        edges = canny(image, self.cfg.canny)
+        votes = hough_transform(edges, self.cfg.hough)
+        lines, valid, peaks = get_lines(
+            votes, height=H, width=W, cfg=self.cfg.lines
+        )
+        rendered = None
+        if self.cfg.render_output:
+            rendered = render_lines(image.astype(jnp.uint8), lines, valid)
+        return DetectionResult(lines, valid, peaks, edges, rendered)
+
+    # --- full pipeline with paper-style phase profiling ----------------
+    def detect_profiled(
+        self, raw: jax.Array, profiler: PhaseProfiler | None = None,
+        repeats: int = 1,
+    ) -> tuple[DetectionResult, PhaseProfiler]:
+        prof = profiler or PhaseProfiler()
+        result = None
+        for _ in range(repeats):
+            image = prof.timeit("image_load", self.load, raw)
+            result = prof.timeit("line_detection", self.detect, image)
+            if self.cfg.render_output:
+                prof.timeit(
+                    "image_generation",
+                    lambda: render_lines(
+                        image.astype(jnp.uint8), result.lines, result.valid
+                    ),
+                )
+        return result, prof
+
+    def detect_stage_profiled(
+        self, image: jax.Array, repeats: int = 1
+    ) -> PhaseProfiler:
+        """Paper Table 3: Canny vs Hough vs get-coordinates split."""
+        prof = PhaseProfiler()
+        H, W = image.shape
+        canny_j = jax.jit(lambda im: canny(im, self.cfg.canny))
+        hough_j = jax.jit(lambda e: hough_transform(e, self.cfg.hough))
+        lines_j = jax.jit(
+            lambda v: get_lines(v, height=H, width=W, cfg=self.cfg.lines)
+        )
+        edges = canny_j(image)  # warmup chains
+        votes = hough_j(edges)
+        lines_j(votes)
+        for _ in range(repeats):
+            edges = prof.timeit("canny", canny_j, image)
+            votes = prof.timeit("hough", hough_j, edges)
+            prof.timeit("get_coordinates", lines_j, votes)
+        return prof

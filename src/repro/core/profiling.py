@@ -1,0 +1,109 @@
+"""Phase profiling (paper Section 4.4, Tables 1-3 methodology).
+
+The paper's optimization process starts from phase-level wall-time tables;
+this module reproduces that instrument: named phases, block-until-ready
+boundaries, microsecond means over repeats, and percentage-over-total
+reports shaped like the paper's tables.  The analytic FLOP/byte counters
+feed the roofline terms (EXPERIMENTS.md #Roofline) the same way the paper's
+cycle counters feed its speedup tables.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Callable
+
+import jax
+
+
+@dataclasses.dataclass
+class PhaseStat:
+    total_us: float = 0.0
+    calls: int = 0
+
+    @property
+    def mean_us(self) -> float:
+        return self.total_us / max(self.calls, 1)
+
+
+class PhaseProfiler:
+    """Accumulates wall time per named phase across repeats."""
+
+    def __init__(self) -> None:
+        self.phases: "OrderedDict[str, PhaseStat]" = OrderedDict()
+
+    @contextlib.contextmanager
+    def phase(self, name: str):
+        start = time.perf_counter()
+        result_holder = []
+        try:
+            yield result_holder
+        finally:
+            if result_holder:
+                jax.block_until_ready(result_holder[-1])
+            elapsed = (time.perf_counter() - start) * 1e6
+            stat = self.phases.setdefault(name, PhaseStat())
+            stat.total_us += elapsed
+            stat.calls += 1
+
+    def timeit(self, name: str, fn: Callable, *args, repeats: int = 1, **kw):
+        out = None
+        for _ in range(repeats):
+            with self.phase(name) as holder:
+                out = fn(*args, **kw)
+                holder.append(out)
+        return out
+
+    def table(self) -> list[tuple[str, float, float]]:
+        """[(phase, mean_us, pct_over_total)] — the paper's table shape."""
+        total = sum(s.mean_us for s in self.phases.values())
+        return [
+            (name, s.mean_us, 100.0 * s.mean_us / total if total else 0.0)
+            for name, s in self.phases.items()
+        ]
+
+    def report(self) -> str:
+        rows = self.table()
+        width = max((len(n) for n, _, _ in rows), default=10)
+        lines = [f"{'phase':<{width}}  {'time(us)':>12}  {'% over total':>12}"]
+        for name, us, pct in rows:
+            lines.append(f"{name:<{width}}  {us:>12.1f}  {pct:>11.2f}%")
+        total = sum(us for _, us, _ in rows)
+        lines.append(f"{'total':<{width}}  {total:>12.1f}")
+        return "\n".join(lines)
+
+
+# ----- analytic per-stage cost model (feeds offload planning + rooflines) --
+
+@dataclasses.dataclass(frozen=True)
+class StageCost:
+    name: str
+    flops: float           # useful arithmetic
+    bytes_moved: float     # HBM traffic assuming perfect reuse in VMEM
+    matmul_fraction: float  # share of flops expressible as GEMMs
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.bytes_moved, 1.0)
+
+
+def line_detection_costs(H: int, W: int, *, n_theta: int = 180,
+                         kh: int = 5, fused: bool = False) -> list[StageCost]:
+    """Analytic costs of the paper's stages for an HxW frame."""
+    px = H * W
+    k2 = (7 * 7) if fused else (kh * kh)
+    conv_passes = 1 if fused else 2
+    conv_flops = 2.0 * px * k2 * 3  # 3 masks
+    conv_bytes = conv_passes * px * 4 * 2
+    n_rho = int(2 * (H * H + W * W) ** 0.5) + 1
+    return [
+        StageCost("canny_conv_gemm", conv_flops, conv_bytes, 1.0),
+        StageCost("canny_elementwise", 12.0 * px, px * 4 * 4, 0.0),
+        StageCost("hough_rho_gemm", 2.0 * px * n_theta * 3, px * 4 * 2, 1.0),
+        StageCost("hough_votes", 2.0 * px * n_theta, n_rho * n_theta * 4, 0.0),
+        StageCost("get_coordinates", 10.0 * n_rho * n_theta,
+                  n_rho * n_theta * 4, 0.0),
+    ]

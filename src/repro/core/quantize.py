@@ -1,0 +1,84 @@
+"""Float -> integer rewrites (paper Section 4.4).
+
+The paper replaces the pipeline's floats with integers "without any loss in
+accuracy", matching Gemmini's int8 array + wide accumulator.  The same
+machinery serves three places in this framework:
+
+  * the integer Canny/Hough path (``CannyConfig(integer=True)``),
+  * int8 GEMM operands for ``tiled_matmul`` (MXU int8 path),
+  * int8 error-feedback gradient compression (``train/compression.py``) for
+    the slow cross-pod reductions.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Quantized(NamedTuple):
+    values: jax.Array   # int8 (or int16/int32 for wider modes)
+    scale: jax.Array    # f32 scalar (per-tensor) or vector (per-axis)
+
+
+def quantize(x: jax.Array, *, bits: int = 8, axis=None) -> Quantized:
+    """Symmetric linear quantization. axis=None => per-tensor scale."""
+    qmax = 2 ** (bits - 1) - 1
+    amax = (
+        jnp.max(jnp.abs(x))
+        if axis is None
+        else jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    )
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    dtype = {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[bits]
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(dtype)
+    return Quantized(q, scale.astype(jnp.float32))
+
+
+def dequantize(q: Quantized) -> jax.Array:
+    return q.values.astype(jnp.float32) * q.scale
+
+
+def quantize_weights_int8(params, *, compute_dtype=jnp.bfloat16):
+    """Weight-only int8 quantization of a parameter pytree (serving).
+
+    The paper's float->int rewrite applied to inference weight traffic:
+    every floating leaf becomes (int8 values, per-output-channel f32 scale);
+    ``dequantize_weights`` restores compute-dtype weights on the fly (the
+    convert+scale fuses into the consuming GEMM on TPU, so HBM reads are
+    the int8 bytes).  Integer leaves pass through untouched.
+    Returns ({"q": int8 tree, "s": scale tree}, dequant_fn).
+    """
+    def q_leaf(p):
+        if not jnp.issubdtype(p.dtype, jnp.floating):
+            return p, jnp.ones((), jnp.float32)
+        axis = tuple(range(p.ndim - 1)) if p.ndim > 1 else None
+        qq = quantize(p.astype(jnp.float32), axis=axis)
+        return qq.values, qq.scale
+
+    flat, treedef = jax.tree.flatten(params)
+    qs = [q_leaf(p) for p in flat]
+    q_tree = jax.tree.unflatten(treedef, [q for q, _ in qs])
+    s_tree = jax.tree.unflatten(treedef, [s for _, s in qs])
+
+    def dequant(qtree, stree):
+        def d_leaf(q, s):
+            if not jnp.issubdtype(q.dtype, jnp.signedinteger):
+                return q
+            return (q.astype(jnp.float32) * s).astype(compute_dtype)
+        return jax.tree.map(d_leaf, qtree, stree)
+
+    return {"q": q_tree, "s": s_tree}, dequant
+
+
+def quantized_matmul(x: jax.Array, y: jax.Array, *, impl=None) -> jax.Array:
+    """f32 matmul computed through the int8 MXU path (Gemmini-style):
+    quantize both operands per-tensor, int8 GEMM with int32 accumulation,
+    rescale.  Accuracy is the paper's claim; tests bound the error."""
+    from repro.kernels import ops
+
+    qx, qy = quantize(x), quantize(y)
+    acc = ops.tiled_matmul(qx.values, qy.values, impl=impl)
+    return acc.astype(jnp.float32) * (qx.scale * qy.scale)

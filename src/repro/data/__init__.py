@@ -1,0 +1,10 @@
+"""Data substrate: synthetic road frames (the paper's camera feed) and a
+deterministic, resumable, shard-aware token pipeline for the LM archs."""
+
+from .images import RoadScene, frame_stream, synthetic_road  # noqa: F401
+from .tokens import (  # noqa: F401
+    TokenPipelineConfig,
+    TokenStream,
+    PrefetchLoader,
+    SkipAheadLoader,
+)

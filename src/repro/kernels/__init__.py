@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical stages, with pure-jnp oracles.
+
+The paper's compute hot-spots (conv-as-GEMM Canny stages, Hough voting) and
+the framework's transformer/SSM hot-spots all live here.  See ``ops`` for
+the public dispatching API and ``ref`` for the semantics of record.
+"""
+
+from . import ops, ref  # noqa: F401
+from .ops import (  # noqa: F401
+    conv2d_gemm,
+    flash_attention,
+    hough_vote,
+    resolve_impl,
+    set_default_impl,
+    ssd_scan,
+    tiled_matmul,
+)

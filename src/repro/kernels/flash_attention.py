@@ -1,0 +1,163 @@
+"""Blocked (flash) attention Pallas kernel: causal / GQA / sliding-window.
+
+Attention is the paper's thesis at transformer scale: a softmax-weighted
+average re-expressed as *blocked GEMMs* (QK^T and PV) with an online-softmax
+epilogue, sized so every operand tile lives in VMEM and the MXU runs on
+128-aligned dims.  GQA is handled without materializing repeated K/V — the
+kv BlockSpec ``index_map`` folds the query-head -> kv-head mapping, the VMEM
+analogue of Gemmini reusing one scratchpad operand across many row tiles.
+
+Grid: ``(batch*q_heads, q_blocks, kv_blocks)`` with kv innermost; the
+(bq, d) accumulator plus running max/denominator are output-stationary in
+scratch.  Fully-masked kv blocks are skipped via ``pl.when`` (the causal /
+window block frontier), which is what makes sliding-window attention
+O(L*window) rather than O(L^2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale, causal, window, q_offset, kv_len, bq, bk,
+):
+    i = pl.program_id(1)  # q block
+    j = pl.program_id(2)  # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Block-frontier skip: is any (q, kv) pair in this tile unmasked?
+    q_lo = q_offset + i * bq
+    q_hi = q_lo + bq - 1
+    kv_lo = j * bk
+    needed = kv_lo < min(kv_len, 1 << 62)
+    if causal:
+        needed = jnp.logical_and(needed, kv_lo <= q_hi)
+    if window is not None:
+        kv_hi = kv_lo + bk - 1
+        needed = jnp.logical_and(needed, kv_hi > q_lo - window)
+
+    @pl.when(needed)
+    def _update():
+        q = q_ref[0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)  # (bk, d)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (bq, bk)
+
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kv_pos = kv_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kv_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= kv_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - kv_pos < window)
+
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]  # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        # Explicit mask on p: never rely on exp(-inf - -inf) == 0.
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = corr * acc_ref[...] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _flush():
+        denom = l_ref[...]
+        denom = jnp.where(denom == 0.0, 1.0, denom)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "q_offset", "bq", "bk", "interpret"
+    ),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Blocked attention.
+
+    Args:
+      q: (B, Hq, Lq, D);  k, v: (B, Hkv, Lkv, D) with Hq % Hkv == 0 (GQA).
+      causal: apply causal mask in *global* positions (see q_offset).
+      window: sliding-window size (kv_pos within ``window`` of q_pos).
+      q_offset: global position of q[...,0,:] — used for decode, where
+        Lq << Lkv and queries sit at the end of the kv timeline.
+    Returns: (B, Hq, Lq, D) in q.dtype.
+    """
+    B, Hq, Lq, D = q.shape
+    _, Hkv, Lkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+
+    bq = min(bq, max(8, Lq))
+    bk = min(bk, Lkv)
+    pad_q = (-Lq) % bq
+    pad_k = (-Lkv) % bk
+    qr = q.reshape(B * Hq, Lq, D)
+    kr = k.reshape(B * Hkv, Lkv, D)
+    vr = v.reshape(B * Hkv, Lkv, D)
+    if pad_q:
+        qr = jnp.pad(qr, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kr = jnp.pad(kr, ((0, 0), (0, pad_k), (0, 0)))
+        vr = jnp.pad(vr, ((0, 0), (0, pad_k), (0, 0)))
+    Lqp, Lkp = Lq + pad_q, Lkv + pad_k
+
+    def kv_index(h, i, j):
+        return ((h // Hq) * Hkv + (h % Hq) // group, j, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel,
+            scale=scale, causal=causal, window=window,
+            q_offset=q_offset, kv_len=Lkv, bq=bq, bk=bk,
+        ),
+        grid=(B * Hq, Lqp // bq, Lkp // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, D), kv_index),
+            pl.BlockSpec((1, bk, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Lqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out[:, :Lq, :].reshape(B, Hq, Lq, D)

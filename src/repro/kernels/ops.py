@@ -1,0 +1,120 @@
+"""Public jit'd wrappers for the kernels package.
+
+Every op dispatches between three implementations:
+
+  * ``pallas``    — compiled Pallas TPU kernel (the deployment path),
+  * ``interpret`` — the same kernel body executed in Pallas interpret mode
+                    (CPU correctness validation; what the tests use),
+  * ``xla``       — the pure-jnp oracle in ``ref.py`` (fast on CPU hosts and
+                    the path the dry-run lowers, so roofline FLOP/byte counts
+                    come from clean HLO dots rather than interpreter loops).
+
+The default is chosen from the backend at call time and can be forced via
+``repro.kernels.ops.set_default_impl(...)`` or ``REPRO_KERNEL_IMPL``.
+This mirrors the paper's heterogeneous dispatch: the same call site runs on
+the accelerator when one is attached and on the host pipeline otherwise.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .conv2d_gemm import conv2d_gemm as _conv_pallas
+from .flash_attention import flash_attention as _attn_pallas
+from .hough_vote import hough_vote as _hough_pallas
+from .ssd_scan import ssd_scan as _ssd_pallas
+from .tiled_matmul import tiled_matmul as _matmul_pallas
+
+_VALID = ("pallas", "interpret", "xla", "stencil")
+_default_impl: Optional[str] = None
+
+
+def set_default_impl(impl: Optional[str]) -> None:
+    if impl is not None and impl not in _VALID:
+        raise ValueError(f"impl must be one of {_VALID}, got {impl!r}")
+    global _default_impl
+    _default_impl = impl
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+    if impl is not None:
+        return impl
+    if _default_impl is not None:
+        return _default_impl
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def tiled_matmul(x, y, *, out_dtype=None, impl=None, **kw):
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return ref.tiled_matmul(x, y, out_dtype=out_dtype)
+    return _matmul_pallas(
+        x, y, out_dtype=out_dtype, interpret=(impl == "interpret"), **kw
+    )
+
+
+def conv2d_gemm(image, masks, *, out_dtype=None, impl=None, **kw):
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return ref.conv2d_gemm(image, masks, out_dtype=out_dtype)
+    if impl == "stencil":   # paper-baseline scalar path (no GEMM rewrite)
+        return ref.conv2d_stencil(image, masks, out_dtype=out_dtype)
+    return _conv_pallas(
+        image, masks, out_dtype=out_dtype, interpret=(impl == "interpret"),
+        **kw,
+    )
+
+
+def hough_vote(xy, weights, trig, *, n_rho, impl=None, **kw):
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return ref.hough_vote(xy, weights, trig, n_rho=n_rho)
+    return _hough_pallas(
+        xy, weights, trig, n_rho=n_rho, interpret=(impl == "interpret"), **kw
+    )
+
+
+# Above this kv length the xla path switches from dense scores to the
+# blockwise-scan form (identical math, O(L*block) memory) so 32k prefill
+# cells lower without materializing L^2 score tensors.
+_XLA_DENSE_MAX_KV = 2048
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    impl=None, **kw):
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        if k.shape[2] > _XLA_DENSE_MAX_KV:
+            return ref.attention_blockwise(
+                q, k, v, causal=causal, window=window, q_offset=q_offset
+            )
+        return ref.attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset
+        )
+    return _attn_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        interpret=(impl == "interpret"), **kw,
+    )
+
+
+# Above this sequence length the xla path uses the chunked segment-sum SSD
+# (one chunk body in HLO) instead of the L-step sequential oracle.
+_XLA_SSD_SEQ_MAX = 64
+
+
+def ssd_scan(x, dt, A, B, C, *, impl=None, **kw):
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        if x.shape[1] > _XLA_SSD_SEQ_MAX:
+            return ref.ssd_scan_chunked(x, dt, A, B, C,
+                                        chunk=kw.get("chunk", 128))
+        return ref.ssd_scan(x, dt, A, B, C)
+    return _ssd_pallas(x, dt, A, B, C, interpret=(impl == "interpret"), **kw)

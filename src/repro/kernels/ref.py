@@ -1,0 +1,334 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: each kernel's tests sweep shapes/dtypes
+and ``assert_allclose`` against these functions.  They are also the "xla"
+execution path used on hosts without a TPU (this container), where XLA's own
+fusions are the fastest option and the HLO they produce is what the dry-run
+roofline reads.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tiled_matmul(x: jax.Array, y: jax.Array, *, out_dtype=None) -> jax.Array:
+    integer = jnp.issubdtype(x.dtype, jnp.integer)
+    acc = jnp.int32 if integer else jnp.float32
+    if out_dtype is None:
+        out_dtype = jnp.int32 if integer else x.dtype
+    return jnp.dot(x, y, preferred_element_type=acc).astype(out_dtype)
+
+
+def conv2d_gemm(image: jax.Array, masks: jax.Array, *, out_dtype=None
+                ) -> jax.Array:
+    """Same-padded 2D correlation; returns (n_masks, H, W)."""
+    H, W = image.shape
+    n_masks, kh, kw = masks.shape
+    integer = jnp.issubdtype(image.dtype, jnp.integer)
+    acc = jnp.int32 if integer else jnp.float32
+    if out_dtype is None:
+        out_dtype = jnp.int32 if integer else image.dtype
+    padded = jnp.pad(image, ((kh // 2, kh // 2), (kw // 2, kw // 2)))
+    # im2col in HBM: (H, W, kh*kw) patch tensor, then one contraction.
+    patches = jnp.stack(
+        [
+            jax.lax.dynamic_slice(padded, (dy, dx), (H, W))
+            for dy in range(kh)
+            for dx in range(kw)
+        ],
+        axis=-1,
+    ).astype(acc)
+    flat = masks.reshape(n_masks, kh * kw).astype(acc)
+    out = jnp.einsum("hwk,mk->mhw", patches, flat)
+    return out.astype(out_dtype)
+
+
+def conv2d_stencil(image: jax.Array, masks: jax.Array, *, out_dtype=None
+                   ) -> jax.Array:
+    """Scalar-core formulation: per-tap shift-multiply-accumulate, no GEMM.
+
+    This is the paper's *baseline* execution (the stencil as written, before
+    the matrix rewrite of Workload 3) — kept as a measurable path so the
+    benchmarks can report the GEMM-offload speedup the way Table 7 does.
+    """
+    H, W = image.shape
+    n_masks, kh, kw = masks.shape
+    integer = jnp.issubdtype(image.dtype, jnp.integer)
+    acc = jnp.int32 if integer else jnp.float32
+    if out_dtype is None:
+        out_dtype = jnp.int32 if integer else image.dtype
+    padded = jnp.pad(image, ((kh // 2, kh // 2), (kw // 2, kw // 2))
+                     ).astype(acc)
+    outs = []
+    for m in range(n_masks):
+        o = jnp.zeros((H, W), acc)
+        for dy in range(kh):
+            for dx in range(kw):
+                o = o + masks[m, dy, dx].astype(acc) * jax.lax.dynamic_slice(
+                    padded, (dy, dx), (H, W)
+                )
+        outs.append(o)
+    return jnp.stack(outs).astype(out_dtype)
+
+
+def hough_vote(xy: jax.Array, weights: jax.Array, trig: jax.Array,
+               *, n_rho: int) -> jax.Array:
+    """Scatter-add vote oracle (the paper's Algorithm 2, vectorized)."""
+    rho = xy.astype(jnp.float32) @ trig.astype(jnp.float32)  # (P, n_theta)
+    idx = jnp.floor(rho).astype(jnp.int32)
+    n_theta = trig.shape[1]
+    votes = jnp.zeros((n_rho, n_theta), jnp.float32)
+    inside = (idx >= 0) & (idx < n_rho)
+    idx = jnp.clip(idx, 0, n_rho - 1)
+    w = jnp.where(inside, weights.astype(jnp.float32)[:, None], 0.0)
+    t = jnp.broadcast_to(jnp.arange(n_theta)[None, :], idx.shape)
+    return votes.at[idx.ravel(), t.ravel()].add(w.ravel())
+
+
+def attention(q, k, v, *, causal=True, window=None, q_offset=0):
+    """Dense softmax attention oracle (GQA via head repeat)."""
+    B, Hq, Lq, D = q.shape
+    Hkv, Lkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    q_pos = q_offset + jnp.arange(Lq)[:, None]
+    kv_pos = jnp.arange(Lkv)[None, :]
+    mask = jnp.ones((Lq, Lkv), bool)
+    if causal:
+        mask &= q_pos >= kv_pos
+    if window is not None:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+import functools as _functools
+
+
+def _abw_mask(q_pos, kv_pos, Lkv, causal, window):
+    mask = kv_pos[None, :] < Lkv
+    if causal:
+        mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+    if window is not None:
+        mask = mask & ((q_pos[:, None] - kv_pos[None, :]) < window)
+    return mask
+
+
+def _abw_fwd_impl(q, k, v, causal, window, q_offset, block):
+    """Forward online-softmax over kv blocks; returns (out, lse)."""
+    B, Hq, Lq, D = q.shape
+    Hkv, Lkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+    pad = (-Lkv) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_blocks = k.shape[2] // block
+    qf = q.astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(Lq)
+
+    ks = jnp.moveaxis(k.reshape(B, Hkv, n_blocks, block, D), 2, 0)
+    vs = jnp.moveaxis(v.reshape(B, Hkv, n_blocks, block, D), 2, 0)
+
+    def step(carry, inp):
+        acc, m, l, j = carry
+        kb, vb = inp
+        kb = jnp.repeat(kb, rep, axis=1).astype(jnp.float32)
+        vb = jnp.repeat(vb, rep, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb) * scale
+        kv_pos = j * block + jnp.arange(block)
+        mask = _abw_mask(q_pos, kv_pos, Lkv, causal, window)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.where(mask[None, None], jnp.exp(s - m_safe), 0.0)
+        corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+        l = corr * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc = corr * acc + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
+        return (acc, m_new, l, j + 1), None
+
+    acc0 = jnp.zeros((B, Hq, Lq, D), jnp.float32)
+    m0 = jnp.full((B, Hq, Lq, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Lq, 1), jnp.float32)
+    (acc, m, l, _), _ = jax.lax.scan(
+        step, (acc0, m0, l0, jnp.int32(0)), (ks, vs)
+    )
+    out = (acc / jnp.where(l == 0.0, 1.0, l)).astype(q.dtype)
+    # lse = m + log l; empty rows get +inf so exp(s - lse) == 0 in bwd
+    lse = jnp.where(
+        l == 0.0, jnp.inf, jnp.where(jnp.isinf(m), 0.0, m) + jnp.log(
+            jnp.where(l == 0.0, 1.0, l))
+    )
+    return out, lse
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _attention_blockwise(q, k, v, causal, window, q_offset, block):
+    out, _ = _abw_fwd_impl(q, k, v, causal, window, q_offset, block)
+    return out
+
+
+def _abw_fwd(q, k, v, causal, window, q_offset, block):
+    out, lse = _abw_fwd_impl(q, k, v, causal, window, q_offset, block)
+    return out, (q, k, v, out, lse)
+
+
+def _abw_bwd(causal, window, q_offset, block, res, do):
+    """Flash-style backward: recompute per-block p from (q, k, v, lse);
+    O(Lq*D + block^2) live memory — the residuals are the layer I/O only.
+    """
+    q, k, v, out, lse = res
+    B, Hq, Lq, D = q.shape
+    Hkv, Lkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+    pad = (-Lkv) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_blocks = k.shape[2] // block
+    qf = q.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(Lq)
+    delta = jnp.sum(dof * out.astype(jnp.float32), axis=-1, keepdims=True)
+
+    ks = jnp.moveaxis(k.reshape(B, Hkv, n_blocks, block, D), 2, 0)
+    vs = jnp.moveaxis(v.reshape(B, Hkv, n_blocks, block, D), 2, 0)
+
+    def step(dq, inp):
+        kb, vb, j = inp
+        kbr = jnp.repeat(kb, rep, axis=1).astype(jnp.float32)
+        vbr = jnp.repeat(vb, rep, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kbr) * scale
+        kv_pos = j * block + jnp.arange(block)
+        mask = _abw_mask(q_pos, kv_pos, Lkv, causal, window)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        p = jnp.exp(s - lse)                       # (B, Hq, Lq, block)
+        p = jnp.where(mask[None, None], p, 0.0)
+        dv_j = jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", dof, vbr)
+        ds = p * (dp - delta) * scale
+        dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds, kbr)
+        dk_j = jnp.einsum("bhqk,bhqd->bhkd", ds, qf)
+        # fold GQA group: sum query heads sharing a kv head
+        dv_j = dv_j.reshape(B, Hkv, rep, block, D).sum(axis=2)
+        dk_j = dk_j.reshape(B, Hkv, rep, block, D).sum(axis=2)
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, Hq, Lq, D), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(
+        step, dq0, (ks, vs, jnp.arange(n_blocks))
+    )
+    dk = jnp.moveaxis(dks, 0, 2).reshape(B, Hkv, n_blocks * block, D)
+    dv = jnp.moveaxis(dvs, 0, 2).reshape(B, Hkv, n_blocks * block, D)
+    if pad:
+        dk = dk[:, :, :Lkv]
+        dv = dv[:, :, :Lkv]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_attention_blockwise.defvjp(_abw_fwd, _abw_bwd)
+
+
+def attention_blockwise(q, k, v, *, causal=True, window=None, q_offset=0,
+                        block=512):
+    """Online-softmax attention as a ``lax.scan`` over kv blocks.
+
+    Mathematically identical to ``attention`` but O(Lq * block) peak memory
+    instead of O(Lq * Lkv), with a flash-style ``custom_vjp`` backward that
+    recomputes block scores from (q, k, v, lse) — the jnp expression of the
+    Pallas flash kernel's dataflow, used by the 4k/32k/500k lowering cells
+    where a dense (Lq, Lkv) score tensor cannot exist.
+    """
+    return _attention_blockwise(q, k, v, causal, window, q_offset, block)
+
+
+def ssd_scan_chunked(x, dt, A, B, C, *, chunk=128):
+    """Chunked SSD in jnp — the same segment-sum matmul form as the Pallas
+    kernel (``ssd_scan.py``), scanned over chunks.  This is the lowering
+    path for train/prefill cells: compact HLO (one chunk body), O(L/Q)
+    sequential depth, no (L, N, P) tensor ever materialized.
+    """
+    x, dt, A, B, C = map(jnp.asarray, (x, dt, A, B, C))
+    batch, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    xdt = (x * dt[..., None]).astype(jnp.float32)        # (b, L, H, P)
+    ldec = (dt * A[None, None, :]).astype(jnp.float32)   # (b, L, H)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ldec = jnp.pad(ldec, ((0, 0), (0, pad), (0, 0)))
+        Bf = jnp.pad(Bf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cf = jnp.pad(Cf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (L + pad) // Q
+
+    def to_chunks(t):
+        return jnp.moveaxis(
+            t.reshape((batch, nc, Q) + t.shape[2:]), 1, 0
+        )
+
+    xs = (to_chunks(xdt), to_chunks(ldec), to_chunks(Bf), to_chunks(Cf))
+
+    def step(h, inp):
+        xc, lc, Bc, Cc = inp              # (b,Q,H,P), (b,Q,H), (b,Q,G,N)
+        Bh = jnp.repeat(Bc, rep, axis=2)  # (b, Q, H, N)
+        Ch = jnp.repeat(Cc, rep, axis=2)
+        cum = jnp.cumsum(lc, axis=1)      # (b, Q, H) inclusive
+        # intra-chunk: masked decay GEMM
+        cb = jnp.einsum("bqhn,bkhn->bhqk", Ch, Bh)
+        seg = jnp.exp(cum[:, :, None] - cum[:, None, :])  # (b,Q,Q,H)->perm
+        seg = jnp.where(
+            jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :],
+            seg.transpose(0, 3, 1, 2), 0.0,
+        )                                  # (b, H, Q, Q) lower-tri decay
+        y = jnp.einsum("bhqk,bkhp->bqhp", cb * seg, xc)
+        # inter-chunk: carried state
+        y = y + jnp.einsum("bqhn,bhnp->bqhp", Ch, h) * \
+            jnp.exp(cum).transpose(0, 1, 2)[..., None]
+        # state update
+        wB = Bh * jnp.exp(cum[:, -1:, :] - cum)[..., None]
+        h = jnp.exp(cum[:, -1])[..., None, None] * h + jnp.einsum(
+            "bqhn,bqhp->bhnp", wB, xc
+        )
+        return h, y
+
+    h0 = jnp.zeros((batch, H, N, P), jnp.float32)
+    hL, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(batch, nc * Q, H, P)[:, :L]
+    return y.astype(x.dtype), hL
+
+
+def ssd_scan(x, dt, A, B, C):
+    """Sequential selective-scan oracle: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t."""
+    x, dt, A, B, C = map(jnp.asarray, (x, dt, A, B, C))
+    batch, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)  # (batch, L, H, N)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, t):
+        a = jnp.exp(dtf[:, t] * A[None, :])  # (batch, H)
+        u = jnp.einsum("bh,bhn,bhp->bhnp", dtf[:, t], Bh[:, t], xf[:, t])
+        h = a[..., None, None] * h + u
+        y = jnp.einsum("bhn,bhnp->bhp", Ch[:, t], h)
+        return h, y
+
+    h0 = jnp.zeros((batch, H, N, P), jnp.float32)
+    h_final, ys = jax.lax.scan(step, h0, jnp.arange(L))
+    y = ys.transpose(1, 0, 2, 3)  # (batch, L, H, P)
+    return y.astype(x.dtype), h_final

@@ -1,0 +1,138 @@
+"""Mamba-2 SSD chunked-scan Pallas kernel.
+
+The flagship application of the paper's insight to sequence models: a linear
+recurrence ``h_t = a_t h_{t-1} + dt_t B_t x_t``, ``y_t = C_t . h_t`` is
+*rewritten as chunked matmuls* (the State Space Duality form), exactly as the
+paper rewrites a stencil as mask x neighbourhood GEMMs:
+
+  * intra-chunk:  ``Y = ((C B^T) * decay_mask) @ (x*dt)``   — two GEMMs
+  * inter-chunk:  state carried through the sequential chunk grid axis in a
+    VMEM scratch accumulator (the output-stationary dataflow again), applied
+    to each chunk with one more GEMM.
+
+Grid ``(batch*heads, n_chunks)``: the TPU grid's minor axis iterates
+sequentially per core, so the ``(N, P)`` state scratch is the recurrence
+carry.  Group-shared B/C (Mamba-2's G groups, analogous to GQA) are folded
+via the BlockSpec ``index_map`` — never materialized per-head.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    xdt_ref, ldec_ref, b_ref, c_ref, y_ref, st_ref, state, *, Q
+):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    xb = xdt_ref[0].astype(jnp.float32)   # (Q, P)   x * dt
+    lc = ldec_ref[...].astype(jnp.float32)  # (1, Q)  log-decay dt*A  (<= 0)
+    Bb = b_ref[0].astype(jnp.float32)     # (Q, N)
+    Cb = c_ref[0].astype(jnp.float32)     # (Q, N)
+
+    cum = jnp.cumsum(lc, axis=1)[0]       # (Q,) inclusive log-decay prefix
+
+    # Intra-chunk: masked decay GEMM  ((C B^T) * tril(exp(cum_i - cum_j))).
+    cb = jax.lax.dot_general(
+        Cb, Bb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    seg = jnp.where(ii >= jj, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    y = jnp.dot(cb * seg, xb, preferred_element_type=jnp.float32)
+
+    # Inter-chunk: apply the carried state h0 -> Y += (C @ h0) * exp(cum).
+    y += jnp.dot(Cb, state[...], preferred_element_type=jnp.float32) \
+        * jnp.exp(cum)[:, None]
+
+    # State update: h_Q = exp(cum_Q) h_0 + sum_j exp(cum_Q - cum_j) B_j (x dt)_j.
+    wB = Bb * jnp.exp(cum[-1] - cum)[:, None]        # (Q, N)
+    state[...] = jnp.exp(cum[-1]) * state[...] + jax.lax.dot_general(
+        wB, xb, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(c_idx == pl.num_programs(1) - 1)
+    def _flush():
+        st_ref[0] = state[...].astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked selective-state-space scan (Mamba-2 SSD).
+
+    Args:
+      x:  (batch, L, H, P) inputs per head.
+      dt: (batch, L, H)    positive step sizes (already softplus+bias).
+      A:  (H,)             negative per-head decay rates.
+      B:  (batch, L, G, N) input projections (G groups, H % G == 0).
+      C:  (batch, L, G, N) output projections.
+    Returns:
+      y:     (batch, L, H, P)
+      state: (batch, H, N, P) final SSM state (prefill -> decode handoff).
+    """
+    batch, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert H % G == 0, (H, G)
+    hpg = H // G
+
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    xdt = (x * dt[..., None]).transpose(0, 2, 1, 3).reshape(batch * H, L, P)
+    ldec = (dt * A[None, None, :]).transpose(0, 2, 1).reshape(batch * H, L)
+    Bm = B.transpose(0, 2, 1, 3).reshape(batch * G, L, N)
+    Cm = C.transpose(0, 2, 1, 3).reshape(batch * G, L, N)
+    if pad:  # zero x-contribution, zero log-decay => identity steps
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0)))
+        ldec = jnp.pad(ldec, ((0, 0), (0, pad)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+
+    def bc_index(h, c):
+        return ((h // H) * G + (h % H) // hpg, c, 0)
+
+    y, state = pl.pallas_call(
+        functools.partial(_ssd_kernel, Q=Q),
+        grid=(batch * H, Lp // Q),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, Q), lambda h, c: (h, c)),
+            pl.BlockSpec((1, Q, N), bc_index),
+            pl.BlockSpec((1, Q, N), bc_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, N, P), lambda h, c: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch * H, Lp, P), x.dtype),
+            jax.ShapeDtypeStruct((batch * H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xdt, ldec, Bm, Cm)
+
+    y = y[:, :L].reshape(batch, H, L, P).transpose(0, 2, 1, 3)
+    state = state.reshape(batch, H, N, P)
+    return y, state

@@ -1,0 +1,122 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, from the compiled SPMD program's own
+counters (no wall clock exists on this host — TPU v5e is the target):
+
+    compute_s    = HLO_FLOPs_per_device / peak_FLOP/s         (197e12 bf16)
+    memory_s     = HLO_bytes_per_device / HBM_bw              (819e9 B/s)
+    collective_s = collective_bytes_per_device / link_bw      (50e9 B/s)
+
+cost_analysis() reports the per-device SPMD module, so all three terms are
+per-device quantities over per-device rates; the bottleneck is the max term.
+MODEL_FLOPS (6*N*D train / 2*N*D inference, N_active for MoE) over HLO
+FLOPs measures how much compiled compute is useful — remat recompute,
+one-hot dispatch, and padding all show up as ratio < 1.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s/link (ICI)
+
+
+def model_flops_per_device(record: dict) -> float:
+    """Useful-model FLOPs per device for this cell."""
+    from repro.configs import SHAPES, get
+    from repro.models import build
+
+    cfg = get(record["arch"])
+    model = build(cfg)
+    n_active = model.active_param_count()
+    shape = SHAPES[record["shape"]]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per request
+        total = 2.0 * n_active * shape.global_batch
+    return total / record["n_chips"]
+
+
+def roofline_terms(record: dict) -> dict:
+    compute_s = record["flops_per_device"] / PEAK_FLOPS
+    # decode cells use the analytic byte count (params+cache read once) —
+    # the CPU backend's bf16 scatter legalization inflates the HLO-derived
+    # number there; train/prefill use the HLO-derived count (dot-dominated,
+    # parses faithfully).  Methodology note in EXPERIMENTS.md §Roofline.
+    mem_bytes = record.get("bytes_analytic_per_device") or 0.0
+    if not mem_bytes:
+        mem_bytes = record["bytes_per_device"]
+    memory_s = mem_bytes / HBM_BW
+    coll_s = record["collectives"]["total_bytes"] / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_per_device(record)
+    return {
+        **terms,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": (
+            mf / record["flops_per_device"]
+            if record["flops_per_device"] else float("nan")
+        ),
+        "step_time_lower_bound_s": max(terms.values()),
+        # MFU against the bound: useful flops / (chips-seconds at peak)
+        "mfu_bound": (
+            mf / PEAK_FLOPS / max(max(terms.values()), 1e-30)
+        ),
+    }
+
+
+def load_records(art_dir: str = "experiments/dryrun") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def table(records: list[dict], mesh: Optional[str] = "pod16x16") -> str:
+    rows = []
+    header = (
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck "
+        "| MODEL/HLO flops | step bound (s) | MFU bound |"
+    )
+    sep = "|" + "---|" * 9
+    for r in records:
+        if mesh and r["mesh"] != mesh:
+            continue
+        t = roofline_terms(r)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} "
+            f"| {t['memory_s']:.3e} | {t['collective_s']:.3e} "
+            f"| **{t['bottleneck']}** | {t['useful_flops_ratio']:.2f} "
+            f"| {t['step_time_lower_bound_s']:.3e} | {t['mfu_bound']:.1%} |"
+        )
+    return "\n".join([header, sep] + rows)
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args(argv)
+    recs = load_records(args.dir)
+    if not recs:
+        print("no artifacts found; run repro.launch.dryrun first")
+        return
+    print(table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

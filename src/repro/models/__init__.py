@@ -1,0 +1,15 @@
+"""Model zoo: the 10 assigned architectures on one JAX substrate.
+
+Every model is a pure-function bundle (init/apply/train/prefill/decode) over
+an explicit parameter pytree with logical sharding axes.  Layer stacks are
+``lax.scan`` over stacked parameters so the lowered HLO stays one-block-sized
+regardless of depth (critical for 88-layer granite on a single-host compile).
+
+The paper's organizing idea — restructure the hot loop into tiled GEMMs
+sized to the systolic array, and keep control-heavy stages on the scalar
+unit — shows up here as: attention/MLP/MoE dispatch as blocked GEMMs
+(MXU), norms/gating/rope elementwise (VPU), and Mamba-1's genuinely serial
+scan left in recurrent form (the Hough-on-core decision, honestly ported).
+"""
+
+from .model_zoo import Model, build  # noqa: F401

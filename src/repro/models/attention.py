@@ -1,0 +1,261 @@
+"""Attention blocks: GQA/MQA/MHA self-attention, sliding-window, cross-attn.
+
+Training/prefill paths route through ``kernels.ops.flash_attention`` (Pallas
+blocked-GEMM attention on TPU, blockwise-scan jnp on host lowering).  Decode
+is a single-query dense product against the cache — one skinny GEMM, mask on
+the VPU — with two cache layouts:
+
+  * linear cache  (max_len slots, write at ``pos``)       — full attention
+  * ring cache    (window slots, write at ``pos % W``)    — SWA long-context,
+    O(window) memory at 500k positions (the sub-quadratic decode the
+    assignment requires for ``long_500k``)
+
+Per-request position vectors are supported everywhere (the serving engine
+batches requests at different depths).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.sharding import constrain
+
+from . import layers
+from .layers import P, apply_rope
+
+
+# --- parameter specs ----------------------------------------------------------
+
+def self_attn_spec(cfg) -> Any:
+    hd = cfg.hd
+    spec = {
+        "wq": P((cfg.d_model, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": P((cfg.d_model, cfg.n_kv_heads, hd),
+                ("embed", "kv_heads", "head_dim")),
+        "wv": P((cfg.d_model, cfg.n_kv_heads, hd),
+                ("embed", "kv_heads", "head_dim")),
+        "wo": P((cfg.n_heads, hd, cfg.d_model), ("heads", "head_dim", "embed"),
+                fan_in_dims=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = P((cfg.n_heads, hd), ("heads", "head_dim"), init="zeros")
+        spec["bk"] = P((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"),
+                       init="zeros")
+        spec["bv"] = P((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"),
+                       init="zeros")
+    return spec
+
+
+def cross_attn_spec(cfg, d_ctx: Optional[int] = None) -> Any:
+    """Cross-attention: queries from x, keys/values from a context stream."""
+    hd = cfg.hd
+    d_ctx = d_ctx or cfg.d_model
+    return {
+        "wq": P((cfg.d_model, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": P((d_ctx, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": P((d_ctx, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": P((cfg.n_heads, hd, cfg.d_model), ("heads", "head_dim", "embed"),
+                fan_in_dims=(0, 1)),
+    }
+
+
+# --- projections ----------------------------------------------------------------
+
+def _proj_q(params, x, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+    return q
+
+
+def _proj_kv(params, x, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if "bk" in params:
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    return k, v
+
+
+def _proj_out(params, attn, x_dtype):
+    return jnp.einsum(
+        "bshk,hkd->bsd", attn, params["wo"].astype(x_dtype)
+    )
+
+
+# --- full-sequence attention (train / prefill) -----------------------------------
+
+def self_attention(params, x, cfg, *, positions=None, causal=True,
+                   rope: bool = True, impl=None) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).  Window comes from cfg.window."""
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q = _proj_q(params, x, cfg)            # (B, S, H, hd)
+    k, v = _proj_kv(params, x, cfg)        # (B, S, Hkv, hd)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # heads carry TP when divisible, else the sequence does (see the
+    # "attn_seq" rule): never let head_dim shard here — contracting a
+    # sharded head_dim psums (B, H, L, L) score tensors.
+    attn_axes = ("batch", "heads", "attn_seq", "head_dim")
+    qt = constrain(q.transpose(0, 2, 1, 3), attn_axes)
+    kt = constrain(k.transpose(0, 2, 1, 3),
+                   ("batch", "kv_heads", None, "head_dim"))
+    vt = constrain(v.transpose(0, 2, 1, 3),
+                   ("batch", "kv_heads", None, "head_dim"))
+    out = ops.flash_attention(
+        qt, kt, vt, causal=causal, window=cfg.window, impl=impl,
+    )
+    out = constrain(out, attn_axes).transpose(0, 2, 1, 3)
+    return _proj_out(params, out, x.dtype)
+
+
+def cross_attention(params, x, ctx_k, ctx_v, cfg) -> jax.Array:
+    """x: (B, S, D); precomputed context K/V: (B, T, Hkv, hd)."""
+    q = _proj_q(params, x, cfg)
+    out = ops.flash_attention(
+        q.transpose(0, 2, 1, 3), ctx_k.transpose(0, 2, 1, 3),
+        ctx_v.transpose(0, 2, 1, 3), causal=False, window=None,
+    ).transpose(0, 2, 1, 3)
+    return _proj_out(params, out, x.dtype)
+
+
+def project_context(params, ctx, cfg):
+    """Precompute cross-attention K/V from a context stream (B, T, d_ctx)."""
+    return _proj_kv(params, ctx, cfg)
+
+
+# --- KV caches --------------------------------------------------------------------
+
+def cache_spec(cfg, batch: int, max_len: int, *, ring: bool = False) -> Any:
+    """Cache entry shapes for one attention layer (stacked by the model).
+
+    ``ring=True`` allocates ``window`` slots (SWA long-context decode).
+    """
+    slots = cfg.window if (ring and cfg.window) else max_len
+    kv = (batch, cfg.n_kv_heads, slots, cfg.hd)
+    axes = ("batch", "kv_heads", "cache_seq", "head_dim")
+    return {
+        "k": jax.ShapeDtypeStruct(kv, cfg.cdtype),
+        "v": jax.ShapeDtypeStruct(kv, cfg.cdtype),
+    }, {"k": axes, "v": axes}
+
+
+def init_cache(cfg, batch: int, max_len: int, *, ring: bool = False) -> Any:
+    spec, _ = cache_spec(cfg, batch, max_len, ring=ring)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def _write_at(cache_kv: jax.Array, new: jax.Array, slot: jax.Array):
+    """Write (B, Hkv, S_new, hd) into cache at per-batch slot offsets."""
+    def one(c, n, s):
+        return jax.lax.dynamic_update_slice(c, n, (0, s, 0))
+    return jax.vmap(one)(cache_kv, new, slot)
+
+
+def prefill_attention(params, x, cfg, cache, *, positions) -> tuple:
+    """Full-sequence causal attention that also fills the cache from slot 0.
+
+    Returns (out, cache).  Cache slots == positions (linear layout; a 32k
+    prefill into a ring cache is done chunkwise by the engine instead).
+    """
+    B, S, D = x.shape
+    q = _proj_q(params, x, cfg)
+    k, v = _proj_kv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    kt = k.transpose(0, 2, 1, 3)   # (B, Hkv, S, hd)
+    vt = v.transpose(0, 2, 1, 3)
+    slots = positions[:, 0]        # requests start at their first position
+    cache = {
+        "k": _write_at(cache["k"], kt.astype(cache["k"].dtype), slots),
+        "v": _write_at(cache["v"], vt.astype(cache["v"].dtype), slots),
+    }
+    attn_axes = ("batch", "heads", "attn_seq", "head_dim")
+    qt = constrain(q.transpose(0, 2, 1, 3), attn_axes)
+    out = ops.flash_attention(
+        qt, constrain(kt, ("batch", "kv_heads", None, "head_dim")),
+        constrain(vt, ("batch", "kv_heads", None, "head_dim")),
+        causal=True, window=cfg.window,
+    )
+    out = constrain(out, attn_axes).transpose(0, 2, 1, 3)
+    return _proj_out(params, out, x.dtype), cache
+
+
+def decode_attention(params, x, cfg, cache, *, pos, ring: bool = False
+                     ) -> tuple:
+    """One-token decode: x (B, 1, D), per-request positions pos (B,).
+
+    Dense masked product against the cache — a (1, hd) x (hd, L) GEMM per
+    head; the mask covers linear ([0, pos]) or ring (last ``window``) layouts.
+    """
+    B, _, D = x.shape
+    L = cache["k"].shape[2]
+    q = _proj_q(params, x, cfg)                       # (B, 1, H, hd)
+    k_new, v_new = _proj_kv(params, x, cfg)           # (B, 1, Hkv, hd)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+
+    slot = (pos % L) if ring else pos
+    cache = {
+        "k": _write_at(cache["k"], k_new.transpose(0, 2, 1, 3)
+                       .astype(cache["k"].dtype), slot),
+        "v": _write_at(cache["v"], v_new.transpose(0, 2, 1, 3)
+                       .astype(cache["v"].dtype), slot),
+    }
+
+    # Cache stays in its storage dtype (bf16): one skinny GEMM per head with
+    # f32 accumulation — no f32 copy of the (L-deep) cache is ever
+    # materialized, so decode reads exactly cache-bytes from HBM.
+    kc = cache["k"]                                   # (B, Hkv, L, hd)
+    vc = cache["v"]
+    rep = cfg.n_heads // cfg.n_kv_heads
+    qg = q[:, 0].astype(kc.dtype).reshape(B, cfg.n_kv_heads, rep, cfg.hd)
+    s = jnp.einsum(
+        "bgrk,bglk->bgrl", qg, kc, preferred_element_type=jnp.float32
+    ) / (cfg.hd ** 0.5)
+
+    idx = jnp.arange(L)
+    if ring:
+        # slot s holds absolute position pos - ((pos - s) mod L), if >= 0
+        kv_pos = pos[:, None] - ((pos[:, None] - idx[None, :]) % L)
+    else:
+        kv_pos = jnp.broadcast_to(idx[None, :], (B, L))
+    mask = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    if cfg.window is not None:
+        mask &= (pos[:, None] - kv_pos) < cfg.window
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(vc.dtype)
+    out = jnp.einsum(
+        "bgrl,bglk->bgrk", p, vc, preferred_element_type=jnp.float32
+    )                                                 # (B, Hkv, rep, hd)
+    out = out.reshape(B, 1, cfg.n_heads, cfg.hd).astype(x.dtype)
+    return _proj_out(params, out, x.dtype), cache
+
+
+def decode_cross_attention(params, x, cfg, ctx_k, ctx_v) -> jax.Array:
+    """Decode-time cross-attention against static context K/V (bf16 reads,
+    f32 accumulation — same traffic discipline as ``decode_attention``).
+
+    ctx_k/ctx_v: cache layout (B, Hkv, T, hd).
+    """
+    B = x.shape[0]
+    q = _proj_q(params, x, cfg)                       # (B, 1, H, hd)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    kc, vc = ctx_k, ctx_v
+    qg = q[:, 0].astype(kc.dtype).reshape(B, cfg.n_kv_heads, rep, cfg.hd)
+    s = jnp.einsum(
+        "bgrk,bglk->bgrl", qg, kc, preferred_element_type=jnp.float32
+    ) / (cfg.hd ** 0.5)
+    p = jax.nn.softmax(s, axis=-1).astype(vc.dtype)
+    out = jnp.einsum(
+        "bgrl,bglk->bgrk", p, vc, preferred_element_type=jnp.float32
+    )
+    out = out.reshape(B, 1, cfg.n_heads, cfg.hd).astype(x.dtype)
+    return _proj_out(params, out, x.dtype)

@@ -1,0 +1,216 @@
+"""Parameter specs and primitive layers shared by every architecture.
+
+Parameters are described declaratively by ``P(shape, axes, ...)`` pytrees so
+that the same tree yields (a) materialized weights for execution, (b)
+``ShapeDtypeStruct`` stand-ins for the no-allocation dry-run, and (c)
+``NamedSharding``s via the logical-axes rule table in ``repro.sharding``.
+No framework magic: a model is a dict of arrays plus pure functions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --- parameter descriptors ---------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Declarative parameter: shape + logical axes + init law."""
+
+    shape: tuple
+    axes: tuple                  # logical axis names, len == len(shape)
+    init: str = "normal"         # normal | zeros | ones | embed | custom
+    scale: Optional[float] = None  # stddev; default 1/sqrt(fan_in) for normal
+    dtype: Any = jnp.float32
+    fan_in_dims: tuple = (0,)    # which dims count as fan-in for default scale
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _leaf_init(rng: jax.Array, p: P) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, p.dtype)
+    if p.init == "embed":
+        scale = p.scale if p.scale is not None else 0.02
+        return (scale * jax.random.normal(rng, p.shape)).astype(p.dtype)
+    # default: normal with 1/sqrt(fan_in)
+    fan_in = int(np.prod([p.shape[d] for d in p.fan_in_dims])) or 1
+    scale = p.scale if p.scale is not None else fan_in ** -0.5
+    return (scale * jax.random.normal(rng, p.shape)).astype(p.dtype)
+
+
+def materialize(rng: jax.Array, specs: Any) -> Any:
+    """Instantiate a P-pytree into arrays (per-leaf folded rngs)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    out = []
+    for i, leaf in enumerate(leaves):
+        out.append(_leaf_init(jax.random.fold_in(rng, i), leaf))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(specs: Any) -> Any:
+    """ShapeDtypeStruct pytree (dry-run stand-in, no allocation)."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), specs,
+        is_leaf=is_spec,
+    )
+
+
+def axes_tree(specs: Any) -> Any:
+    """Logical-axes pytree (leaves are tuples; feed to sharding rules)."""
+    return jax.tree.map(lambda p: p.axes, specs, is_leaf=is_spec)
+
+
+def stack(specs: Any, n: int, axis_name: str = "layers") -> Any:
+    """Prepend a stacked-layer dim to every P in the tree (for lax.scan)."""
+    def bump(p: P) -> P:
+        return dataclasses.replace(
+            p,
+            shape=(n,) + p.shape,
+            axes=(axis_name,) + p.axes,
+            fan_in_dims=tuple(d + 1 for d in p.fan_in_dims),
+        )
+    return jax.tree.map(bump, specs, is_leaf=is_spec)
+
+
+def param_count(specs: Any) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return int(sum(np.prod(p.shape) for p in leaves))
+
+
+# --- primitive layers --------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * w.astype(dt) + b.astype(dt)
+
+
+def norm_spec(d: int, kind: str = "rms") -> Any:
+    if kind == "rms":
+        return {"w": P((d,), ("norm",), init="ones")}
+    return {"w": P((d,), ("norm",), init="ones"),
+            "b": P((d,), ("norm",), init="zeros")}
+
+
+def apply_norm(params: Any, x: jax.Array, kind: str = "rms",
+               eps: float = 1e-5) -> jax.Array:
+    if kind == "rms":
+        return rms_norm(x, params["w"], eps)
+    return layer_norm(x, params["w"], params["b"], eps)
+
+
+# --- rotary embeddings -------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate (..., L, heads, head_dim) by per-position angles.
+
+    positions: (..., L) int32 absolute positions (supports decode offsets and
+    per-request positions in the serving engine).
+    """
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)          # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., L, half)
+    cos = jnp.cos(ang)[..., None, :]                # (..., L, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    """Whisper-style fixed sinusoidal table (n, d)."""
+    half = d // 2
+    freq = np.exp(-np.log(10000.0) * np.arange(half) / max(half - 1, 1))
+    t = np.arange(n)[:, None] * freq[None, :]
+    return np.concatenate([np.sin(t), np.cos(t)], axis=1).astype(np.float32)
+
+
+# --- MLPs ---------------------------------------------------------------------
+
+def mlp_spec(d_model: int, d_ff: int, act: str = "silu") -> Any:
+    if act == "silu":  # SwiGLU: gate + up + down
+        return {
+            "wi_gate": P((d_model, d_ff), ("embed", "mlp")),
+            "wi_up": P((d_model, d_ff), ("embed", "mlp")),
+            "wo": P((d_ff, d_model), ("mlp", "embed")),
+        }
+    return {   # plain 2-layer (whisper: GELU)
+        "wi": P((d_model, d_ff), ("embed", "mlp")),
+        "bi": P((d_ff,), ("mlp",), init="zeros"),
+        "wo": P((d_ff, d_model), ("mlp", "embed")),
+        "bo": P((d_model,), ("embed",), init="zeros"),
+    }
+
+
+def apply_mlp(params: Any, x: jax.Array, act: str = "silu") -> jax.Array:
+    dt = x.dtype
+    if act == "silu":
+        g = jnp.einsum("...d,df->...f", x, params["wi_gate"].astype(dt))
+        u = jnp.einsum("...d,df->...f", x, params["wi_up"].astype(dt))
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("...f,fd->...d", h, params["wo"].astype(dt))
+    h = jnp.einsum("...d,df->...f", x, params["wi"].astype(dt))
+    h = jax.nn.gelu(h + params["bi"].astype(dt), approximate=True)
+    return jnp.einsum(
+        "...f,fd->...d", h, params["wo"].astype(dt)
+    ) + params["bo"].astype(dt)
+
+
+# --- embeddings / logits -------------------------------------------------------
+
+def embed_spec(vocab: int, d_model: int, tie: bool = True) -> Any:
+    spec = {"table": P((vocab, d_model), ("vocab", "embed"), init="embed")}
+    if not tie:
+        spec["unembed"] = P(
+            (d_model, vocab), ("embed", "vocab"), init="embed"
+        )
+    return spec
+
+
+def embed_tokens(params: Any, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0).astype(dtype)
+
+
+def logits_out(params: Any, x: jax.Array) -> jax.Array:
+    """Final projection: bf16 GEMM, f32 accumulation (loss stability at half
+    the bytes of an f32 GEMM)."""
+    if "unembed" in params:
+        w = params["unembed"].astype(x.dtype)
+        return jnp.einsum("...d,dv->...v", x, w,
+                          preferred_element_type=jnp.float32)
+    w = params["table"].astype(x.dtype)              # tied
+    return jnp.einsum("...d,vd->...v", x, w,
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,150 @@
+"""Public model API: ``build(cfg) -> Model`` with init/loss/prefill/decode.
+
+``input_specs`` produces weak-type-correct ``ShapeDtypeStruct`` stand-ins for
+every model input of every assigned workload shape — the dry-run lowers
+against these (no allocation), and real drivers materialize matching arrays.
+Modality frontends are stubs per the assignment: whisper takes precomputed
+frame embeddings, the vision arch takes precomputed patch embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    param_specs: Any                    # P-pytree
+
+    # ---- parameters -------------------------------------------------
+    def init(self, rng: jax.Array) -> Any:
+        return layers.materialize(rng, self.param_specs)
+
+    def abstract_params(self) -> Any:
+        return layers.abstract(self.param_specs)
+
+    def param_axes(self) -> Any:
+        return layers.axes_tree(self.param_specs)
+
+    def param_count(self) -> int:
+        return layers.param_count(self.param_specs)
+
+    def active_param_count(self) -> int:
+        """Per-token active parameters (MoE: top_k of n_experts)."""
+        total = self.param_count()
+        cfg = self.cfg
+        if cfg.moe is None:
+            return total
+        m = cfg.moe
+        expert_p = 3 * cfg.d_model * m.d_ff * m.n_experts * cfg.n_layers
+        active = expert_p * m.top_k // m.n_experts
+        return total - expert_p + active
+
+    # ---- compute ----------------------------------------------------
+    def forward(self, params, batch) -> jax.Array:
+        logits, _ = transformer.forward(params, batch, self.cfg)
+        return logits
+
+    def loss(self, params, batch):
+        return transformer.loss_fn(params, batch, self.cfg)
+
+    def prefill(self, params, batch, cache, *, positions=None):
+        return transformer.prefill(params, batch, self.cfg, cache,
+                                   positions=positions)
+
+    def decode_step(self, params, token, cache, pos, *, ring: bool = False):
+        return transformer.decode_step(params, token, self.cfg, cache, pos,
+                                       ring=ring)
+
+    # ---- caches -----------------------------------------------------
+    def cache_spec(self, batch: int, max_len: int, *, ring: bool = False):
+        return transformer.cache_spec(self.cfg, batch, max_len, ring=ring)
+
+    def init_cache(self, batch: int, max_len: int, *, ring: bool = False):
+        return transformer.init_cache(self.cfg, batch, max_len, ring=ring)
+
+
+def build(cfg) -> Model:
+    return Model(cfg=cfg, param_specs=transformer.param_specs(cfg))
+
+
+# --- input stand-ins ------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_axes(cfg, kind: str) -> Any:
+    """Logical axes for each batch input (feeds the sharding rules)."""
+    if kind == "train":
+        axes = {
+            "tokens": ("batch", "seq"),
+            "targets": ("batch", "seq"),
+        }
+        if cfg.family == "vlm":
+            axes["image_embeds"] = ("batch", "img_seq", None)
+        if cfg.family == "encdec":
+            axes["frames"] = ("batch", "frames", None)
+        return axes
+    if kind == "prefill":
+        axes = {"tokens": ("batch", "seq")}
+        if cfg.family == "vlm":
+            axes["image_embeds"] = ("batch", "img_seq", None)
+        if cfg.family == "encdec":
+            axes["frames"] = ("batch", "frames", None)
+        return axes
+    # decode
+    return {"token": ("batch",), "pos": ("batch",)}
+
+
+def input_specs(cfg, shape) -> Any:
+    """ShapeDtypeStructs for one workload cell.
+
+    * train:   {tokens, targets [, image_embeds | frames]}
+    * prefill: {tokens [, image_embeds | frames]}
+    * decode:  {token, pos}  (cache specs come from Model.cache_spec)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    if kind == "train":
+        out = {
+            "tokens": _sds((B, S), jnp.int32),
+            "targets": _sds((B, S), jnp.int32),
+        }
+    elif kind == "prefill":
+        out = {"tokens": _sds((B, S), jnp.int32)}
+    else:
+        return {
+            "token": _sds((B,), jnp.int32),
+            "pos": _sds((B,), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        out["image_embeds"] = _sds(
+            (B, cfg.n_img_tokens, cfg.d_vision), cfg.compute_dtype
+        )
+    if cfg.family == "encdec":
+        out["frames"] = _sds(
+            (B, cfg.n_frames, cfg.d_model), cfg.compute_dtype
+        )
+    return out
+
+
+def materialize_inputs(rng: jax.Array, cfg, shape) -> Any:
+    """Random concrete inputs matching ``input_specs`` (smoke tests, drivers)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for i, (k, s) in enumerate(sorted(specs.items())):
+        r = jax.random.fold_in(rng, i)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            hi = cfg.vocab if k in ("tokens", "targets", "token") else shape.seq_len
+            out[k] = jax.random.randint(r, s.shape, 0, hi, dtype=s.dtype)
+        else:
+            out[k] = (0.02 * jax.random.normal(r, s.shape)).astype(s.dtype)
+    return out

@@ -1,0 +1,262 @@
+"""State-space blocks: Mamba-1 (selective scan) and Mamba-2 (SSD).
+
+Applicability of the paper's technique (DESIGN.md §Arch-applicability):
+
+  * Mamba-2's recurrence admits the SSD rewrite — *chunked matmuls*, the
+    paper's stencil->GEMM move applied to a recurrence.  Train/prefill route
+    through ``kernels.ops.ssd_scan`` (Pallas on TPU).
+  * Mamba-1's decay varies per (channel, state) pair, so no shared GEMM
+    exists — the honest analogue of the paper keeping Hough on the scalar
+    core.  We still break the serial chain where math allows: a *chunked
+    associative scan* (log-depth within chunks, sequential carry across
+    chunks) instead of a 4096-step recurrence, with the chunk size bounding
+    the materialized (B, Q, d_inner, N) workspace.
+
+Decode for both is an O(1) state update per token.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from .layers import P, rms_norm
+
+
+# --- Mamba-1 -------------------------------------------------------------------
+
+def mamba1_spec(cfg) -> Any:
+    s = cfg.ssm
+    D, Din, N, R = cfg.d_model, s.d_inner, s.d_state, s.dt_rank
+    return {
+        "in_proj": P((D, 2 * Din), ("embed", "inner")),
+        "conv_w": P((s.d_conv, Din), ("conv_k", "inner"), scale=0.5),
+        "conv_b": P((Din,), ("inner",), init="zeros"),
+        "x_proj": P((Din, R + 2 * N), ("inner", "dt_rank")),
+        "dt_w": P((R, Din), ("dt_rank", "inner")),
+        "dt_b": P((Din,), ("inner",), init="zeros"),
+        "A_log": P((Din, N), ("inner", "state"), init="zeros"),
+        "D": P((Din,), ("inner",), init="ones"),
+        "out_proj": P((Din, D), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, *, state=None):
+    """Depthwise causal conv along L.  x: (B, L, C), w: (K, C).
+
+    ``state``: (B, K-1, C) trailing context from the previous segment (decode
+    / chunked prefill); returns (y, new_state).
+    """
+    B, L, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    ctx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = jnp.zeros((B, L, C), x.dtype)
+    for i in range(K):
+        y = y + ctx[:, i : i + L] * w[i].astype(x.dtype)
+    new_state = ctx[:, -(K - 1):] if K > 1 else state
+    return jax.nn.silu(y + b.astype(x.dtype)), new_state
+
+
+def _mamba1_scan(u, dt, A, Bt, Ct, h0, chunk: int):
+    """Chunked associative selective scan.
+
+    u, dt: (B, L, Din); A: (Din, N); Bt, Ct: (B, L, N); h0: (B, Din, N) f32.
+    Returns y (B, L, Din) f32, hL (B, Din, N) f32.
+    """
+    B, L, Din = u.shape
+    N = A.shape[1]
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bt = jnp.pad(Bt, ((0, 0), (0, pad), (0, 0)))
+        Ct = jnp.pad(Ct, ((0, 0), (0, pad), (0, 0)))
+    nc = (L + pad) // Q
+
+    def chunk_step(h, inp):
+        uc, dtc, Bc, Cc = inp                      # (B, Q, ...)
+        la = dtc[..., None] * A                    # (B, Q, Din, N) log-decay
+        a = jnp.exp(la)
+        x_in = (dtc * uc)[..., None] * Bc[:, :, None, :]   # dt*B*x
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b2 + a2 * b1
+
+        a_cum, s = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+        h_all = s + a_cum * h[:, None]             # (B, Q, Din, N)
+        y = jnp.einsum("bqn,bqdn->bqd", Cc, h_all)
+        return h_all[:, -1], y
+
+    xs = tuple(
+        t.reshape(B, nc, Q, -1).swapaxes(0, 1)
+        for t in (u, dt, Bt, Ct)
+    )
+    hL, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, nc * Q, Din)[:, :L]
+    return y, hL
+
+
+def mamba1_forward(params, x, cfg, *, state=None):
+    """x: (B, L, D) -> (y, new_state).  state = {"conv", "ssm"}."""
+    s = cfg.ssm
+    B, L, D = x.shape
+    xz = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(x.dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)              # (B, L, Din)
+
+    conv_state = None if state is None else state["conv"]
+    xi, new_conv = _causal_conv(
+        xi, params["conv_w"], params["conv_b"], state=conv_state
+    )
+
+    proj = jnp.einsum(
+        "bld,dr->blr", xi.astype(jnp.float32),
+        params["x_proj"].astype(jnp.float32),
+    )
+    dt_lr, Bt, Ct = jnp.split(
+        proj, [s.dt_rank, s.dt_rank + s.d_state], axis=-1
+    )
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,rd->bld", dt_lr, params["dt_w"].astype(jnp.float32))
+        + params["dt_b"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    h0 = (
+        jnp.zeros((B, s.d_inner, s.d_state), jnp.float32)
+        if state is None else state["ssm"]
+    )
+    y, hL = _mamba1_scan(
+        xi.astype(jnp.float32), dt, A, Bt, Ct, h0, s.chunk
+    )
+    y = y + params["D"].astype(jnp.float32) * xi.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(x.dtype))
+    return out, {"conv": new_conv, "ssm": hL}
+
+
+def mamba1_decode(params, x, cfg, state):
+    """Single-token step.  x: (B, 1, D)."""
+    return mamba1_forward(params, x, cfg, state=state)
+
+
+def mamba1_state_spec(cfg, batch: int):
+    s = cfg.ssm
+    return (
+        {
+            "conv": jax.ShapeDtypeStruct(
+                (batch, s.d_conv - 1, s.d_inner), cfg.cdtype),
+            "ssm": jax.ShapeDtypeStruct(
+                (batch, s.d_inner, s.d_state), jnp.float32),
+        },
+        {
+            "conv": ("batch", "conv_k", "inner"),
+            "ssm": ("batch", "inner", "state"),
+        },
+    )
+
+
+# --- Mamba-2 -------------------------------------------------------------------
+
+def mamba2_spec(cfg) -> Any:
+    s = cfg.ssm
+    D, Din = cfg.d_model, s.d_inner
+    G, N, H = s.n_groups, s.d_state, s.n_heads
+    conv_dim = Din + 2 * G * N
+    return {
+        "in_proj": P((D, 2 * Din + 2 * G * N + H), ("embed", "inner")),
+        "conv_w": P((s.d_conv, conv_dim), ("conv_k", "inner"), scale=0.5),
+        "conv_b": P((conv_dim,), ("inner",), init="zeros"),
+        "A_log": P((H,), ("inner_heads",), init="zeros"),
+        "dt_b": P((H,), ("inner_heads",), init="zeros"),
+        "D": P((H,), ("inner_heads",), init="ones"),
+        "norm_w": P((Din,), ("inner",), init="ones"),
+        "out_proj": P((Din, D), ("inner", "embed")),
+    }
+
+
+def mamba2_forward(params, x, cfg, *, state=None, impl=None):
+    """x: (B, L, D) -> (y, new_state); SSD chunked-matmul scan."""
+    s = cfg.ssm
+    B, L, D = x.shape
+    G, N, H, Ph = s.n_groups, s.d_state, s.n_heads, s.head_dim
+    Din = s.d_inner
+
+    zxbcdt = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = jnp.split(zxbcdt, [Din, 2 * Din + 2 * G * N], axis=-1)
+
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(
+        xbc, params["conv_w"], params["conv_b"], state=conv_state
+    )
+    xi, Bt, Ct = jnp.split(xbc, [Din, Din + G * N], axis=-1)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_b"].astype(jnp.float32)
+    )                                               # (B, L, H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))   # (H,)
+
+    xh = xi.reshape(B, L, H, Ph)
+    Bg = Bt.reshape(B, L, G, N)
+    Cg = Ct.reshape(B, L, G, N)
+
+    if state is None:
+        y, hL = ops.ssd_scan(
+            xh.astype(jnp.float32), dt, A,
+            Bg.astype(jnp.float32), Cg.astype(jnp.float32), impl=impl,
+        )
+    else:
+        y, hL = _mamba2_step(xh, dt, A, Bg, Cg, state["ssm"])
+    y = y.astype(x.dtype) + (
+        params["D"].astype(x.dtype)[:, None] * xh.astype(x.dtype)
+    ).astype(x.dtype)
+    y = y.reshape(B, L, Din) * jax.nn.silu(z)
+    y = rms_norm(y, params["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(x.dtype))
+    return out, {"conv": new_conv, "ssm": hL}
+
+
+def _mamba2_step(xh, dt, A, Bg, Cg, h):
+    """Single-step (L==1) recurrence: h <- exp(dt A) h + dt B x."""
+    B, L, H, Ph = xh.shape
+    G, N = Bg.shape[2], Bg.shape[3]
+    rep = H // G
+    dt0 = dt[:, 0].astype(jnp.float32)              # (B, H)
+    a = jnp.exp(dt0 * A[None, :])                   # (B, H)
+    Bh = jnp.repeat(Bg[:, 0], rep, axis=1).astype(jnp.float32)  # (B, H, N)
+    Ch = jnp.repeat(Cg[:, 0], rep, axis=1).astype(jnp.float32)
+    u = jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt0, Bh, xh[:, 0].astype(jnp.float32)
+    )
+    h = a[..., None, None] * h + u                  # (B, H, N, P)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h)[:, None]  # (B, 1, H, P)
+    return y, h
+
+
+def mamba2_decode(params, x, cfg, state):
+    return mamba2_forward(params, x, cfg, state=state)
+
+
+def mamba2_state_spec(cfg, batch: int):
+    s = cfg.ssm
+    conv_dim = s.d_inner + 2 * s.n_groups * s.d_state
+    return (
+        {
+            "conv": jax.ShapeDtypeStruct(
+                (batch, s.d_conv - 1, conv_dim), cfg.cdtype),
+            "ssm": jax.ShapeDtypeStruct(
+                (batch, s.n_heads, s.d_state, s.head_dim), jnp.float32),
+        },
+        {
+            "conv": ("batch", "conv_k", "inner"),
+            "ssm": ("batch", "inner_heads", "state", None),
+        },
+    )

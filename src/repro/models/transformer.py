@@ -1,0 +1,568 @@
+"""Generic stacked decoder: one engine, ten architectures.
+
+Every assigned arch is a *pattern* of sub-blocks repeated ``n_super`` times
+and executed as a single ``lax.scan`` over stacked parameters, so the lowered
+HLO is one superblock regardless of depth (88-layer granite compiles as fast
+as 24-layer danube).  Sub-block kinds:
+
+  attn         pre-norm self-attention (+RoPE, causal, optional SWA/bias)
+  mlp          pre-norm dense MLP (SwiGLU or GELU)
+  moe          pre-norm mixture-of-experts FFN
+  cross        pre-norm cross-attention against a context stream (vlm/encdec)
+  mamba1/2     pre-norm SSM block
+  (shared attention for zamba2 is applied inside the scan from *unstacked*
+  closure parameters — tied weights, per-application caches)
+
+Patterns per family:
+  dense   ("attn", "mlp")                        x n_layers
+  moe     ("attn", "moe")                        x n_layers
+  vlm     (("attn","mlp") x (cross_every-1)) + ("cross","mlp")   x n_super
+  encdec  decoder ("attn", "cross", "mlp")       x n_layers  (+ encoder stack)
+  ssm     ("mamba1",)                            x n_layers
+  hybrid  ("mamba2",) x share_every [+ shared attn]  x n_super  (+ tail)
+
+Three modes share the same sub-block code:
+  train    full sequence, no cache
+  prefill  full sequence, fills caches from the request offsets
+  decode   one token per request at per-request positions
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+from . import attention as attn
+from . import layers, moe as moe_lib, ssm as ssm_lib
+from .layers import P
+
+
+# --- patterns -------------------------------------------------------------------
+
+def pattern_for(cfg) -> tuple[tuple[str, ...], int, tuple[str, ...], int]:
+    """(pattern, n_super, tail_pattern, n_tail)."""
+    fam = cfg.family
+    if fam == "dense":
+        return ("attn", "mlp"), cfg.n_layers, (), 0
+    if fam == "moe":
+        return ("attn", "moe"), cfg.n_layers, (), 0
+    if fam == "vlm":
+        k = cfg.cross_every
+        assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+        pat = ("attn", "mlp") * (k - 1) + ("cross", "mlp")
+        return pat, cfg.n_layers // k, (), 0
+    if fam == "encdec":
+        return ("attn", "cross", "mlp"), cfg.n_layers, (), 0
+    if fam == "ssm":
+        kind = cfg.ssm.kind
+        return (kind,), cfg.n_layers, (), 0
+    if fam == "hybrid":
+        k = cfg.share_every
+        n_super, tail = divmod(cfg.n_layers, k)
+        return ("mamba2",) * k, n_super, ("mamba2",) * tail, tail
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def _block_spec(cfg, kind: str) -> Any:
+    d = cfg.d_model
+    if kind == "attn":
+        return {"norm": layers.norm_spec(d, cfg.norm),
+                "attn": attn.self_attn_spec(cfg)}
+    if kind == "mlp":
+        return {"norm": layers.norm_spec(d, cfg.norm),
+                "mlp": layers.mlp_spec(d, cfg.d_ff, cfg.act)}
+    if kind == "moe":
+        return {"norm": layers.norm_spec(d, cfg.norm),
+                "moe": moe_lib.moe_spec(cfg)}
+    if kind == "cross":
+        return {"norm": layers.norm_spec(d, cfg.norm),
+                "attn": attn.cross_attn_spec(cfg)}
+    if kind == "mamba1":
+        return {"norm": layers.norm_spec(d, cfg.norm),
+                "ssm": ssm_lib.mamba1_spec(cfg)}
+    if kind == "mamba2":
+        return {"norm": layers.norm_spec(d, cfg.norm),
+                "ssm": ssm_lib.mamba2_spec(cfg)}
+    raise ValueError(kind)
+
+
+def _shared_attn_cfg(cfg):
+    """Zamba2 shared block: its own head geometry on the same d_model."""
+    return cfg.replace(
+        n_heads=cfg.shared_attn_heads, n_kv_heads=cfg.shared_attn_heads,
+        head_dim=cfg.d_model // cfg.shared_attn_heads, window=None,
+        qkv_bias=False,
+    )
+
+
+def param_specs(cfg) -> Any:
+    pattern, n_super, tail, n_tail = pattern_for(cfg)
+    spec: dict = {
+        "embed": layers.embed_spec(cfg.vocab, cfg.d_model,
+                                   tie=cfg.tie_embeddings),
+        "final_norm": layers.norm_spec(cfg.d_model, cfg.norm),
+        "blocks": layers.stack(
+            {f"{i}_{k}": _block_spec(cfg, k) for i, k in enumerate(pattern)},
+            n_super,
+        ),
+    }
+    if n_tail:
+        spec["tail"] = layers.stack(
+            {f"{i}_{k}": _block_spec(cfg, k) for i, k in enumerate(tail)},
+            n_tail,
+        )
+    if cfg.family == "hybrid":
+        sc = _shared_attn_cfg(cfg)
+        spec["shared"] = {
+            "norm": layers.norm_spec(cfg.d_model, cfg.norm),
+            "attn": attn.self_attn_spec(sc),
+            "mlp_norm": layers.norm_spec(cfg.d_model, cfg.norm),
+            "mlp": layers.mlp_spec(cfg.d_model, cfg.d_ff, cfg.act),
+        }
+    if cfg.family == "vlm":
+        spec["adapter"] = {
+            "w": P((cfg.d_vision, cfg.d_model), ("embed", "embed")),
+            "b": P((cfg.d_model,), ("embed",), init="zeros"),
+        }
+    if cfg.family == "encdec":
+        spec["encoder"] = {
+            "blocks": layers.stack(
+                {"0_attn": _block_spec(cfg, "attn"),
+                 "1_mlp": _block_spec(cfg, "mlp")},
+                cfg.encoder_layers,
+            ),
+            "final_norm": layers.norm_spec(cfg.d_model, cfg.norm),
+        }
+    return spec
+
+
+# --- sub-block application --------------------------------------------------------
+
+def _apply_block(kind: str, bp, x, cfg, ctx, cache):
+    """Returns (x, new_cache_entry)."""
+    mode = ctx["mode"]
+    h = layers.apply_norm(bp["norm"], x, cfg.norm, cfg.norm_eps)
+
+    if kind == "attn":
+        if mode == "train":
+            y = attn.self_attention(
+                bp["attn"], h, cfg, positions=ctx["positions"], causal=True
+            )
+            return x + y, cache
+        if mode == "prefill":
+            y, cache = attn.prefill_attention(
+                bp["attn"], h, cfg, cache, positions=ctx["positions"]
+            )
+            return x + y, cache
+        y, cache = attn.decode_attention(
+            bp["attn"], h, cfg, cache, pos=ctx["pos"], ring=ctx["ring"]
+        )
+        return x + y, cache
+
+    if kind == "mlp":
+        return x + layers.apply_mlp(bp["mlp"], h, cfg.act), cache
+
+    if kind == "moe":
+        y, aux = moe_lib.apply_moe(bp["moe"], h, cfg,
+                                   strategy=ctx["moe_strategy"])
+        ctx["moe_aux"].append(aux)
+        return x + y, cache
+
+    if kind == "cross":
+        if mode == "train":
+            ck, cv = attn.project_context(bp["attn"], ctx["ctx_stream"], cfg)
+            y = attn.cross_attention(bp["attn"], h, ck, cv, cfg)
+            return x + y, cache
+        if mode == "prefill":
+            ck, cv = attn.project_context(bp["attn"], ctx["ctx_stream"], cfg)
+            # cache layout (B, Hkv, T, hd) — matches cache_spec
+            cache = {
+                "ck": ck.transpose(0, 2, 1, 3).astype(cfg.cdtype),
+                "cv": cv.transpose(0, 2, 1, 3).astype(cfg.cdtype),
+            }
+            y = attn.cross_attention(bp["attn"], h, ck, cv, cfg)
+            return x + y, cache
+        y = attn.decode_cross_attention(
+            bp["attn"], h, cfg, cache["ck"], cache["cv"]
+        )
+        return x + y, cache
+
+    if kind in ("mamba1", "mamba2"):
+        fwd = (ssm_lib.mamba1_forward if kind == "mamba1"
+               else ssm_lib.mamba2_forward)
+        state = cache if mode == "decode" else None
+        y, new_state = fwd(bp["ssm"], h, cfg, state=state)
+        if mode == "train":
+            return x + y, cache
+        return x + y, new_state
+
+    raise ValueError(kind)
+
+
+def _apply_shared_attn(sp, x, cfg, ctx, cache):
+    """Zamba2 tied transformer block (attention + MLP), own cache slot."""
+    sc = _shared_attn_cfg(cfg)
+    h = layers.apply_norm(sp["norm"], x, cfg.norm, cfg.norm_eps)
+    mode = ctx["mode"]
+    if mode == "train":
+        y = attn.self_attention(
+            sp["attn"], h, sc, positions=ctx["positions"], causal=True
+        )
+    elif mode == "prefill":
+        y, cache = attn.prefill_attention(
+            sp["attn"], h, sc, cache, positions=ctx["positions"]
+        )
+    else:
+        y, cache = attn.decode_attention(
+            sp["attn"], h, sc, cache, pos=ctx["pos"], ring=False
+        )
+    x = x + y
+    h = layers.apply_norm(sp["mlp_norm"], x, cfg.norm, cfg.norm_eps)
+    return x + layers.apply_mlp(sp["mlp"], h, cfg.act), cache
+
+
+# --- stacks -----------------------------------------------------------------------
+
+def _superblock(cfg, pattern, shared_params):
+    def run(x, bp, cache, ctx):
+        new_cache = dict(cache) if cache is not None else None
+        for i, kind in enumerate(pattern):
+            key = f"{i}_{kind}"
+            ce = None if cache is None else cache.get(key)
+            x, ce = _apply_block(kind, bp[key], x, cfg, ctx, ce)
+            if new_cache is not None and key in new_cache:
+                new_cache[key] = ce
+        if shared_params is not None:
+            ce = None if cache is None else cache.get("shared")
+            x, ce = _apply_shared_attn(shared_params, x, cfg, ctx, ce)
+            if new_cache is not None and "shared" in new_cache:
+                new_cache["shared"] = ce
+        return x, new_cache
+    return run
+
+
+def _scan_stack(cfg, x, stacked_params, stacked_cache, ctx, pattern,
+                shared_params=None):
+    """lax.scan over stacked superblocks; cache scanned alongside params."""
+    run = _superblock(cfg, pattern, shared_params)
+
+    def body(carry, xs):
+        bp, cache = xs
+        # ctx is closed over; moe aux collected via list (traced values are
+        # per-scan-step accumulated below instead)
+        aux_in = ctx["moe_aux"]
+        ctx["moe_aux"] = []
+        y, new_cache = run(carry, bp, cache, ctx)
+        step_aux = sum(ctx["moe_aux"]) if ctx["moe_aux"] else jnp.float32(0)
+        ctx["moe_aux"] = aux_in
+        return y, (new_cache, step_aux)
+
+    if cfg.remat and ctx["mode"] == "train":
+        # Full recompute inside a superblock: the only per-layer residual is
+        # the layer input carried by the scan (B, S, D) in bf16.  Saving
+        # MLP/QK dots (the dots_* policies) costs O(d_ff) per token per
+        # layer — 20+ GiB per device at granite scale — and the *default*
+        # policy additionally saves an f32 convert of the layer input
+        # (observed as a 2x-sized duplicate residual stack in the h2o
+        # dry-run HLO); ``nothing_saveable`` pins the residual set to the
+        # bf16 carry only.
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, (new_cache, aux) = jax.lax.scan(
+        body, x, (stacked_params, stacked_cache)
+    )
+    ctx["moe_aux"].append(jnp.sum(aux))
+    return x, new_cache
+
+
+def _empty_cache_like(stacked_params, n_super):
+    """A scan-compatible empty cache pytree (no cacheable state)."""
+    return {"_": jnp.zeros((n_super, 1), jnp.float32)}
+
+
+# --- cache construction -------------------------------------------------------------
+
+def cache_spec(cfg, batch: int, max_len: int, *, ring: bool = False):
+    """(ShapeDtypeStruct pytree, axes pytree) for the full decode cache."""
+    pattern, n_super, tail, n_tail = pattern_for(cfg)
+
+    def entry(kind, n_ctx):
+        if kind == "attn":
+            return attn.cache_spec(cfg, batch, max_len, ring=ring)
+        if kind == "cross":
+            kv = (batch, cfg.n_kv_heads, n_ctx, cfg.hd)
+            axes = ("batch", "kv_heads", "img_seq", "head_dim")
+            return ({"ck": jax.ShapeDtypeStruct(kv, cfg.cdtype),
+                     "cv": jax.ShapeDtypeStruct(kv, cfg.cdtype)},
+                    {"ck": axes, "cv": axes})
+        if kind == "mamba1":
+            return ssm_lib.mamba1_state_spec(cfg, batch)
+        if kind == "mamba2":
+            return ssm_lib.mamba2_state_spec(cfg, batch)
+        return None
+
+    n_ctx = cfg.n_img_tokens if cfg.family == "vlm" else cfg.n_frames
+
+    def stack_tree(tree, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree
+        )
+
+    def stack_axes(tree, prefix="layers"):
+        return jax.tree.map(
+            lambda a: (prefix,) + a, tree,
+            is_leaf=lambda t: isinstance(t, tuple),
+        )
+
+    def build(pat, n):
+        spec, axes = {}, {}
+        for i, kind in enumerate(pat):
+            e = entry(kind, n_ctx)
+            if e is not None:
+                spec[f"{i}_{kind}"], axes[f"{i}_{kind}"] = e
+        if cfg.family == "hybrid":
+            sc = _shared_attn_cfg(cfg)
+            spec["shared"], axes["shared"] = attn.cache_spec(
+                sc, batch, max_len, ring=False
+            )
+        if not spec:
+            return None, None
+        return stack_tree(spec, n), stack_axes(axes)
+
+    pattern_spec, pattern_axes = build(pattern, n_super)
+    out_spec = {"blocks": pattern_spec}
+    out_axes = {"blocks": pattern_axes}
+    if n_tail:
+        t_spec, t_axes = build(tail, n_tail)
+        # tail has no shared block
+        if t_spec is not None and "shared" in t_spec:
+            del t_spec["shared"], t_axes["shared"]
+        out_spec["tail"], out_axes["tail"] = t_spec, t_axes
+    return out_spec, out_axes
+
+
+def init_cache(cfg, batch: int, max_len: int, *, ring: bool = False):
+    spec, _ = cache_spec(cfg, batch, max_len, ring=ring)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+# --- encoder (whisper) ----------------------------------------------------------------
+
+def encode(params, frames, cfg):
+    """Audio frames (B, T, d_model) -> encoder states.  Frontend is a stub:
+    ``input_specs`` supplies precomputed frame embeddings per assignment."""
+    B, T, D = frames.shape
+    x = frames.astype(cfg.cdtype)
+    x = x + jnp.asarray(
+        layers.sinusoidal_positions(T, D), cfg.cdtype
+    )[None]
+
+    def body(carry, bp):
+        h = layers.apply_norm(bp["0_attn"]["norm"], carry, cfg.norm,
+                              cfg.norm_eps)
+        y = attn.self_attention(
+            bp["0_attn"]["attn"], h, cfg,
+            positions=jnp.broadcast_to(jnp.arange(T), (B, T)),
+            causal=False, rope=False,
+        )
+        x1 = carry + y
+        h = layers.apply_norm(bp["1_mlp"]["norm"], x1, cfg.norm, cfg.norm_eps)
+        return x1 + layers.apply_mlp(bp["1_mlp"]["mlp"], h, cfg.act), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    return layers.apply_norm(
+        params["encoder"]["final_norm"], x, cfg.norm, cfg.norm_eps
+    )
+
+
+# --- top-level passes --------------------------------------------------------------------
+
+def _context_stream(params, cfg, batch_inputs):
+    """The cross-attention context: adapted image embeds / encoder states."""
+    if cfg.family == "vlm":
+        img = batch_inputs["image_embeds"].astype(cfg.cdtype)
+        a = params["adapter"]
+        return jnp.einsum(
+            "btd,de->bte", img, a["w"].astype(cfg.cdtype)
+        ) + a["b"].astype(cfg.cdtype)
+    if cfg.family == "encdec":
+        return encode(params, batch_inputs["frames"], cfg)
+    return None
+
+
+def _make_ctx(cfg, mode, positions=None, pos=None, ctx_stream=None,
+              ring=False, moe_strategy="ep"):
+    return {"mode": mode, "positions": positions, "pos": pos,
+            "ctx_stream": ctx_stream, "ring": ring,
+            "moe_strategy": moe_strategy, "moe_aux": []}
+
+
+def cast_params(params, cfg):
+    """One compute-dtype copy of the parameters, taken *before* the layer
+    scan: FSDP all-gathers then move bf16, not the f32 master — half the
+    weight-gather bytes per microbatch (§Perf follow-up to iteration 2).
+    Leaves used in f32 inside blocks re-upcast locally (norms, A_log, ...).
+    """
+    return jax.tree.map(
+        lambda p: p.astype(cfg.cdtype)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p,
+        params,
+    )
+
+
+def forward_hidden(params, batch_inputs, cfg, *, moe_strategy="ep"):
+    """Final hidden states (B, S, D) before the unembedding + aux metrics.
+
+    Positional encoding: RoPE everywhere a decoder self-attends (including
+    the whisper decoder — divergence from the vendor's learned table, noted
+    in the config); the whisper *encoder* uses its sinusoidal table inside
+    ``encode``.
+    """
+    params = cast_params(params, cfg)
+    tokens = batch_inputs["tokens"]
+    B, S = tokens.shape
+    pattern, n_super, tail, n_tail = pattern_for(cfg)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    x = layers.embed_tokens(params["embed"], tokens, cfg.cdtype)
+    x = constrain(x, ("batch", "seq", "embed_act"))
+
+    ctx = _make_ctx(cfg, "train", positions=positions,
+                    ctx_stream=_context_stream(params, cfg, batch_inputs),
+                    moe_strategy=moe_strategy)
+    shared = params.get("shared")
+    x, _ = _scan_stack(
+        cfg, x, params["blocks"], _empty_cache_like(params["blocks"], n_super),
+        ctx, pattern, shared,
+    )
+    if n_tail:
+        x, _ = _scan_stack(
+            cfg, x, params["tail"], _empty_cache_like(params["tail"], n_tail),
+            ctx, tail, None,
+        )
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    x = constrain(x, ("batch", "seq", "embed_act"))
+    aux = sum(ctx["moe_aux"]) if ctx["moe_aux"] else jnp.float32(0)
+    return x, {"moe_aux": aux}
+
+
+def forward(params, batch_inputs, cfg, *, moe_strategy="ep"):
+    """Teacher-forced logits (B, S, vocab f32) + aux metrics."""
+    x, aux = forward_hidden(params, batch_inputs, cfg,
+                            moe_strategy=moe_strategy)
+    return layers.logits_out(params["embed"], x), aux
+
+
+def prefill(params, batch_inputs, cfg, cache, *, positions=None,
+            moe_strategy="ep"):
+    """Fill caches for a batch of requests; returns (last logits, cache)."""
+    params = cast_params(params, cfg)
+    tokens = batch_inputs["tokens"]
+    B, S = tokens.shape
+    pattern, n_super, tail, n_tail = pattern_for(cfg)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    x = layers.embed_tokens(params["embed"], tokens, cfg.cdtype)
+    x = constrain(x, ("batch", "seq", "embed_act"))
+
+    ctx = _make_ctx(cfg, "prefill", positions=positions,
+                    ctx_stream=_context_stream(params, cfg, batch_inputs),
+                    moe_strategy=moe_strategy)
+    shared = params.get("shared")
+    x, cache_blocks = _scan_stack(
+        cfg, x, params["blocks"], cache["blocks"], ctx, pattern, shared
+    )
+    new_cache = {"blocks": cache_blocks}
+    if n_tail:
+        x, cache_tail = _scan_stack(
+            cfg, x, params["tail"], cache["tail"], ctx, tail, None
+        )
+        new_cache["tail"] = cache_tail
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = layers.logits_out(params["embed"], x[:, -1:])
+    return logits[:, 0], new_cache
+
+
+def decode_step(params, token, cfg, cache, pos, *, ring=False,
+                moe_strategy="ep"):
+    """One token per request.  token: (B,), pos: (B,).  Returns (logits, cache)."""
+    params = cast_params(params, cfg)
+    B = token.shape[0]
+    pattern, n_super, tail, n_tail = pattern_for(cfg)
+
+    x = layers.embed_tokens(params["embed"], token[:, None], cfg.cdtype)
+    x = constrain(x, ("batch", None, None))
+
+    ctx = _make_ctx(cfg, "decode", pos=pos, ring=ring,
+                    moe_strategy=moe_strategy)
+    shared = params.get("shared")
+    x, cache_blocks = _scan_stack(
+        cfg, x, params["blocks"], cache["blocks"], ctx, pattern, shared
+    )
+    new_cache = {"blocks": cache_blocks}
+    if n_tail:
+        x, cache_tail = _scan_stack(
+            cfg, x, params["tail"], cache["tail"], ctx, tail, None
+        )
+        new_cache["tail"] = cache_tail
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = layers.logits_out(params["embed"], x)
+    return logits[:, 0], new_cache
+
+
+# --- loss ------------------------------------------------------------------------------------
+
+def _ce_chunks(S: int, target: int = 8) -> int:
+    """Largest divisor of S that is <= target (keeps seq chunks exact)."""
+    c = min(target, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def loss_fn(params, batch, cfg, *, moe_strategy="ep", aux_coef=0.01,
+            ce_chunks: int = 8):
+    """Next-token CE, computed in sequence chunks.
+
+    The unembedding is the single largest activation of a training step
+    (256x4096x202k f32 logits for llama4-scout would be ~3.3 GB/device);
+    scanning the loss over sequence chunks caps it at chunk/S of that —
+    the memory-roofline trick recorded in EXPERIMENTS.md §Perf.
+    """
+    x, aux = forward_hidden(params, batch, cfg, moe_strategy=moe_strategy)
+    targets = batch["targets"]
+    B, S = targets.shape
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+
+    nc = _ce_chunks(S, ce_chunks)
+    Q = S // nc
+
+    def chunk(carry, inp):
+        xc, tc, mc = inp                        # (B, Q, D), (B, Q), (B, Q)
+        logits = layers.logits_out(params["embed"], xc)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, tc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(nll * mc), None
+
+    xs = (
+        jnp.moveaxis(x.reshape(B, nc, Q, -1), 1, 0),
+        jnp.moveaxis(targets.reshape(B, nc, Q), 1, 0),
+        jnp.moveaxis(mask.reshape(B, nc, Q), 1, 0),
+    )
+    total_nll, _ = jax.lax.scan(chunk, jnp.float32(0), xs)
+    loss = total_nll / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + aux_coef * aux["moe_aux"]
+    return total, {"ce": loss, "moe_aux": aux["moe_aux"]}

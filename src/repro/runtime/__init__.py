@@ -1,0 +1,8 @@
+"""Fault-tolerant runtime: heartbeats, restart supervision, fault injection."""
+
+from .heartbeat import Heartbeat, HeartbeatMonitor  # noqa: F401
+from .supervisor import (  # noqa: F401
+    WorkerFailure,
+    FaultInjector,
+    run_with_restarts,
+)

@@ -1,0 +1,65 @@
+"""Heartbeats: workers report liveness; a monitor flags the silent ones.
+
+At cluster scale this runs over the coordination service; here it is an
+in-process implementation with the same contract, used by the supervisor
+tests to detect a simulated hung worker and trigger the restart policy.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+
+class Heartbeat:
+    """Worker side: beat() regularly (or let the auto-thread do it)."""
+
+    def __init__(self, worker_id: str, registry: dict, *,
+                 interval_s: float = 0.05, auto: bool = False):
+        self.worker_id = worker_id
+        self.registry = registry
+        self.interval_s = interval_s
+        self._stop = threading.Event()
+        self.beat()
+        self._thread = None
+        if auto:
+            self._thread = threading.Thread(target=self._loop, daemon=True)
+            self._thread.start()
+
+    def beat(self):
+        self.registry[self.worker_id] = time.monotonic()
+
+    def _loop(self):
+        while not self._stop.is_set():
+            self.beat()
+            time.sleep(self.interval_s)
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=1.0)
+
+
+class HeartbeatMonitor:
+    """Controller side: which workers missed their deadline?"""
+
+    def __init__(self, registry: dict, *, timeout_s: float = 0.25,
+                 on_dead: Optional[Callable[[str], None]] = None):
+        self.registry = registry
+        self.timeout_s = timeout_s
+        self.on_dead = on_dead
+
+    def dead_workers(self) -> list[str]:
+        now = time.monotonic()
+        dead = [
+            w for w, t in self.registry.items()
+            if now - t > self.timeout_s
+        ]
+        if self.on_dead:
+            for w in dead:
+                self.on_dead(w)
+        return dead
+
+    def all_alive(self) -> bool:
+        return not self.dead_workers()

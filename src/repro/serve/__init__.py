@@ -1,0 +1,12 @@
+"""Serving substrate: batched prefill/decode engine with slot scheduling.
+
+``Engine`` implements continuous batching over a fixed slot grid: requests
+are admitted into free slots (prefill), all active slots decode in lock-step
+(one jitted ``decode_step`` for the whole grid), and finished requests free
+their slots immediately.  Caches are linear, ring (SWA long-context), or
+SSM-state depending on the architecture — the engine is cache-layout
+agnostic because the model owns its cache pytree.
+"""
+
+from .engine import Engine, Request  # noqa: F401
+from .sampling import sample  # noqa: F401

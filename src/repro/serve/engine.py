@@ -1,0 +1,157 @@
+"""Continuous-batching serving engine.
+
+Slot model: a fixed grid of ``n_slots`` request slots shares one batched
+cache pytree.  Admission runs a single-request prefill (bucketed lengths so
+the jit cache stays warm) and scatters the resulting cache slice into the
+grid; decode advances *all* active slots with one jitted step per token
+(inactive slots compute garbage that is masked out — static shapes are the
+price of lock-step batching, the standard trade).  Freed slots readmit from
+the queue immediately: requests at different depths coexist, which is what
+"continuous batching" means.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sampling import sample
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _bucket(n: int, buckets: tuple[int, ...]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class Engine:
+    def __init__(self, model, params, *, n_slots: int = 4,
+                 max_len: int = 256, ring: bool = False,
+                 prefill_buckets: tuple[int, ...] = (16, 32, 64, 128),
+                 seed: int = 0):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.ring = ring
+        self.buckets = prefill_buckets
+        self.cache = model.init_cache(n_slots, max_len, ring=ring)
+        self.slots: list[Optional[Request]] = [None] * n_slots
+        self.pos = np.zeros(n_slots, np.int32)       # next position to write
+        self.last_token = np.zeros(n_slots, np.int32)
+        self.queue: deque[Request] = deque()
+        self.rng = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, t, c, pos: model.decode_step(p, t, c, pos, ring=ring)
+        )
+        self._prefill = jax.jit(
+            lambda p, batch, c, positions: model.prefill(
+                p, batch, c, positions=positions
+            )
+        )
+        self.steps = 0
+
+    # --- request lifecycle -------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def _admit(self) -> None:
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue.popleft()
+            self._prefill_into(slot, req)
+
+    def _prefill_into(self, slot: int, req: Request) -> None:
+        """Admit one request: prefill its first n-1 tokens, then schedule the
+        n-th through the shared decode step.
+
+        Bucketed prefill pads with zeros; causal masking guarantees the pad
+        region ([n-1, L)) is never attended before decode overwrites it slot
+        by slot.  SSM/hybrid caches carry *recurrent* state that pads would
+        corrupt, so those families prefill at exact length (one compile per
+        distinct prompt length — the lock-step grid still amortizes decode).
+        """
+        n = len(req.prompt)
+        exact = self.model.cfg.family in ("ssm", "hybrid")
+        if n > 1:
+            L = (n - 1) if exact else _bucket(n - 1, self.buckets)
+            toks = np.zeros((1, L), np.int32)
+            toks[0, : n - 1] = req.prompt[: n - 1]
+            one_cache = self.model.init_cache(1, self.max_len, ring=self.ring)
+            positions = jnp.arange(L, dtype=jnp.int32)[None]
+            _, one_cache = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, one_cache,
+                positions,
+            )
+            self.cache = jax.tree.map(
+                lambda big, one: jax.lax.dynamic_update_index_in_dim(
+                    big, one[:, 0], slot, 1
+                ),
+                self.cache, one_cache,
+            )
+        self.slots[slot] = req
+        self.pos[slot] = n - 1           # next decode consumes prompt[n-1]
+        self.last_token[slot] = req.prompt[n - 1]
+
+    # --- decode ---------------------------------------------------------
+    def step(self) -> None:
+        """Admit pending requests, then advance every active slot one token."""
+        self._admit()
+        if not any(s is not None for s in self.slots):
+            return
+        toks = jnp.asarray(self.last_token)
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._decode(self.params, toks, self.cache, pos)
+        self.rng, r = jax.random.split(self.rng)
+        temps = [s.temperature if s else 0.0 for s in self.slots]
+        # one sample call per distinct temperature (usually 1)
+        nxt = np.asarray(sample(r, logits, temperature=temps[0]))
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.pos[i] += 1
+            tok = int(nxt[i])
+            self.last_token[i] = tok
+            req.output.append(tok)
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if len(req.output) >= req.max_new_tokens or hit_eos or \
+                    int(self.pos[i]) >= self.max_len - 1:
+                req.done = True
+                self.slots[i] = None
+        self.steps += 1
+
+    def run(self, max_steps: int = 10_000) -> None:
+        """Drive until queue and slots drain."""
+        while (self.queue or any(self.slots)) and max_steps > 0:
+            self.step()
+            max_steps -= 1
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)

@@ -1,0 +1,21 @@
+"""Logical-axis sharding rules (DP/FSDP/TP/EP/SP + the multi-pod axis).
+
+The paper's placement question — *which unit should run this stage* — becomes,
+at framework scale, *which mesh axis should carry this tensor dimension*.
+This package answers it the MaxText way: every parameter and activation is
+annotated with logical axis names, and a rule table maps those names onto
+mesh axes with divisibility-checked fallbacks.
+"""
+
+from .partition import (  # noqa: F401
+    AxisRules,
+    DEFAULT_RULES,
+    DECODE_RULES,
+    SP_RULES,
+    activate,
+    logical_to_spec,
+    named_sharding,
+    shardings_for_tree,
+    constrain,
+    rules_for_shape,
+)

@@ -1,0 +1,16 @@
+"""Training substrate: optimizer, train state, step builders, compression.
+
+The paper's int8 rewrite (Section 4.4) generalizes here to error-feedback
+int8 gradient compression for the cross-pod reduction — the one collective
+that must traverse the slow inter-pod links every step.
+"""
+
+from .optim import AdamWConfig, adamw_init, adamw_update, lr_at  # noqa: F401
+from .state import TrainState, train_state_specs  # noqa: F401
+from .trainer import make_train_step, make_eval_step  # noqa: F401
+from .compression import (  # noqa: F401
+    CompressionState,
+    compress_decompress,
+    compressed_allreduce,
+    init_compression,
+)

@@ -1,0 +1,96 @@
+"""AdamW with warmup+cosine schedule and global-norm clipping.
+
+Self-contained (no optax offline).  Optimizer moments live in a pytree
+shaped exactly like the parameters, so the same logical-axes tree shards
+them (ZeRO-style: FSDP-sharded moments ride the ``data`` axis for free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    floor_ratio: float = 0.1       # final lr = floor_ratio * peak
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(step: jax.Array, cfg: AdamWConfig) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip(
+        (step - cfg.warmup_steps)
+        / max(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.peak_lr * (
+        cfg.floor_ratio
+        + (1 - cfg.floor_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    )
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params: Any) -> Any:
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    grads: Any, opt_state: Any, params: Any, step: jax.Array,
+    cfg: AdamWConfig,
+) -> tuple[Any, Any, dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    t = step.astype(jnp.float32) + 1.0
+    lr = lr_at(step, cfg)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mh = m / c1
+        vh = v / c2
+        new_p = p - lr * (
+            mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p
+        )
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    new = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [n[0] for n in new])
+    new_state = {
+        "m": jax.tree.unflatten(treedef, [n[1] for n in new]),
+        "v": jax.tree.unflatten(treedef, [n[2] for n in new]),
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

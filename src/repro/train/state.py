@@ -1,0 +1,54 @@
+"""TrainState: parameters + optimizer moments + step, with sharding specs."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import AxisRules, DEFAULT_RULES, shardings_for_tree
+
+from .optim import adamw_init
+
+
+class TrainState(NamedTuple):
+    step: jax.Array            # () int32
+    params: Any
+    opt: Any                   # {"m": ..., "v": ...} like params
+    err: Optional[Any] = None  # int8-compression error feedback (or None)
+
+
+def init_train_state(params: Any, *, compression: bool = False) -> TrainState:
+    err = (
+        jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        if compression else None
+    )
+    return TrainState(jnp.zeros((), jnp.int32), params, adamw_init(params),
+                      err)
+
+
+def train_state_specs(model, *, compression: bool = False):
+    """(abstract TrainState, axes TrainState-shaped tree) for the dry-run."""
+    p_abs = model.abstract_params()
+    p_axes = model.param_axes()
+    abs_state = TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        params=p_abs,
+        opt={"m": p_abs, "v": p_abs},
+        err=p_abs if compression else None,
+    )
+    axes_state = TrainState(
+        step=(),
+        params=p_axes,
+        opt={"m": p_axes, "v": p_axes},
+        err=p_axes if compression else None,
+    )
+    return abs_state, axes_state
+
+
+def train_state_shardings(model, mesh, rules: AxisRules = DEFAULT_RULES, *,
+                          compression: bool = False):
+    abs_state, axes_state = train_state_specs(model, compression=compression)
+    shardings = shardings_for_tree(axes_state, abs_state, mesh, rules)
+    return abs_state, shardings

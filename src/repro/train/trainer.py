@@ -1,0 +1,159 @@
+"""Train-step builders: standard pjit path and pod-compressed path.
+
+``make_train_step(model, opt_cfg)`` returns a pure ``(state, batch) ->
+(state, metrics)`` suitable for ``jax.jit`` with NamedSharding in/out specs.
+
+Features:
+  * microbatching — gradient accumulation via ``lax.scan`` over microbatch
+    slices (sequence-preserving, batch-splitting), keeping activation
+    memory at 1/n while the global batch stays the assignment's;
+  * remat is a model-config flag (applied inside the layer scan);
+  * optional int8 error-feedback compression of the cross-pod gradient
+    reduction: the whole grad computation runs inside ``shard_map`` manual
+    over ``pod`` (auto/GSPMD over data+model), so XLA never inserts the f32
+    pod all-reduce — our int8 all_gather is the only DCN traffic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.train import compression as comp
+from repro.train.optim import AdamWConfig, adamw_update
+from repro.train.state import TrainState
+
+
+def _split_microbatches(batch: Any, n: int) -> Any:
+    """(B, ...) -> (n, B/n, ...) per leaf."""
+    def sp(x):
+        B = x.shape[0]
+        assert B % n == 0, (B, n)
+        return x.reshape((n, B // n) + x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def _mean_grads(loss_fn, params, batch, n_micro: int):
+    """Accumulated (loss, metrics, grads) over n_micro microbatches."""
+    if n_micro <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params, batch)
+        return loss, metrics, grads
+
+    micro = _split_microbatches(batch, n_micro)
+
+    def step(carry, mb):
+        acc_loss, acc_metrics, acc_grads = carry
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params, mb)
+        acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+        acc_metrics = jax.tree.map(jnp.add, acc_metrics, metrics)
+        return (acc_loss + loss, acc_metrics, acc_grads), None
+
+    zero_g = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    (loss, metrics, grads), _ = jax.lax.scan(
+        step,
+        (jnp.float32(0), {"ce": jnp.float32(0), "moe_aux": jnp.float32(0)},
+         zero_g),
+        micro,
+    )
+    inv = 1.0 / n_micro
+    return (
+        loss * inv,
+        jax.tree.map(lambda m: m * inv, metrics),
+        jax.tree.map(lambda g: g * inv, grads),
+    )
+
+
+def make_train_step(
+    model,
+    opt_cfg: AdamWConfig,
+    *,
+    n_micro: int = 1,
+) -> Callable[[TrainState, Any], tuple[TrainState, dict]]:
+    """Standard pjit train step (gradient sync left to XLA/GSPMD)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def train_step(state: TrainState, batch: Any):
+        loss, metrics, grads = _mean_grads(
+            loss_fn, state.params, batch, n_micro
+        )
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, state.step, opt_cfg
+        )
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return TrainState(state.step + 1, new_params, new_opt, state.err), \
+            metrics
+
+    return train_step
+
+
+def make_train_step_pod_compressed(
+    model,
+    opt_cfg: AdamWConfig,
+    mesh,
+    *,
+    n_micro: int = 1,
+) -> Callable[[TrainState, Any], tuple[TrainState, dict]]:
+    """Train step whose cross-pod gradient reduction is int8-compressed.
+
+    shard_map manual over ``pod`` / auto over (data, model): each pod
+    computes its local mean gradient under GSPMD, contributes an int8
+    payload, and applies the identical update (params stay pod-replicated).
+    Requires state.err (init_train_state(compression=True)).
+    """
+    assert "pod" in mesh.axis_names, mesh.axis_names
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def per_pod(state: TrainState, batch: Any):
+        loss, metrics, grads = _mean_grads(
+            loss_fn, state.params, batch, n_micro
+        )
+        grads, new_cstate = comp.compressed_allreduce_tree(
+            grads, comp.CompressionState(state.err), "pod"
+        )
+        loss = jax.lax.pmean(loss, "pod")
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"), metrics)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, state.step, opt_cfg
+        )
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return TrainState(
+            state.step + 1, new_params, new_opt, new_cstate.err
+        ), metrics
+
+    # state replicated over pod (params/opt/err identical across pods);
+    # batch split over pod on dim 0.  data/model sharding inside is GSPMD.
+    state_spec = PS()
+    batch_spec = PS("pod")
+    metrics_spec = PS()
+
+    return jax.shard_map(
+        per_pod,
+        mesh=mesh,
+        in_specs=(state_spec, batch_spec),
+        out_specs=(state_spec, metrics_spec),
+        axis_names={"pod"},
+        check_vma=False,
+    )
+
+
+def make_eval_step(model) -> Callable[[Any, Any], dict]:
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return {**metrics, "loss": loss}
+    return eval_step

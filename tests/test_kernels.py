@@ -1,0 +1,168 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.conv2d_gemm import conv2d_gemm
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hough_vote import hough_vote
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.tiled_matmul import tiled_matmul
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (100, 70, 50), (128, 128, 128),
+                                   (33, 129, 65)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_tiled_matmul_float(rng, m, k, n, dtype):
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    y = rng.normal(size=(k, n)).astype(np.float32)
+    x = jnp.asarray(x, dtype)
+    y = jnp.asarray(y, dtype)
+    got = tiled_matmul(x, y, interpret=True, bm=32, bn=32, bk=32)
+    want = ref.tiled_matmul(x, y)
+    tol = 1e-5 if dtype == "float32" else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 32, 16), (64, 48, 32)])
+def test_tiled_matmul_int8(rng, m, k, n):
+    x = rng.integers(-127, 127, (m, k), dtype=np.int8)
+    y = rng.integers(-127, 127, (k, n), dtype=np.int8)
+    got = tiled_matmul(jnp.asarray(x), jnp.asarray(y), interpret=True,
+                       bm=16, bn=16, bk=16)
+    want = ref.tiled_matmul(jnp.asarray(x), jnp.asarray(y))
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("hw", [(16, 24), (37, 52), (64, 64)])
+@pytest.mark.parametrize("masks", [(1, 3, 3), (3, 5, 5), (3, 7, 7)])
+def test_conv2d_gemm_float(rng, hw, masks):
+    H, W = hw
+    img = rng.normal(size=(H, W)).astype(np.float32)
+    m = rng.normal(size=masks).astype(np.float32)
+    got = conv2d_gemm(jnp.asarray(img), jnp.asarray(m), interpret=True, bh=8)
+    want = ref.conv2d_gemm(jnp.asarray(img), jnp.asarray(m))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_gemm_int(rng):
+    img = rng.integers(0, 255, (40, 56)).astype(np.int32)
+    m = rng.integers(-16, 16, (3, 5, 5)).astype(np.int32)
+    got = conv2d_gemm(jnp.asarray(img), jnp.asarray(m), interpret=True, bh=8)
+    want = ref.conv2d_gemm(jnp.asarray(img), jnp.asarray(m))
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n_pix,n_theta,n_rho", [(64, 45, 60), (200, 180, 150)])
+def test_hough_vote(rng, n_pix, n_theta, n_rho):
+    xy = rng.uniform(0, 40, (n_pix, 3)).astype(np.float32)
+    xy[:, 2] = 1.0
+    w = (rng.uniform(size=n_pix) > 0.4).astype(np.float32)
+    trig = rng.uniform(-1, 1, (3, n_theta)).astype(np.float32)
+    trig[2] = n_rho / 2.5
+    got = hough_vote(jnp.asarray(xy), jnp.asarray(w), jnp.asarray(trig),
+                     n_rho=n_rho, interpret=True, br=32, bp=64)
+    want = ref.hough_vote(jnp.asarray(xy), jnp.asarray(w), jnp.asarray(trig),
+                          n_rho=n_rho)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+@pytest.mark.parametrize("gqa", [1, 2, 4])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 24),
+                                           (False, None)])
+def test_flash_attention(rng, gqa, causal, window):
+    B, Hq, L, D = 2, 4, 72, 16
+    q = rng.normal(size=(B, Hq, L, D)).astype(np.float32)
+    k = rng.normal(size=(B, Hq // gqa, L, D)).astype(np.float32)
+    v = rng.normal(size=(B, Hq // gqa, L, D)).astype(np.float32)
+    got = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          causal=causal, window=window, interpret=True,
+                          bq=16, bk=16)
+    want = ref.attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                         causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_decode_offset(rng):
+    """Decode: 1 query at the end of a long kv timeline."""
+    B, H, Lkv, D = 2, 4, 96, 16
+    q = rng.normal(size=(B, H, 1, D)).astype(np.float32)
+    k = rng.normal(size=(B, H, Lkv, D)).astype(np.float32)
+    v = rng.normal(size=(B, H, Lkv, D)).astype(np.float32)
+    got = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          causal=True, q_offset=Lkv - 1, interpret=True,
+                          bq=8, bk=32)
+    want = ref.attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                         causal=True, q_offset=Lkv - 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_attention_blockwise_matches_dense_and_grads(rng):
+    B, Hq, L, D = 2, 4, 50, 16
+    q = jnp.asarray(rng.normal(size=(B, Hq, L, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, 2, L, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, 2, L, D)), jnp.float32)
+
+    out_b = ref.attention_blockwise(q, k, v, causal=True, window=17, block=16)
+    out_d = ref.attention(q, k, v, causal=True, window=17)
+    np.testing.assert_allclose(np.asarray(out_b), np.asarray(out_d),
+                               rtol=1e-4, atol=1e-4)
+
+    def lb(q, k, v):
+        return jnp.sum(jnp.sin(ref.attention_blockwise(
+            q, k, v, causal=True, window=17, block=16) * 3))
+
+    def ld(q, k, v):
+        return jnp.sum(jnp.sin(ref.attention(
+            q, k, v, causal=True, window=17) * 3))
+
+    gb = jax.grad(lb, argnums=(0, 1, 2))(q, k, v)
+    gd = jax.grad(ld, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gb, gd):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("G", [1, 2])
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_ssd_scan(rng, G, chunk):
+    B, L, H, P, N = 2, 80, 4, 16, 8
+    x = (rng.normal(size=(B, L, H, P)) * 0.1).astype(np.float32)
+    dt = rng.uniform(0.01, 0.1, (B, L, H)).astype(np.float32)
+    A = -rng.uniform(0.5, 1.5, (H,)).astype(np.float32)
+    Bm = rng.normal(size=(B, L, G, N)).astype(np.float32)
+    C = rng.normal(size=(B, L, G, N)).astype(np.float32)
+    ya, sa = ssd_scan(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(A),
+                      jnp.asarray(Bm), jnp.asarray(C), chunk=chunk,
+                      interpret=True)
+    yb, sb = ref.ssd_scan(x, dt, A, Bm, C)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yb),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(sa), np.asarray(sb),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_chunked_ref_matches_sequential(rng):
+    B, L, H, P, N, G = 2, 100, 4, 16, 8, 2
+    x = (rng.normal(size=(B, L, H, P)) * 0.1).astype(np.float32)
+    dt = rng.uniform(0.01, 0.1, (B, L, H)).astype(np.float32)
+    A = -rng.uniform(0.5, 1.5, (H,)).astype(np.float32)
+    Bm = rng.normal(size=(B, L, G, N)).astype(np.float32)
+    C = rng.normal(size=(B, L, G, N)).astype(np.float32)
+    yc, hc = ref.ssd_scan_chunked(x, dt, A, Bm, C, chunk=32)
+    ys, hs = ref.ssd_scan(x, dt, A, Bm, C)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(ys),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(hc), np.asarray(hs),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,57 @@
+"""End-to-end system behaviour: the paper's pipeline + the LM framework."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import LineDetector, PipelineConfig
+from repro.data import TokenPipelineConfig, TokenStream
+from repro.data.images import frame_stream
+from repro.models import build
+from repro.serve import Engine, Request
+from repro.train import AdamWConfig, make_train_step
+from repro.train.state import init_train_state
+
+
+def test_video_stream_line_detection():
+    """The paper's deployment loop: a frame stream, lines every frame."""
+    det = LineDetector(PipelineConfig())
+    hits = 0
+    for scene in frame_stream(4, 96, 128, seed=11):
+        res = det.detect(jnp.asarray(scene.image, jnp.float32))
+        if int(res.valid.sum()) > 0:
+            hits += 1
+    assert hits >= 3
+
+
+def test_train_then_serve_roundtrip():
+    """Train a tiny LM on the synthetic pipeline until it learns the ramp
+    structure, then serve it and check generations continue ramps."""
+    cfg = get_smoke("yi-9b").replace(vocab=64)
+    m = build(cfg)
+    stream = TokenStream(TokenPipelineConfig(
+        vocab=64, seq_len=32, global_batch=8, seed=1))
+    state = init_train_state(m.init(jax.random.PRNGKey(0)))
+    step = jax.jit(make_train_step(
+        m, AdamWConfig(peak_lr=5e-3, warmup_steps=10, decay_steps=600)))
+    first = last = None
+    for s in range(200):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch_at(s).items()}
+        state, metrics = step(state, batch)
+        if first is None:
+            first = float(metrics["loss"])
+        last = float(metrics["loss"])
+    assert last < 0.7 * first, (first, last)
+
+    # serve: after a stride-1 ramp prompt, every pattern family in the
+    # training mixture (ramp, motif, noisy copy) predicts 18 next — an
+    # untrained model emits an unrelated constant (argmax collapse).
+    eng = Engine(m, state.params, n_slots=2, max_len=64,
+                 prefill_buckets=(8, 16))
+    req = Request(uid=0, prompt=[10, 11, 12, 13, 14, 15, 16, 17],
+                  max_new_tokens=4)
+    eng.submit(req)
+    eng.run()
+    assert len(req.output) == 4
+    assert req.output[0] == 18, req.output
