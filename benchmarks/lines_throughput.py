@@ -1,0 +1,172 @@
+"""Batched line-detection throughput: frames/s vs batch size, resolution,
+and edge compaction — the perf trajectory of the streaming fast path.
+
+Three measurement families, all on the host's default (xla) kernel path:
+
+  * ``detect_loop``  — the pre-batching baseline: one ``detect`` call per
+    frame (batch=1), dense Hough voting.
+  * ``detect_batch`` — the fast path: a stack of frames as one jitted
+    program, with the edge-compaction pre-pass on and off.
+  * per-stage split  — canny / hough / get_lines microseconds per frame at
+    batch 1 and 8, so regressions can be pinned to a stage.
+
+Emits ``BENCH_lines.json`` in the working directory.
+
+Usage: PYTHONPATH=src python -m benchmarks.lines_throughput [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HoughConfig, LineDetector, PipelineConfig
+from repro.data.images import synthetic_road
+
+from .common import print_table
+
+
+def _frames(n: int, h: int, w: int) -> np.ndarray:
+    return np.stack(
+        [synthetic_road(h, w, seed=100 + i).image for i in range(n)]
+    ).astype(np.float32)
+
+
+def _time_s(fn, *args, warmup: int = 1, repeats: int = 2) -> float:
+    """Mean wall seconds with device sync (paper method)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats
+
+
+def _pipeline(compact: bool) -> PipelineConfig:
+    return PipelineConfig(hough=HoughConfig(compact=compact))
+
+
+def bench_throughput(h: int, w: int, batches, *, quick: bool):
+    """frames/s rows for the loop baseline and the batched fast path."""
+    rows = []
+    imgs = jnp.asarray(_frames(max(batches), h, w))
+
+    det = LineDetector(_pipeline(compact=False))
+    n_loop = 1 if quick else 2
+    sec = _time_s(
+        lambda: [det.detect(f) for f in imgs[:n_loop]][-1],
+        warmup=1, repeats=1 if quick else 2,
+    ) / n_loop
+    rows.append({
+        "height": h, "width": w, "mode": "detect_loop", "batch": 1,
+        "compact": False, "ms_per_frame": sec * 1e3,
+        "frames_per_s": 1.0 / sec,
+    })
+
+    for compact in (True, False):
+        d = LineDetector(_pipeline(compact))
+        for B in batches:
+            if quick and not compact and B > 1:
+                continue  # dense batched cells dominate quick-run time
+            sec = _time_s(
+                d.detect_batch, imgs[:B],
+                warmup=1, repeats=3 if compact else 1,
+            )
+            rows.append({
+                "height": h, "width": w, "mode": "detect_batch",
+                "batch": B, "compact": compact,
+                "ms_per_frame": sec / B * 1e3,
+                "frames_per_s": B / sec,
+            })
+    return rows
+
+
+def bench_stages(h: int, w: int, batches, *, compact: bool):
+    """Per-stage microseconds per frame (canny / hough / get_coordinates),
+    via the pipeline's own paper-Table-3 stage profiler."""
+    rows = []
+    det = LineDetector(_pipeline(compact))
+    for B in batches:
+        imgs = jnp.asarray(_frames(B, h, w))
+        prof = det.detect_stage_profiled(imgs, repeats=3)
+        us = {name: stat.mean_us for name, stat in prof.phases.items()}
+        rows.append({
+            "height": h, "width": w, "batch": B, "compact": compact,
+            "canny_us_per_frame": us["canny"] / B,
+            "hough_us_per_frame": us["hough"] / B,
+            "get_lines_us_per_frame": us["get_coordinates"] / B,
+        })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer repeats; skip dense batched cells")
+    ap.add_argument("--out", default="BENCH_lines.json")
+    args = ap.parse_args()
+
+    resolutions = [(120, 160), (240, 320)]
+    batches = (1, 4, 8)
+
+    throughput, stages = [], []
+    for h, w in resolutions:
+        throughput += bench_throughput(h, w, batches, quick=args.quick)
+        stages += bench_stages(h, w, (1, 8), compact=True)
+        if not args.quick:
+            stages += bench_stages(h, w, (8,), compact=False)
+
+    def fps(mode, B, compact, h, w):
+        for r in throughput:
+            if (r["mode"], r["batch"], r["compact"],
+                    r["height"], r["width"]) == (mode, B, compact, h, w):
+                return r["frames_per_s"]
+        return None
+
+    base = fps("detect_loop", 1, False, 240, 320)
+    fast = fps("detect_batch", 8, True, 240, 320)
+    speedup = (fast / base) if (base and fast) else None
+
+    print_table(
+        "lines throughput (frames/s)",
+        ["HxW", "mode", "batch", "compact", "ms/frame", "frames/s"],
+        [[f"{r['height']}x{r['width']}", r["mode"], r["batch"],
+          r["compact"], f"{r['ms_per_frame']:.1f}",
+          f"{r['frames_per_s']:.2f}"] for r in throughput],
+    )
+    print_table(
+        "per-stage split (us/frame)",
+        ["HxW", "batch", "compact", "canny", "hough", "get_lines"],
+        [[f"{r['height']}x{r['width']}", r["batch"], r["compact"],
+          f"{r['canny_us_per_frame']:.0f}",
+          f"{r['hough_us_per_frame']:.0f}",
+          f"{r['get_lines_us_per_frame']:.0f}"] for r in stages],
+    )
+    if speedup is not None:
+        print(f"\nbatched fast path (batch=8, compact) vs batch=1 detect "
+              f"loop @240x320: {speedup:.1f}x frames/s")
+
+    out = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "impl": "xla (host default)",
+            "quick": args.quick,
+        },
+        "throughput": throughput,
+        "stages": stages,
+        "speedup_batch8_compact_vs_loop_240x320": speedup,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, default=float)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

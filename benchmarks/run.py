@@ -1,10 +1,15 @@
-"""Run every paper-table benchmark; print tables; write CSVs.
+"""Run every paper-table benchmark; print tables; write CSVs + JSON.
+
+The summary dict is also written to ``BENCH_paper_tables.json`` so every
+bench run is machine-readable (the throughput benchmark writes its own
+``BENCH_lines.json`` — see ``benchmarks/lines_throughput.py``).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
 
 from __future__ import annotations
 
+import json
 import sys
 
 from .paper_tables import (
@@ -66,6 +71,11 @@ def main() -> None:
     print(f"  projected total speedup, VPU-only vs MXU-offload on TPU v5e "
           f"(paper: 3.7x vs Rocket): "
           f"{summary['projected_total_speedup']:.2f}x")
+
+    path = "BENCH_paper_tables.json"
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2, default=float)
+    print(f"\nwrote {path}")
 
 
 if __name__ == "__main__":

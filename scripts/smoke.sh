@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Fast CI smoke: quick paper-table benches + the non-slow test suite.
+# The slow marker (pytest.ini) excludes the multi-device subprocess and
+# convergence tests; the full tier-1 sweep is `python -m pytest -q`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m benchmarks.run --quick
+python -m pytest -q -m "not slow"

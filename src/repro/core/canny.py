@@ -18,10 +18,14 @@ Two arithmetic modes (paper Section 4.4):
     magnitude, tan-ratio direction tests) — the paper's float->int rewrite,
     validated for detection parity in tests.
 
-One beyond-paper fusion (EXPERIMENTS.md #Perf): ``fused=True`` composes the
+One beyond-paper fusion (see ROADMAP.md): ``fused=True`` composes the
 Gaussian into the Sobel masks offline (convolution associativity), so one
 im2col GEMM pass with 7x7 masks replaces the two chained 5x5 passes — one
 pass over HBM instead of two, and wider GEMMs that fill the MXU.
+
+Batched fast path: every stage operates on ``(..., H, W)``, so a stack of
+frames ``(N, H, W)`` flows through unchanged — the conv-GEMM kernel lowers
+the batch as a leading grid axis and the elementwise stages broadcast.
 """
 
 from __future__ import annotations
@@ -98,7 +102,10 @@ class CannyConfig:
 
 
 def _gradients(image: jax.Array, cfg: CannyConfig):
-    """Stages 1-2: noise reduction + intensity gradient, all GEMM-form."""
+    """Stages 1-2: noise reduction + intensity gradient, all GEMM-form.
+
+    ``image`` is (..., H, W); conv outputs stack masks on axis -3.
+    """
     if cfg.integer:
         img = image.astype(jnp.int32)
         if cfg.fused:
@@ -107,30 +114,30 @@ def _gradients(image: jax.Array, cfg: CannyConfig):
                 np.round(fused_masks() * GAUSS_NORM).astype(np.int32)
             )
             out = ops.conv2d_gemm(img, m, impl=cfg.impl)
-            nr = out[0] // int(GAUSS_NORM)
-            gx = out[1] // int(GAUSS_NORM)
-            gy = out[2] // int(GAUSS_NORM)
+            nr = out[..., 0, :, :] // int(GAUSS_NORM)
+            gx = out[..., 1, :, :] // int(GAUSS_NORM)
+            gy = out[..., 2, :, :] // int(GAUSS_NORM)
         else:
             g = jnp.asarray(GAUSS_5x5.astype(np.int32))
-            nr = ops.conv2d_gemm(img, g[None], impl=cfg.impl)[0] // int(
-                GAUSS_NORM
-            )
+            nr = ops.conv2d_gemm(img, g[None], impl=cfg.impl)[
+                ..., 0, :, :
+            ] // int(GAUSS_NORM)
             sob = jnp.asarray(
                 np.stack([SOBEL_X, SOBEL_Y]).astype(np.int32)
             )
             gxy = ops.conv2d_gemm(nr, sob, impl=cfg.impl)
-            gx, gy = gxy[0], gxy[1]
+            gx, gy = gxy[..., 0, :, :], gxy[..., 1, :, :]
         return nr, gx, gy
 
     img = image.astype(jnp.float32)
     if cfg.fused:
         out = ops.conv2d_gemm(img, jnp.asarray(fused_masks()), impl=cfg.impl)
-        return out[0], out[1], out[2]
+        return out[..., 0, :, :], out[..., 1, :, :], out[..., 2, :, :]
     g = jnp.asarray(GAUSS_5x5 / GAUSS_NORM)
-    nr = ops.conv2d_gemm(img, g[None], impl=cfg.impl)[0]
+    nr = ops.conv2d_gemm(img, g[None], impl=cfg.impl)[..., 0, :, :]
     sob = jnp.asarray(np.stack([SOBEL_X, SOBEL_Y]))
     gxy = ops.conv2d_gemm(nr, sob, impl=cfg.impl)
-    return nr, gxy[0], gxy[1]
+    return nr, gxy[..., 0, :, :], gxy[..., 1, :, :]
 
 
 def _magnitude_direction(gx, gy, integer: bool):
@@ -156,10 +163,10 @@ def _magnitude_direction(gx, gy, integer: bool):
 
 
 def _shift(x, dy, dx):
-    """Zero-padded spatial shift."""
-    H, W = x.shape
-    pad = jnp.pad(x, ((1, 1), (1, 1)))
-    return jax.lax.dynamic_slice(pad, (1 + dy, 1 + dx), (H, W))
+    """Zero-padded spatial shift over the trailing (H, W) axes."""
+    H, W = x.shape[-2:]
+    pad = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(1, 1), (1, 1)])
+    return pad[..., 1 + dy : 1 + dy + H, 1 + dx : 1 + dx + W]
 
 
 def _nms(mag, dirs):
@@ -186,7 +193,7 @@ def _dilate3(x):
 def _clear_border(x: jax.Array, b: int) -> jax.Array:
     if b <= 0:
         return x
-    H, W = x.shape
+    H, W = x.shape[-2:]
     yy = jnp.arange(H)[:, None]
     xx = jnp.arange(W)[None, :]
     inside = (yy >= b) & (yy < H - b) & (xx >= b) & (xx < W - b)
@@ -194,7 +201,11 @@ def _clear_border(x: jax.Array, b: int) -> jax.Array:
 
 
 def canny(image: jax.Array, cfg: CannyConfig = CannyConfig()) -> jax.Array:
-    """Edge map (H, W) uint8 in {0, 255} (paper's ``image_out``)."""
+    """Edge map (..., H, W) uint8 in {0, 255} (paper's ``image_out``).
+
+    Accepts a single frame (H, W) or a batch (N, H, W) — the batch lowers
+    through the conv kernel as one launch and the VPU stages broadcast.
+    """
     nr, gx, gy = _gradients(image, cfg)
     mag, dirs = _magnitude_direction(gx, gy, cfg.integer)
     mag = _clear_border(mag, cfg.border)

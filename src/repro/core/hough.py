@@ -11,6 +11,11 @@ dependency — see ``kernels/hough_vote.py``.  This module provides:
     Algorithm 2's per-pixel/per-theta loop nest (``lax`` loops, one pixel at
     a time).  This is the measured "no-accelerator baseline" in the
     benchmarks, the analogue of the paper's Rocket/BOOM-only runs.
+
+``hough_transform`` accepts batches (N, H, W) — one batched vote kernel —
+and ``HoughConfig(compact=True, max_edges=...)`` enables the edge-compaction
+pre-pass (vote over <=max_edges compacted edge pixels instead of H*W; exact
+same accumulator as long as the buffer isn't exceeded).
 """
 
 from __future__ import annotations
@@ -32,6 +37,14 @@ class HoughConfig:
     rho_res: float = 1.0        # rho bin width (pixels)
     edge_threshold: float = 250.0  # paper: image[i*width+j] >= 250
     impl: str | None = None
+    # Edge-compaction fast path: prefix-sum-scatter the (typically <5%)
+    # edge pixels into a static buffer so the vote stage iterates
+    # ``max_edges`` pixels instead of H*W.  ``max_edges=None`` defers to
+    # the dispatch default in ``kernels.ops.hough_vote`` (~H*W/16); edges
+    # beyond the buffer are dropped, so leave compaction off when exact
+    # parity on pathologically dense edge maps matters.
+    compact: bool = False
+    max_edges: int | None = None
 
 
 def rho_bins(height: int, width: int, cfg: HoughConfig) -> int:
@@ -44,14 +57,16 @@ def rho_bins(height: int, width: int, cfg: HoughConfig) -> int:
 )
 def hough_transform(edges: jax.Array, cfg: HoughConfig = HoughConfig()
                     ) -> jax.Array:
-    """Vote accumulator (n_rho, n_theta) from an edge map (H, W).
+    """Vote accumulator (..., n_rho, n_theta) from an edge map (..., H, W).
 
     rho = j*cos(theta) + i*sin(theta)  (paper's convention: x=col, y=row),
     shifted by +rho_max and binned at cfg.rho_res.  The shift and the
     resolution are folded into a homogeneous third coordinate so the whole
-    stage is literally one GEMM + histogram.
+    stage is literally one GEMM + histogram.  A batch of edge maps
+    (N, H, W) shares one raster coordinate table and lowers as one batched
+    vote; ``cfg.compact`` routes through the edge-compaction pre-pass.
     """
-    H, W = edges.shape
+    H, W = edges.shape[-2:]
     n_rho = rho_bins(H, W, cfg)
     diag = math.hypot(H, W)
 
@@ -70,10 +85,12 @@ def hough_transform(edges: jax.Array, cfg: HoughConfig = HoughConfig()
     xy = jnp.stack(
         [jj.ravel(), ii.ravel(), jnp.ones(H * W, jnp.int32)], axis=1
     ).astype(jnp.float32)
-    weights = (edges.ravel() >= cfg.edge_threshold).astype(jnp.float32)
+    flat = edges.reshape(edges.shape[:-2] + (H * W,))
+    weights = (flat >= cfg.edge_threshold).astype(jnp.float32)
 
     return ops.hough_vote(
-        xy, weights, jnp.asarray(trig), n_rho=n_rho, impl=cfg.impl
+        xy, weights, jnp.asarray(trig), n_rho=n_rho, impl=cfg.impl,
+        compact=cfg.compact, max_edges=cfg.max_edges,
     )
 
 

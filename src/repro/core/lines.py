@@ -31,27 +31,36 @@ class LinesConfig:
 
 
 def _maxpool(x: jax.Array, k: int) -> jax.Array:
+    ones = (1,) * (x.ndim - 2)
     return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, (k, k), (1, 1), "SAME"
+        x, -jnp.inf, jax.lax.max, ones + (k, k), (1,) * x.ndim, "SAME"
     )
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "height", "width"))
 def get_lines(votes: jax.Array, *, height: int, width: int,
               cfg: LinesConfig = LinesConfig()):
-    """Returns (lines (K, 4) f32 [x1, y1, x2, y2], valid (K,) bool,
-    peaks (K, 2) f32 [rho, theta_rad])."""
-    n_rho, n_theta = votes.shape
+    """Returns (lines (..., K, 4) f32 [x1, y1, x2, y2], valid (..., K) bool,
+    peaks (..., K, 2) f32 [rho, theta_rad]).
+
+    ``votes`` is (n_rho, n_theta) or batched (N, n_rho, n_theta); the peak
+    search, top-k, and endpoint math all broadcast over leading axes.
+    """
+    n_rho, n_theta = votes.shape[-2:]
     diag = math.hypot(height, width)
 
     if cfg.threshold_rel is not None:
-        thresh = cfg.threshold_rel * jnp.max(votes)
+        thresh = cfg.threshold_rel * jnp.max(
+            votes, axis=(-2, -1), keepdims=True
+        )
     else:
         thresh = cfg.threshold
     is_peak = (votes >= thresh) & (
         votes >= _maxpool(votes, cfg.neighborhood)
     )
-    score = jnp.where(is_peak, votes, -1.0).ravel()
+    score = jnp.where(is_peak, votes, -1.0).reshape(
+        votes.shape[:-2] + (n_rho * n_theta,)
+    )
     top, idx = jax.lax.top_k(score, cfg.max_lines)
     valid = top > 0
 
@@ -67,9 +76,9 @@ def get_lines(votes: jax.Array, *, height: int, width: int,
     half = jnp.float32(max(height, width))
     lines = jnp.stack(
         [x0 - half * s, y0 + half * c, x0 + half * s, y0 - half * c],
-        axis=1,
+        axis=-1,
     )
-    peaks = jnp.stack([rho, theta], axis=1)
+    peaks = jnp.stack([rho, theta], axis=-1)
     return lines, valid, peaks
 
 
@@ -80,24 +89,26 @@ def render_lines(image: jax.Array, lines: jax.Array, valid: jax.Array,
     Deliberately implemented — the paper *measures* this phase at 76% of
     wall time and then elides it; we reproduce both the cost and the
     elision (pipeline option ``render_output``).  Distance-to-line test per
-    pixel, vectorized over the static K lines.
+    pixel, vectorized over the static K lines.  Batched when ``image`` is
+    (N, H, W) with lines (N, K, 4) / valid (N, K).
     """
-    H, W = image.shape
+    H, W = image.shape[-2:]
     yy, xx = jnp.meshgrid(
         jnp.arange(H, dtype=jnp.float32),
         jnp.arange(W, dtype=jnp.float32),
         indexing="ij",
     )
-    x1, y1, x2, y2 = lines[:, 0], lines[:, 1], lines[:, 2], lines[:, 3]
+    x1, y1 = lines[..., 0], lines[..., 1]          # (..., K)
+    x2, y2 = lines[..., 2], lines[..., 3]
     dx, dy = x2 - x1, y2 - y1
     norm = jnp.sqrt(dx * dx + dy * dy) + 1e-9
     # |cross product| / norm = distance from pixel to the infinite line
     dist = jnp.abs(
-        dy[:, None, None] * (xx[None] - x1[:, None, None])
-        - dx[:, None, None] * (yy[None] - y1[:, None, None])
-    ) / norm[:, None, None]
+        dy[..., None, None] * (xx - x1[..., None, None])
+        - dx[..., None, None] * (yy - y1[..., None, None])
+    ) / norm[..., None, None]                      # (..., K, H, W)
     hit = jnp.any(
-        (dist <= thickness) & valid[:, None, None], axis=0
+        (dist <= thickness) & valid[..., None, None], axis=-3
     )
     out = jnp.stack([image, image, image], axis=-1).astype(jnp.uint8)
     red = jnp.stack(

@@ -9,13 +9,20 @@ Three phases, exactly the paper's Table 1 decomposition:
 Phase 3 is implemented *and elidable* (``render_output=False``), reproducing
 the paper's 4.2x elision win.  ``detect_profiled`` produces the paper-style
 phase tables; ``benchmarks/`` consumes them.
+
+Batched/streamed fast path: ``detect_batch`` runs a stack of frames
+(N, H, W) through the same three phases as one jitted program (the conv and
+vote kernels lower the batch as a leading grid axis), and ``detect_stream``
+double-buffers a frame iterator — the host decodes/stages batch k+1 while
+the device computes batch k (jax's async dispatch provides the overlap).
+``benchmarks/lines_throughput.py`` measures both.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
+from typing import Iterable, Iterator, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +42,8 @@ class PipelineConfig:
 
 
 class DetectionResult(NamedTuple):
+    # Per-frame shapes; every field gains a leading N axis from
+    # detect_batch (detect_stream splits that axis back off).
     lines: jax.Array      # (K, 4) endpoints
     valid: jax.Array      # (K,) mask
     peaks: jax.Array      # (K, 2) (rho, theta)
@@ -63,7 +72,7 @@ class LineDetector:
     # --- phase 2: line detection --------------------------------------
     @functools.partial(jax.jit, static_argnames=("self",))
     def detect(self, image: jax.Array) -> DetectionResult:
-        H, W = image.shape
+        H, W = image.shape[-2:]
         edges = canny(image, self.cfg.canny)
         votes = hough_transform(edges, self.cfg.hough)
         lines, valid, peaks = get_lines(
@@ -73,6 +82,60 @@ class LineDetector:
         if self.cfg.render_output:
             rendered = render_lines(image.astype(jnp.uint8), lines, valid)
         return DetectionResult(lines, valid, peaks, edges, rendered)
+
+    # --- batched fast path --------------------------------------------
+    def detect_batch(self, images: jax.Array) -> DetectionResult:
+        """Detect lines in a stack of frames (N, H, W) as ONE jitted
+        program: the conv/vote kernels lower the batch as a leading grid
+        axis, so every field of the result gains a leading N axis.
+        Bit-exact with a per-frame ``detect`` loop (the kernels are
+        row/frame-independent)."""
+        assert images.ndim == 3, images.shape
+        return self.detect(images)
+
+    def detect_stream(
+        self, frames: Iterable, *, batch_size: int = 1,
+    ) -> Iterator[DetectionResult]:
+        """Double-buffered streaming detection over a frame iterator.
+
+        Frames are staged into batches of ``batch_size`` and dispatched
+        asynchronously: while the device computes batch k, the host decodes
+        and stages batch k+1 (one batch in flight).  Yields one per-frame
+        DetectionResult per input frame, in order.  A short final batch is
+        dispatched at its own (recompiled) shape.
+        """
+        def dispatch(chunk):
+            imgs = jnp.stack(
+                [self.load(f).astype(jnp.float32) for f in chunk]
+            )
+            return self.detect_batch(imgs)
+
+        def split(res):
+            n = res.lines.shape[0]
+            for i in range(n):
+                yield DetectionResult(
+                    res.lines[i], res.valid[i], res.peaks[i],
+                    res.edges[i],
+                    None if res.rendered is None else res.rendered[i],
+                )
+
+        in_flight = None
+        buf = []
+        for frame in frames:
+            buf.append(frame)
+            if len(buf) == batch_size:
+                res = dispatch(buf)   # async: device starts batch k+1
+                buf = []
+                if in_flight is not None:
+                    yield from split(in_flight)
+                in_flight = res
+        if buf:
+            res = dispatch(buf)
+            if in_flight is not None:
+                yield from split(in_flight)
+            in_flight = res
+        if in_flight is not None:
+            yield from split(in_flight)
 
     # --- full pipeline with paper-style phase profiling ----------------
     def detect_profiled(
@@ -96,9 +159,13 @@ class LineDetector:
     def detect_stage_profiled(
         self, image: jax.Array, repeats: int = 1
     ) -> PhaseProfiler:
-        """Paper Table 3: Canny vs Hough vs get-coordinates split."""
+        """Paper Table 3: Canny vs Hough vs get-coordinates split.
+
+        Accepts a single frame (H, W) or a batch (N, H, W) — the batched
+        split feeds the throughput benchmark's per-stage table.
+        """
         prof = PhaseProfiler()
-        H, W = image.shape
+        H, W = image.shape[-2:]
         canny_j = jax.jit(lambda im: canny(im, self.cfg.canny))
         hough_j = jax.jit(lambda e: hough_transform(e, self.cfg.hough))
         lines_j = jax.jit(

@@ -6,17 +6,25 @@ them to Gemmini.  Its reported limitation is that 5x5 operands underfill the
 16x16 systolic array.
 
 This kernel is the TPU-native fix: im2col happens *inside* VMEM, batching a
-whole row-block of pixels into a tall ``(bh*W, kh*kw)`` patch matrix that is
-multiplied against **all masks at once** — ``(kh*kw, n_masks)`` — in a single
-MXU-friendly GEMM.  The patch matrix never touches HBM, and all three Canny
+whole (bh, bw) pixel tile into a ``(bh, bw, kh*kw)`` patch tensor that is
+multiplied against **all masks at once** — ``(n_masks, kh*kw)`` — in a single
+MXU-friendly GEMM.  The patch tensor never touches HBM, and all three Canny
 masks (Gauss, Sobel-x, Sobel-y) share one im2col pass.
 
-Layout notes:
-  * the (zero-padded) image is kept fully VMEM-resident (a 720p f32 frame is
-    ~3.7 MB, well under the ~16 MB v5e VMEM budget) and the grid walks row
-    blocks with dynamic slices — overlapping stencil windows cannot be
-    expressed as non-overlapping BlockSpec tiles;
-  * output is ``(n_masks, H, W)`` so the lane dimension stays W-major.
+Streaming layout (the batched fast path):
+  * the grid is ``(batch, row_block, col_block)`` — a leading batch axis so a
+    stack of frames lowers as **one** kernel launch, and a 2-D spatial tiling
+    so per-step VMEM is O(bh * bw), independent of the image size.  This
+    removes the old whole-image-VMEM-residency ceiling (a 1080p f32 frame is
+    ~8 MB *before* im2col; a (bh, bw) tile is a few hundred KB).
+  * overlapping stencil windows cannot be expressed as non-overlapping
+    BlockSpec tiles, so the halo is streamed by passing the zero-padded image
+    through **nine index-mapped BlockSpecs** — the 3x3 neighbourhood of the
+    current tile.  The image is padded by one full block on every side so the
+    neighbour index maps stay in range and the boundary halos read zeros
+    (same-padding semantics for free).  Pallas's pipeline machinery
+    double-buffers each neighbour stream from HBM.
+  * output is ``(batch, n_masks, H, W)`` so the lane dimension stays W-major.
 """
 
 from __future__ import annotations
@@ -28,73 +36,115 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _conv_kernel(img_ref, masks_ref, o_ref, *, bh, kh, kw, W, acc_dtype):
-    i = pl.program_id(0)
-    # Slab of rows covering the stencil overlap: (bh + kh - 1, W + kw - 1).
-    slab = img_ref[pl.dslice(i * bh, bh + kh - 1), :]
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _conv_kernel(*refs, bh, bw, kh, kw, acc_dtype):
+    # refs: 9 halo-neighbour image blocks (row-major 3x3), masks, output.
+    nbr, masks_ref, o_ref = refs[:9], refs[9], refs[10]
+    ph, pw = kh // 2, kw // 2
+    blocks = [
+        [nbr[3 * r + c][...].reshape(bh, bw) for c in range(3)]
+        for r in range(3)
+    ]
+
+    # Assemble only the (bh + 2*ph, bw + 2*pw) halo slab around the centre
+    # tile: ph/pw-wide strips of the neighbours, never the full 3x3 tile.
+    def strip(row, rs):
+        left, centre, right = row
+        parts = ([left[rs, bw - pw :]] if pw else []) + [centre[rs, :]] + (
+            [right[rs, : pw]] if pw else []
+        )
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 1)
+
+    pieces = ([strip(blocks[0], slice(bh - ph, bh))] if ph else []) + [
+        strip(blocks[1], slice(None))
+    ] + ([strip(blocks[2], slice(0, ph))] if ph else [])
+    slab = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
     # On-chip im2col: static shifted windows stacked on a new minor axis.
     patches = jnp.stack(
         [
-            jax.lax.dynamic_slice(slab, (dy, dx), (bh, W))
+            slab[dy : dy + bh, dx : dx + bw]
             for dy in range(kh)
             for dx in range(kw)
         ],
         axis=-1,
-    )  # (bh, W, kh*kw)
+    )  # (bh, bw, kh*kw)
     masks = masks_ref[...]  # (n_masks, kh*kw)
-    # One GEMM for every mask: (bh, W, K) x (M, K) -> (M, bh, W).
+    # One GEMM for every mask: (M, K) x (bh, bw, K) -> (M, bh, bw).
     out = jax.lax.dot_general(
         masks.astype(acc_dtype),
         patches.astype(acc_dtype),
         dimension_numbers=(((1,), (2,)), ((), ())),
         preferred_element_type=acc_dtype,
     )
-    o_ref[...] = out.astype(o_ref.dtype)
+    o_ref[...] = out[None].astype(o_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bh", "out_dtype", "interpret")
+    jax.jit, static_argnames=("bh", "bw", "out_dtype", "interpret")
 )
 def conv2d_gemm(
     image: jax.Array,
     masks: jax.Array,
     *,
     bh: int = 8,
+    bw: int = 128,
     out_dtype=None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Same-padded 2D correlation of ``image`` (H, W) with ``masks``
-    (n_masks, kh, kw).  Returns (n_masks, H, W).
+    """Same-padded 2D correlation of ``image`` with ``masks`` (n_masks, kh, kw).
 
-    Integer inputs accumulate in int32 (the paper's integer pipeline);
-    float inputs accumulate in f32.
+    ``image`` may be a single frame ``(H, W)`` -> ``(n_masks, H, W)``, or a
+    batch ``(N, H, W)`` -> ``(N, n_masks, H, W)`` lowered as one kernel with
+    a leading batch grid axis.
+
+    ``bh``/``bw`` tile the rows/columns; non-multiple shapes are padded up
+    and cropped.  Integer inputs accumulate in int32 (the paper's integer
+    pipeline); float inputs accumulate in f32.
     """
-    H, W = image.shape
+    squeeze = image.ndim == 2
+    if squeeze:
+        image = image[None]
+    N, H, W = image.shape
     n_masks, kh, kw = masks.shape
     integer = jnp.issubdtype(image.dtype, jnp.integer)
     acc_dtype = jnp.int32 if integer else jnp.float32
     if out_dtype is None:
         out_dtype = jnp.int32 if integer else image.dtype
 
-    pad_h = (-H) % bh
+    ph, pw = kh // 2, kw // 2
+    bh = max(bh, ph)
+    bw = max(min(bw, _round_up(W, 8)), pw)
+    Hb, Wb = _round_up(H, bh), _round_up(W, bw)
+    # One extra zero block on every side: boundary tiles read their halo
+    # from it, and neighbour index maps (i+di, j+dj) never go out of range.
     padded = jnp.pad(
-        image, ((kh // 2, kh // 2 + pad_h), (kw // 2, kw // 2))
+        image, ((0, 0), (bh, Hb - H + bh), (bw, Wb - W + bw))
     )
-    Hp = H + pad_h
     flat_masks = masks.reshape(n_masks, kh * kw)
 
+    nbr_specs = [
+        pl.BlockSpec(
+            (1, bh, bw),
+            (lambda n, i, j, di=di, dj=dj: (n, i + di, j + dj)),
+        )
+        for di in range(3)
+        for dj in range(3)
+    ]
     out = pl.pallas_call(
         functools.partial(
-            _conv_kernel, bh=bh, kh=kh, kw=kw, W=W, acc_dtype=acc_dtype
+            _conv_kernel, bh=bh, bw=bw, kh=kh, kw=kw, acc_dtype=acc_dtype
         ),
-        grid=(Hp // bh,),
-        in_specs=[
-            # Whole padded image resident per grid step (see module note).
-            pl.BlockSpec(padded.shape, lambda i: (0, 0)),
-            pl.BlockSpec(flat_masks.shape, lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((n_masks, bh, W), lambda i: (0, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_masks, Hp, W), out_dtype),
+        grid=(N, Hb // bh, Wb // bw),
+        in_specs=nbr_specs
+        + [pl.BlockSpec((n_masks, kh * kw), lambda n, i, j: (0, 0))],
+        out_specs=pl.BlockSpec(
+            (1, n_masks, bh, bw), lambda n, i, j: (n, 0, i, j)
+        ),
+        out_shape=jax.ShapeDtypeStruct((N, n_masks, Hb, Wb), out_dtype),
         interpret=interpret,
-    )(padded, flat_masks)
-    return out[:, :H, :]
+    )(*([padded] * 9), flat_masks)
+    out = out[:, :, :H, :W]
+    return out[0] if squeeze else out

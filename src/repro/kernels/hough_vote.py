@@ -7,16 +7,29 @@ cannot hide, so Gemmini gives it nothing (Table 7: 1.07x-1.16x).
 The TPU adaptation dissolves the dependency instead of tolerating it:
 
   1. ``rho[p, theta] = x_p * cos(theta) + y_p * sin(theta)`` for *all* edge
-     pixels and angles at once is a single ``(n_pix, 2) @ (2, n_theta)`` GEMM
+     pixels and angles at once is a single ``(n_pix, C) @ (C, n_theta)`` GEMM
      — MXU work (this is the paper's own conv->matmul move applied to the
      stage the paper gave up on).
   2. The vote histogram becomes a one-hot contraction: for a rho-bin block
-     ``[r0, r0+br)``, ``votes[r, t] = sum_p w_p * [rho_idx[p, t] == r]`` —
-     a masked reduction over pixels, accumulated in a VMEM-resident
-     ``(br, n_theta)`` tile.  No serialized read-modify-write anywhere.
+     ``[r0, r0+br)`` and a theta block ``[t0, t0+bt)``,
+     ``votes[r, t] = sum_p w_p * [rho_idx[p, t] == r]`` — a masked reduction
+     over pixels, accumulated in a VMEM-resident ``(br, bt)`` tile.  No
+     serialized read-modify-write anywhere.  Blocking theta keeps the peak
+     one-hot intermediate at ``(br, bp, bt)`` instead of the old
+     ``(br, bp, n_theta)`` broadcast.
 
-Grid: ``(rho_blocks, pixel_blocks)`` with pixels innermost so the vote tile
-stays output-stationary in scratch (same dataflow as ``tiled_matmul``).
+Grid: ``(batch, rho_blocks, theta_blocks, pixel_blocks)`` with pixels
+innermost so the vote tile stays output-stationary in scratch (same dataflow
+as ``tiled_matmul``).  The leading batch axis lowers a stack of frames as
+one kernel; shared pixel coordinates (the uncompacted dense raster) are
+broadcast through the index map instead of being materialized per frame.
+
+Edge compaction (the streaming fast path): typically <5% of pixels are edge
+pixels, so ``compact_edges`` prefix-sum-scatters the edge coordinates into a
+static ``(max_edges, C)`` buffer first and the vote grid iterates compacted
+pixels only — the pixel-block axis is bounded by ``max_edges``, not H*W.
+The uncompacted dense path stays available (``ops.hough_vote(compact=...)``)
+and both are mirrored in ``ref.py``.
 """
 
 from __future__ import annotations
@@ -29,34 +42,70 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _vote_kernel(xy_ref, w_ref, trig_ref, o_ref, acc_ref, *, br):
-    r_blk = pl.program_id(0)
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
 
-    @pl.when(pl.program_id(1) == 0)
+
+def _compact_one(xy: jax.Array, w: jax.Array, max_edges: int):
+    """Prefix-sum scatter: edge pixel k lands in compacted row k."""
+    mask = w > 0
+    pos = jnp.where(mask, jnp.cumsum(mask) - 1, max_edges)
+    cxy = (
+        jnp.zeros((max_edges, xy.shape[-1]), xy.dtype)
+        .at[pos]
+        .set(xy, mode="drop")
+    )
+    cw = jnp.zeros((max_edges,), w.dtype).at[pos].set(w, mode="drop")
+    return cxy, cw
+
+
+@functools.partial(jax.jit, static_argnames=("max_edges",))
+def compact_edges(xy: jax.Array, weights: jax.Array, *, max_edges: int):
+    """Compact edge pixels (weight > 0) to the front of a static buffer.
+
+    Args:
+      xy:      (n_pix, C) coordinates, or (N, n_pix, C) per-frame.
+      weights: (n_pix,) or (N, n_pix) vote weights; 0 marks non-edges.
+      max_edges: static output length.  Edges beyond it are dropped
+        (out-of-bounds scatter, mode="drop") — size it for the workload.
+
+    Returns (cxy, cw) of shape (..., max_edges, C) / (..., max_edges); rows
+    past the actual edge count are zero (weight 0 => no vote cast).
+    """
+    if weights.ndim == 1:
+        return _compact_one(xy, weights, max_edges)
+    if xy.ndim == 2:  # shared raster coordinates, per-frame weights
+        return jax.vmap(lambda w: _compact_one(xy, w, max_edges))(weights)
+    return jax.vmap(lambda x, w: _compact_one(x, w, max_edges))(xy, weights)
+
+
+def _vote_kernel(xy_ref, w_ref, trig_ref, o_ref, acc_ref, *, br):
+    @pl.when(pl.program_id(3) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    xy = xy_ref[...]          # (bp, 2) pixel coordinates (x, y)
-    w = w_ref[...]            # (bp, 1) edge weights (0 => not an edge pixel)
-    trig = trig_ref[...]      # (2, n_theta) stacked cos/sin rows
+    bp, C = xy_ref.shape[-2:]
+    xy = xy_ref[...].reshape(bp, C)      # (bp, C) pixel coordinates
+    w = w_ref[...].reshape(bp, 1)        # (bp, 1) edge weights (0 => skip)
+    trig = trig_ref[...]                 # (C, bt) cos/sin(/offset) columns
 
-    # Stage 1: the rho GEMM.
-    rho = jnp.dot(xy, trig, preferred_element_type=jnp.float32)  # (bp, n_t)
+    # Stage 1: the rho GEMM for this theta block.
+    rho = jnp.dot(xy, trig, preferred_element_type=jnp.float32)  # (bp, bt)
     rho_idx = jnp.floor(rho).astype(jnp.int32)  # bin index (pre-offset)
 
     # Stage 2: one-hot contraction against this rho block.
-    r0 = r_blk * br
+    r0 = pl.program_id(1) * br
     bins = r0 + jax.lax.broadcasted_iota(jnp.int32, (br, 1, 1), 0)
-    onehot = (rho_idx[None, :, :] == bins).astype(jnp.float32)  # (br, bp, n_t)
-    acc_ref[...] += jnp.sum(onehot * w[None, :, :], axis=1)     # (br, n_t)
+    onehot = (rho_idx[None, :, :] == bins).astype(jnp.float32)  # (br, bp, bt)
+    acc_ref[...] += jnp.sum(onehot * w[None, :, :], axis=1)     # (br, bt)
 
-    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[...] = acc_ref[...][None].astype(o_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_rho", "br", "bp", "interpret")
+    jax.jit, static_argnames=("n_rho", "br", "bp", "bt", "interpret")
 )
 def hough_vote(
     xy: jax.Array,
@@ -65,7 +114,8 @@ def hough_vote(
     *,
     n_rho: int,
     br: int = 128,
-    bp: int = 512,
+    bp: int = 256,
+    bt: int = 64,
     interpret: bool = False,
 ) -> jax.Array:
     """Accumulate Hough votes.
@@ -74,38 +124,64 @@ def hough_vote(
       xy:      (n_pix, C) f32 pixel coordinates — C=2 for raw (x, y), or C=3
                homogeneous ``(x, y, 1)`` so the rho offset/resolution folds
                into the GEMM and ``floor(xy @ trig)`` lands in ``[0, n_rho)``.
+               May be (N, n_pix, C) for per-frame (e.g. compacted) pixel
+               sets; a single (n_pix, C) set is shared across a weight batch.
       weights: (n_pix,) f32 vote weight per pixel (0 for non-edge pixels —
-               this is how variable-length edge sets stay statically shaped).
-      trig:    (C, n_theta) f32, rows ``cos(theta)`` / ``sin(theta)`` (and the
-               offset row for C=3) already divided by the rho bin resolution.
+               this is how variable-length edge sets stay statically shaped),
+               or (N, n_pix) for a batch of frames lowered as one kernel.
+      trig:    (C, n_theta) f32, rows ``cos(theta)`` / ``sin(theta)`` (and
+               the offset row for C=3) already divided by the rho resolution.
       n_rho:   number of rho bins.
+      br/bp/bt: rho-bin / pixel / theta block sizes.
 
-    Returns: (n_rho, n_theta) f32 vote accumulator (paper's ``accumulators``).
+    Returns: (n_rho, n_theta) f32 vote accumulator (paper's
+    ``accumulators``), with a leading N axis when ``weights`` is batched.
     """
-    n_pix, C = xy.shape
-    assert C == trig.shape[0], (xy.shape, trig.shape)
+    squeeze = weights.ndim == 1
+    if squeeze:
+        weights = weights[None]
+        if xy.ndim == 3:
+            xy = xy[0]
+    N, n_pix = weights.shape
+    shared_xy = xy.ndim == 2
+    C = xy.shape[-1]
+    assert xy.shape[-2] == n_pix and C == trig.shape[0], (
+        xy.shape, weights.shape, trig.shape,
+    )
     n_theta = trig.shape[1]
 
-    pad_p = (-n_pix) % bp
-    if pad_p:
-        xy = jnp.pad(xy, ((0, pad_p), (0, 0)))
-        weights = jnp.pad(weights, (0, pad_p))
-    pad_r = (-n_rho) % br
-    N_rho = n_rho + pad_r
-    P = xy.shape[0]
-    w2d = weights[:, None].astype(jnp.float32)
+    bp = min(bp, _round_up(n_pix, 8))
+    br = min(br, _round_up(n_rho, 8))
+    bt = min(bt, n_theta)
+    P = _round_up(n_pix, bp)
+    N_rho = _round_up(n_rho, br)
+    N_theta = _round_up(n_theta, bt)
+    if P != n_pix:
+        pad = [(0, 0)] * (xy.ndim - 2) + [(0, P - n_pix), (0, 0)]
+        xy = jnp.pad(xy, pad)
+        weights = jnp.pad(weights, ((0, 0), (0, P - n_pix)))
+    trig = jnp.pad(trig, ((0, 0), (0, N_theta - n_theta)))
+    w3 = weights[:, :, None].astype(jnp.float32)
+
+    if shared_xy:
+        xy_spec = pl.BlockSpec((bp, C), lambda n, r, t, p: (p, 0))
+    else:
+        xy_spec = pl.BlockSpec((1, bp, C), lambda n, r, t, p: (n, p, 0))
 
     out = pl.pallas_call(
         functools.partial(_vote_kernel, br=br),
-        grid=(N_rho // br, P // bp),
+        grid=(N, N_rho // br, N_theta // bt, P // bp),
         in_specs=[
-            pl.BlockSpec((bp, C), lambda r, p: (p, 0)),
-            pl.BlockSpec((bp, 1), lambda r, p: (p, 0)),
-            pl.BlockSpec((C, n_theta), lambda r, p: (0, 0)),
+            xy_spec,
+            pl.BlockSpec((1, bp, 1), lambda n, r, t, p: (n, p, 0)),
+            pl.BlockSpec((C, bt), lambda n, r, t, p: (0, t)),
         ],
-        out_specs=pl.BlockSpec((br, n_theta), lambda r, p: (r, 0)),
-        out_shape=jax.ShapeDtypeStruct((N_rho, n_theta), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((br, n_theta), jnp.float32)],
+        out_specs=pl.BlockSpec(
+            (1, br, bt), lambda n, r, t, p: (n, r, t)
+        ),
+        out_shape=jax.ShapeDtypeStruct((N, N_rho, N_theta), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((br, bt), jnp.float32)],
         interpret=interpret,
-    )(xy.astype(jnp.float32), w2d, trig.astype(jnp.float32))
-    return out[:n_rho]
+    )(xy.astype(jnp.float32), w3, trig.astype(jnp.float32))
+    out = out[:, :n_rho, :n_theta]
+    return out[0] if squeeze else out

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from . import ref
 from .conv2d_gemm import conv2d_gemm as _conv_pallas
 from .flash_attention import flash_attention as _attn_pallas
+from .hough_vote import compact_edges as _compact_edges
 from .hough_vote import hough_vote as _hough_pallas
 from .ssd_scan import ssd_scan as _ssd_pallas
 from .tiled_matmul import tiled_matmul as _matmul_pallas
@@ -73,8 +74,21 @@ def conv2d_gemm(image, masks, *, out_dtype=None, impl=None, **kw):
     )
 
 
-def hough_vote(xy, weights, trig, *, n_rho, impl=None, **kw):
+def hough_vote(xy, weights, trig, *, n_rho, impl=None, compact=False,
+               max_edges=None, **kw):
+    """Hough voting with optional edge compaction.
+
+    ``compact=True`` runs the prefix-sum edge-compaction pre-pass first so
+    the vote stage iterates at most ``max_edges`` pixels (default: 1/16 of
+    the pixel count) instead of the full raster — the streaming fast path
+    for sparse edge maps.  Both the compacted and dense variants dispatch to
+    the same pallas/interpret/xla backends.
+    """
     impl = resolve_impl(impl)
+    if compact:
+        if max_edges is None:
+            max_edges = max(256, weights.shape[-1] // 16)
+        xy, weights = _compact_edges(xy, weights, max_edges=max_edges)
     if impl == "xla":
         return ref.hough_vote(xy, weights, trig, n_rho=n_rho)
     return _hough_pallas(

@@ -23,25 +23,28 @@ def tiled_matmul(x: jax.Array, y: jax.Array, *, out_dtype=None) -> jax.Array:
 
 def conv2d_gemm(image: jax.Array, masks: jax.Array, *, out_dtype=None
                 ) -> jax.Array:
-    """Same-padded 2D correlation; returns (n_masks, H, W)."""
-    H, W = image.shape
+    """Same-padded 2D correlation; (..., H, W) -> (..., n_masks, H, W)."""
+    H, W = image.shape[-2:]
     n_masks, kh, kw = masks.shape
     integer = jnp.issubdtype(image.dtype, jnp.integer)
     acc = jnp.int32 if integer else jnp.float32
     if out_dtype is None:
         out_dtype = jnp.int32 if integer else image.dtype
-    padded = jnp.pad(image, ((kh // 2, kh // 2), (kw // 2, kw // 2)))
-    # im2col in HBM: (H, W, kh*kw) patch tensor, then one contraction.
+    pad = [(0, 0)] * (image.ndim - 2) + [
+        (kh // 2, kh // 2), (kw // 2, kw // 2)
+    ]
+    padded = jnp.pad(image, pad)
+    # im2col in HBM: (..., H, W, kh*kw) patch tensor, then one contraction.
     patches = jnp.stack(
         [
-            jax.lax.dynamic_slice(padded, (dy, dx), (H, W))
+            padded[..., dy : dy + H, dx : dx + W]
             for dy in range(kh)
             for dx in range(kw)
         ],
         axis=-1,
     ).astype(acc)
     flat = masks.reshape(n_masks, kh * kw).astype(acc)
-    out = jnp.einsum("hwk,mk->mhw", patches, flat)
+    out = jnp.einsum("...hwk,mk->...mhw", patches, flat)
     return out.astype(out_dtype)
 
 
@@ -53,29 +56,43 @@ def conv2d_stencil(image: jax.Array, masks: jax.Array, *, out_dtype=None
     the matrix rewrite of Workload 3) — kept as a measurable path so the
     benchmarks can report the GEMM-offload speedup the way Table 7 does.
     """
-    H, W = image.shape
+    H, W = image.shape[-2:]
     n_masks, kh, kw = masks.shape
     integer = jnp.issubdtype(image.dtype, jnp.integer)
     acc = jnp.int32 if integer else jnp.float32
     if out_dtype is None:
         out_dtype = jnp.int32 if integer else image.dtype
-    padded = jnp.pad(image, ((kh // 2, kh // 2), (kw // 2, kw // 2))
-                     ).astype(acc)
+    pad = [(0, 0)] * (image.ndim - 2) + [
+        (kh // 2, kh // 2), (kw // 2, kw // 2)
+    ]
+    padded = jnp.pad(image, pad).astype(acc)
     outs = []
     for m in range(n_masks):
-        o = jnp.zeros((H, W), acc)
+        o = jnp.zeros(image.shape, acc)
         for dy in range(kh):
             for dx in range(kw):
-                o = o + masks[m, dy, dx].astype(acc) * jax.lax.dynamic_slice(
-                    padded, (dy, dx), (H, W)
-                )
+                o = o + masks[m, dy, dx].astype(acc) * padded[
+                    ..., dy : dy + H, dx : dx + W
+                ]
         outs.append(o)
-    return jnp.stack(outs).astype(out_dtype)
+    return jnp.stack(outs, axis=-3).astype(out_dtype)
 
 
 def hough_vote(xy: jax.Array, weights: jax.Array, trig: jax.Array,
                *, n_rho: int) -> jax.Array:
-    """Scatter-add vote oracle (the paper's Algorithm 2, vectorized)."""
+    """Scatter-add vote oracle (the paper's Algorithm 2, vectorized).
+
+    ``weights`` may be batched (N, n_pix) — with ``xy`` either shared
+    (n_pix, C) or per-frame (N, n_pix, C) — returning (N, n_rho, n_theta).
+    """
+    if weights.ndim == 2:
+        if xy.ndim == 3:
+            return jax.vmap(
+                lambda x, w: hough_vote(x, w, trig, n_rho=n_rho)
+            )(xy, weights)
+        return jax.vmap(
+            lambda w: hough_vote(xy, w, trig, n_rho=n_rho)
+        )(weights)
     rho = xy.astype(jnp.float32) @ trig.astype(jnp.float32)  # (P, n_theta)
     idx = jnp.floor(rho).astype(jnp.int32)
     n_theta = trig.shape[1]
@@ -85,6 +102,37 @@ def hough_vote(xy: jax.Array, weights: jax.Array, trig: jax.Array,
     w = jnp.where(inside, weights.astype(jnp.float32)[:, None], 0.0)
     t = jnp.broadcast_to(jnp.arange(n_theta)[None, :], idx.shape)
     return votes.at[idx.ravel(), t.ravel()].add(w.ravel())
+
+
+def compact_edges(xy: jax.Array, weights: jax.Array, *, max_edges: int):
+    """Edge-compaction oracle: stable partition of edge pixels to the front.
+
+    Same contract as ``hough_vote.compact_edges`` (which uses a prefix-sum
+    scatter) but formulated as a stable argsort so the two implementations
+    are independent: rows past the edge count — and edges beyond
+    ``max_edges`` — are zeroed/dropped.
+    """
+    if weights.ndim == 2:
+        if xy.ndim == 3:
+            return jax.vmap(
+                lambda x, w: compact_edges(x, w, max_edges=max_edges)
+            )(xy, weights)
+        return jax.vmap(
+            lambda w: compact_edges(xy, w, max_edges=max_edges)
+        )(weights)
+    mask = weights > 0
+    order = jnp.argsort(~mask, stable=True)[:max_edges]
+    keep = mask[order]
+    cxy = jnp.where(keep[:, None], xy[order], jnp.zeros_like(xy[order]))
+    cw = jnp.where(keep, weights[order], jnp.zeros_like(weights[order]))
+    return cxy, cw
+
+
+def hough_vote_compact(xy: jax.Array, weights: jax.Array, trig: jax.Array,
+                       *, n_rho: int, max_edges: int) -> jax.Array:
+    """Compacted-vote oracle: compact edges, then vote over max_edges rows."""
+    cxy, cw = compact_edges(xy, weights, max_edges=max_edges)
+    return hough_vote(cxy, cw, trig, n_rho=n_rho)
 
 
 def attention(q, k, v, *, causal=True, window=None, q_offset=0):

@@ -24,7 +24,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.sharding import constrain
+from repro.sharding import constrain, shard_map
 
 from .layers import P
 
@@ -276,7 +276,7 @@ def moe_ep(params, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
                                                 else None)
     wi_spec = PS("model", "data") if fsdp else PS("model")
     wo_spec = PS("model", None, "data") if fsdp else PS("model")
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         local,
         mesh=mesh,
         in_specs=(PS(), wi_spec, wi_spec, wo_spec, PS(dp_spec)),

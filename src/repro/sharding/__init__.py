@@ -18,4 +18,5 @@ from .partition import (  # noqa: F401
     shardings_for_tree,
     constrain,
     rules_for_shape,
+    shard_map,
 )

@@ -191,6 +191,7 @@ def shardings_for_tree(
 
 import contextlib
 import contextvars
+import functools
 
 _ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
     "repro_sharding_active", default=None
@@ -207,18 +208,29 @@ def activate(mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
         _ACTIVE.reset(token)
 
 
+_MANUAL_AXES: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_manual_axes", default=frozenset()
+)
+
+
 def _manual_axes_here() -> set:
-    """Mesh axes that are Manual in the current trace (inside shard_map)."""
+    """Mesh axes that are Manual in the current trace (inside shard_map).
+
+    Two sources: the abstract-mesh axis types (newer jax), plus the set our
+    ``shard_map`` wrapper records while tracing its body (works on jax
+    versions whose traces don't expose manual-ness).
+    """
+    manual = set(_MANUAL_AXES.get())
     try:
         am = jax.sharding.get_abstract_mesh()
-        if am is None or not am.axis_names:
-            return set()
-        return {
-            n for n, t in zip(am.axis_names, am.axis_types)
-            if "Manual" in str(t)
-        }
+        if am is not None and am.axis_names:
+            manual |= {
+                n for n, t in zip(am.axis_names, am.axis_types)
+                if "Manual" in str(t)
+            }
     except Exception:
-        return set()
+        pass
+    return manual
 
 
 def constrain(
@@ -239,6 +251,12 @@ def constrain(
     mesh, active_rules = active
     spec = logical_to_spec(axes, x.shape, mesh, rules or active_rules)
     manual = _manual_axes_here()
+    if manual and not hasattr(jax, "shard_map"):
+        # Old-jax partial-manual shard_map: XLA's SPMD partitioner cannot
+        # honour auto-axis constraints inside a manual subgroup (it hard-
+        # crashes on IsManualSubgroup).  Constraints are hints, not
+        # semantics — drop them there and let GSPMD place the body freely.
+        return x
     if manual:
         def strip(entry):
             if entry is None:
@@ -250,6 +268,46 @@ def constrain(
             return kept if len(kept) > 1 else kept[0]
         spec = PartitionSpec(*(strip(e) for e in spec))
     return jax.lax.with_sharding_constraint(x, spec)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map(..., axis_names=..., check_vma=...)``;
+    older releases have ``jax.experimental.shard_map.shard_map`` where the
+    manual axis set is expressed as its complement (``auto``) and the
+    replication check is ``check_rep``.  ``axis_names`` is the set of
+    *manual* axes; ``None`` (the jax default) means all mesh axes.
+    """
+    manual = (
+        frozenset(mesh.axis_names) if axis_names is None
+        else frozenset(axis_names)
+    )
+
+    @functools.wraps(f)
+    def traced(*args, **kwargs):
+        # Record the manual set for constrain()'s axis stripping: tracing
+        # of the body happens inside this call, so the contextvar is live
+        # exactly while sharding constraints inside ``f`` are staged.
+        token = _MANUAL_AXES.set(frozenset(_MANUAL_AXES.get()) | manual)
+        try:
+            return f(*args, **kwargs)
+        finally:
+            _MANUAL_AXES.reset(token)
+
+    if hasattr(jax, "shard_map"):
+        kw = {} if axis_names is None else {"axis_names": set(axis_names)}
+        return jax.shard_map(
+            traced, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, **kw,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(mesh.axis_names) - manual
+    return _shard_map(
+        traced, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma, auto=auto,
+    )
 
 
 def rules_for_shape(shape_kind: str) -> AxisRules:

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
+from repro.sharding import shard_map
 from repro.train import compression as comp
 from repro.train.optim import AdamWConfig, adamw_update
 from repro.train.state import TrainState
@@ -142,7 +143,7 @@ def make_train_step_pod_compressed(
     batch_spec = PS("pod")
     metrics_spec = PS()
 
-    return jax.shard_map(
+    return shard_map(
         per_pod,
         mesh=mesh,
         in_specs=(state_spec, batch_spec),

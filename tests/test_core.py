@@ -115,6 +115,79 @@ def test_render_and_elide(scene):
     assert ((red[..., 0] == 255) & (red[..., 1] == 0)).sum() > 0
 
 
+def test_detect_batch_matches_loop_bit_exact():
+    """The batched fast path is the same program per frame: every field of
+    detect_batch((N, H, W)) equals the per-frame detect loop bit-for-bit."""
+    frames = np.stack(
+        [synthetic_road(96, 128, seed=s).image for s in (1, 2, 3)]
+    )
+    det = LineDetector(PipelineConfig(render_output=True))
+    imgs = jnp.asarray(frames, jnp.float32)
+    rb = det.detect_batch(imgs)
+    for i in range(frames.shape[0]):
+        r = det.detect(imgs[i])
+        np.testing.assert_array_equal(np.asarray(rb.lines[i]),
+                                      np.asarray(r.lines))
+        np.testing.assert_array_equal(np.asarray(rb.valid[i]),
+                                      np.asarray(r.valid))
+        np.testing.assert_array_equal(np.asarray(rb.peaks[i]),
+                                      np.asarray(r.peaks))
+        np.testing.assert_array_equal(np.asarray(rb.edges[i]),
+                                      np.asarray(r.edges))
+        np.testing.assert_array_equal(np.asarray(rb.rendered[i]),
+                                      np.asarray(r.rendered))
+
+
+def test_detect_stream_matches_batch():
+    """Double-buffered streaming yields the same per-frame results, in
+    order, across batch boundaries and a short final batch."""
+    frames = [synthetic_road(96, 128, seed=s).image for s in range(5)]
+    det = LineDetector(PipelineConfig())
+    rb = det.detect_batch(jnp.asarray(np.stack(frames), jnp.float32))
+    got = list(det.detect_stream(iter(frames), batch_size=2))
+    assert len(got) == 5
+    for i, r in enumerate(got):
+        np.testing.assert_array_equal(np.asarray(r.lines),
+                                      np.asarray(rb.lines[i]))
+        np.testing.assert_array_equal(np.asarray(r.valid),
+                                      np.asarray(rb.valid[i]))
+
+
+def test_compact_hough_pipeline_bit_exact(scene):
+    """Edge compaction changes the iteration space, not the votes: the
+    compacted pipeline's accumulator and detections match the dense path
+    exactly (vote counts are small integers in f32)."""
+    img = jnp.asarray(scene.image, jnp.float32)
+    edges = canny(img, CannyConfig())
+    v_dense = hough_transform(edges, HoughConfig())
+    v_comp = hough_transform(edges, HoughConfig(compact=True))
+    np.testing.assert_array_equal(np.asarray(v_dense), np.asarray(v_comp))
+
+    det_d = LineDetector(PipelineConfig())
+    det_c = LineDetector(PipelineConfig(hough=HoughConfig(compact=True)))
+    rd, rc = det_d.detect(img), det_c.detect(img)
+    np.testing.assert_array_equal(np.asarray(rd.lines), np.asarray(rc.lines))
+    np.testing.assert_array_equal(np.asarray(rd.valid), np.asarray(rc.valid))
+
+
+def test_batched_canny_and_hough_shapes(scene):
+    """(N, H, W) flows through canny/hough/get_lines with leading axes."""
+    imgs = jnp.asarray(
+        np.stack([scene.image, np.flipud(scene.image)]), jnp.float32
+    )
+    edges = canny(imgs, CannyConfig())
+    assert edges.shape == imgs.shape and edges.dtype == jnp.uint8
+    votes = hough_transform(edges, HoughConfig())
+    assert votes.ndim == 3 and votes.shape[0] == 2
+    lines, valid, peaks = get_lines(
+        votes, height=imgs.shape[1], width=imgs.shape[2],
+        cfg=LinesConfig(max_lines=8),
+    )
+    assert lines.shape == (2, 8, 4)
+    assert valid.shape == (2, 8)
+    assert peaks.shape == (2, 8, 2)
+
+
 def test_get_lines_static_shapes():
     votes = jnp.zeros((100, 180))
     votes = votes.at[30, 45].set(99.0)

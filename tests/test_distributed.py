@@ -12,6 +12,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-device subprocesses, minutes each
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -99,6 +101,12 @@ def test_elastic_checkpoint_resharding():
     """)
 
 
+@pytest.mark.skipif(
+    not hasattr(__import__("jax"), "shard_map"),
+    reason="partial-auto shard_map over a scanned model body aborts this "
+           "XLA's SPMD partitioner (IsManualSubgroup check, uncatchable); "
+           "needs the jax.shard_map era — see ROADMAP open items",
+)
 def test_pod_compressed_train_step():
     """int8 pod-compressed step runs on a (2,2,2) mesh and tracks the
     uncompressed step closely (error feedback)."""
@@ -141,6 +149,7 @@ def test_compressed_allreduce_exactness():
     run_script("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.sharding import shard_map
         from repro.train.compression import compressed_allreduce
 
         mesh = jax.make_mesh((8,), ("pod",))
@@ -150,7 +159,7 @@ def test_compressed_allreduce_exactness():
         def f(x, e):
             return compressed_allreduce(x[0], e[0], "pod")
 
-        mean, new_err = jax.jit(jax.shard_map(
+        mean, new_err = jax.jit(shard_map(
             f, mesh=mesh, in_specs=(P("pod"), P("pod")),
             out_specs=(P(), P("pod")), check_vma=False,
         ))(x, err)

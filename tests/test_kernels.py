@@ -62,6 +62,34 @@ def test_conv2d_gemm_int(rng):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("hw,bh,bw", [((21, 19), 8, 8), ((37, 52), 8, 16)])
+def test_conv2d_gemm_halo_non_multiple(rng, hw, bh, bw):
+    """Halo-tiled grid on shapes that do not divide the block sizes."""
+    img = rng.normal(size=hw).astype(np.float32)
+    m = rng.normal(size=(3, 7, 7)).astype(np.float32)
+    got = conv2d_gemm(jnp.asarray(img), jnp.asarray(m), interpret=True,
+                      bh=bh, bw=bw)
+    want = ref.conv2d_gemm(jnp.asarray(img), jnp.asarray(m))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_gemm_batched_one_launch(rng):
+    """(N, H, W) lowers with a leading batch grid axis == per-frame loop."""
+    imgs = rng.normal(size=(3, 21, 37)).astype(np.float32)
+    m = rng.normal(size=(3, 5, 5)).astype(np.float32)
+    got = conv2d_gemm(jnp.asarray(imgs), jnp.asarray(m), interpret=True,
+                      bh=8, bw=16)
+    assert got.shape == (3, 3, 21, 37)
+    for i in range(3):
+        want = conv2d_gemm(jnp.asarray(imgs[i]), jnp.asarray(m),
+                           interpret=True, bh=8, bw=16)
+        np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(want))
+    wantb = ref.conv2d_gemm(jnp.asarray(imgs), jnp.asarray(m))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(wantb),
+                               rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("n_pix,n_theta,n_rho", [(64, 45, 60), (200, 180, 150)])
 def test_hough_vote(rng, n_pix, n_theta, n_rho):
     xy = rng.uniform(0, 40, (n_pix, 3)).astype(np.float32)
@@ -74,6 +102,76 @@ def test_hough_vote(rng, n_pix, n_theta, n_rho):
     want = ref.hough_vote(jnp.asarray(xy), jnp.asarray(w), jnp.asarray(trig),
                           n_rho=n_rho)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+def _vote_inputs(rng, n_pix, n_theta, n_rho, edge_frac=0.15, batch=None):
+    xy = rng.uniform(0, 40, (n_pix, 3)).astype(np.float32)
+    xy[:, 2] = 1.0
+    shape = (batch, n_pix) if batch else (n_pix,)
+    w = (rng.uniform(size=shape) > 1 - edge_frac).astype(np.float32)
+    trig = rng.uniform(-1, 1, (3, n_theta)).astype(np.float32)
+    trig[2] = n_rho / 2.5
+    return jnp.asarray(xy), jnp.asarray(w), jnp.asarray(trig)
+
+
+def test_hough_vote_batched(rng):
+    """Shared raster coords + (N, P) weights lower as one batched kernel."""
+    xy, w, trig = _vote_inputs(rng, 200, 90, 150, edge_frac=0.3, batch=3)
+    got = hough_vote(xy, w, trig, n_rho=150, interpret=True,
+                     br=32, bp=64, bt=32)
+    assert got.shape == (3, 150, 90)
+    want = ref.hough_vote(xy, w, trig, n_rho=150)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+def test_compact_edges_matches_ref(rng):
+    """Prefix-sum-scatter compaction == stable-sort oracle, single + batch."""
+    from repro.kernels.hough_vote import compact_edges
+    xy, w, _ = _vote_inputs(rng, 200, 45, 60)
+    for weights in (w, jnp.stack([w, jnp.roll(w, 7)])):
+        cxy1, cw1 = compact_edges(xy, weights, max_edges=64)
+        cxy2, cw2 = ref.compact_edges(xy, weights, max_edges=64)
+        np.testing.assert_array_equal(np.asarray(cxy1), np.asarray(cxy2))
+        np.testing.assert_array_equal(np.asarray(cw1), np.asarray(cw2))
+
+
+@pytest.mark.parametrize("impl", ["xla", "interpret"])
+def test_hough_vote_compact_parity(rng, impl):
+    """Compacted voting == dense voting == ref oracle, for both impls, and
+    the compacted kernel's pixel iteration is bounded by max_edges."""
+    from repro.kernels import ops
+    from repro.kernels.hough_vote import compact_edges
+    max_edges = 64
+    xy, _, trig = _vote_inputs(rng, 400, 45, 80)
+    wn = np.zeros(400, np.float32)
+    wn[rng.choice(400, 50, replace=False)] = 1.0  # 50 edges < max_edges
+    w = jnp.asarray(wn)
+    dense = ref.hough_vote(xy, w, trig, n_rho=80)
+    got = ops.hough_vote(xy, w, trig, n_rho=80, impl=impl, compact=True,
+                         max_edges=max_edges)
+    # vote counts are small integers in f32: compaction must be *exact*
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(dense))
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.asarray(ref.hough_vote_compact(xy, w, trig, n_rho=80,
+                                          max_edges=max_edges)),
+    )
+    # the compacted pixel set — what the vote grid iterates — is static
+    # max_edges, not n_pix
+    cxy, cw = compact_edges(xy, w, max_edges=max_edges)
+    assert cxy.shape == (max_edges, 3) and cw.shape == (max_edges,)
+    assert int((w > 0).sum()) <= max_edges  # no drops in this sweep
+
+
+def test_compact_edges_overflow_drops(rng):
+    """Edges past max_edges are dropped, never scattered out of bounds."""
+    from repro.kernels.hough_vote import compact_edges
+    xy, _, _ = _vote_inputs(rng, 100, 45, 60)
+    w = jnp.ones((100,), jnp.float32)  # every pixel is an edge
+    cxy, cw = compact_edges(xy, w, max_edges=16)
+    assert cxy.shape == (16, 3)
+    np.testing.assert_array_equal(np.asarray(cw), np.ones(16, np.float32))
+    np.testing.assert_array_equal(np.asarray(cxy), np.asarray(xy)[:16])
 
 
 @pytest.mark.parametrize("gqa", [1, 2, 4])

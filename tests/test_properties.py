@@ -5,7 +5,10 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import HoughConfig, hough_transform, quantize, dequantize
 from repro.core.canny import GAUSS_5x5, SOBEL_X

@@ -9,18 +9,24 @@ from repro.sharding import (
 )
 
 
+def _abstract_mesh(shape, names):
+    # shape-only stand-in mesh: rules only read axis names and sizes.
+    # Newer jax takes (shape, names); jax<=0.4.x takes ((name, size), ...).
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(shape, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, shape)))
+
+
 @pytest.fixture(scope="module")
 def mesh():
-    # shape-only stand-in mesh: rules only read axis names and sizes.
-    # Built over 1 real device via AbstractMesh.
-    from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    return _abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.fixture(scope="module")
 def pod_mesh():
-    from jax.sharding import AbstractMesh
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def spec(axes, shape, mesh, rules=DEFAULT_RULES):

@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke
 from repro.core import LineDetector, PipelineConfig
@@ -25,6 +26,7 @@ def test_video_stream_line_detection():
     assert hits >= 3
 
 
+@pytest.mark.slow
 def test_train_then_serve_roundtrip():
     """Train a tiny LM on the synthetic pipeline until it learns the ramp
     structure, then serve it and check generations continue ramps."""
