@@ -1,0 +1,163 @@
+"""Detection quality x throughput across the scenario-engine families.
+
+For every registered road-scene family (``repro/data/scenarios.py``) this
+benchmark runs the detector at batch sizes {1, 8} and reports both axes the
+ROADMAP cares about:
+
+  * accuracy   — micro-averaged precision/recall/F1 and mean (rho, theta)
+    localization error against the family's analytic ground truth
+    (``repro/core/metrics.py``), scored over exactly the frames in each
+    batch (the contract check uses the 8-seed batch-8 rows);
+  * throughput — ms/frame and frames/s for the same batches.
+
+Two detector variants are compared per family:
+
+  * ``hand``  — the PR-1 compacted fast path with the hand-tuned default
+    buffer (``max_edges=None`` => H*W/16);
+  * ``auto``  — ``HoughConfig(max_edges="auto")``: the edge-density
+    estimator sizes the compaction buffer per batch.
+
+The suite asserts the ROADMAP autotune contract — on every family, ``auto``
+matches ``hand`` F1 exactly while allocating a no-larger buffer — and
+records both in ``BENCH_scenarios.json``.
+
+Usage: PYTHONPATH=src python -m benchmarks.scenario_suite [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    HoughConfig, LineDetector, PipelineConfig, aggregate_scores, score_batch,
+)
+from repro.data import get_family, scenario_batch, scenario_names
+from repro.kernels.ops import default_max_edges
+
+from .common import print_table, timeit_us
+
+
+def _detector(mode: str) -> LineDetector:
+    max_edges = "auto" if mode == "auto" else None
+    return LineDetector(PipelineConfig(
+        hough=HoughConfig(compact=True, max_edges=max_edges)
+    ))
+
+
+def bench_family(name: str, h: int, w: int, *, n_seeds: int, batches,
+                 repeats: int) -> list[dict]:
+    imgs_np, truths = scenario_batch([name] * n_seeds, h, w, seed=0)
+    imgs = jnp.asarray(imgs_np)
+    rows = []
+    for mode in ("hand", "auto"):
+        det = _detector(mode)
+        for B in batches:
+            # score and time with exactly the configuration this batch
+            # size resolves ("auto" sizes its buffer per batch)
+            buffer = det.resolve_config(imgs[:B]).hough.max_edges
+            if buffer is None:
+                buffer = default_max_edges(h * w)
+            res = det.detect_batch(imgs[:B])
+            agg = aggregate_scores(
+                score_batch(res.peaks, res.valid, truths[:B])
+            )
+            sec = timeit_us(det.detect_batch, imgs[:B], warmup=1,
+                            repeats=repeats) / 1e6
+            rows.append({
+                "scenario": name, "mode": mode, "batch": B,
+                "height": h, "width": w,
+                "max_edges_buffer": buffer,
+                "f1": agg["f1"], "precision": agg["precision"],
+                "recall": agg["recall"],
+                "mean_rho_err": agg["mean_rho_err"],
+                "mean_theta_err_deg": agg["mean_theta_err_deg"],
+                "f1_floor": get_family(name).f1_floor,
+                "ms_per_frame": sec / B * 1e3,
+                "frames_per_s": B / sec,
+            })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer timing repeats per family")
+    ap.add_argument("--height", type=int, default=240)
+    ap.add_argument("--width", type=int, default=320)
+    ap.add_argument("--out", default="BENCH_scenarios.json")
+    args = ap.parse_args()
+
+    n_seeds = 8  # == max batch: the batch-8 timing cell uses every seed
+    repeats = 1 if args.quick else 2
+    batches = (1, 8)
+
+    rows = []
+    for name in scenario_names():
+        rows += bench_family(name, args.height, args.width,
+                             n_seeds=n_seeds, batches=batches,
+                             repeats=repeats)
+
+    print_table(
+        f"scenario suite ({args.height}x{args.width}, {n_seeds} seeds)",
+        ["scenario", "mode", "batch", "buffer", "F1", "prec", "recall",
+         "rho_err", "th_err", "ms/frame", "frames/s"],
+        [[r["scenario"], r["mode"], r["batch"], r["max_edges_buffer"],
+          f"{r['f1']:.3f}", f"{r['precision']:.2f}", f"{r['recall']:.2f}",
+          f"{r['mean_rho_err']:.2f}", f"{r['mean_theta_err_deg']:.2f}",
+          f"{r['ms_per_frame']:.1f}", f"{r['frames_per_s']:.2f}"]
+         for r in rows],
+    )
+
+    # The ROADMAP autotune contract, checked per family.
+    def cell(name, mode):
+        return next(r for r in rows
+                    if r["scenario"] == name and r["mode"] == mode
+                    and r["batch"] == 8)
+
+    autotune = {}
+    for name in scenario_names():
+        hand, auto = cell(name, "hand"), cell(name, "auto")
+        autotune[name] = {
+            "f1_hand": hand["f1"], "f1_auto": auto["f1"],
+            "buffer_hand": hand["max_edges_buffer"],
+            "buffer_auto": auto["max_edges_buffer"],
+            "f1_equal": auto["f1"] == hand["f1"],
+            "buffer_no_larger": (
+                auto["max_edges_buffer"] <= hand["max_edges_buffer"]
+            ),
+            "above_floor": auto["f1"] >= get_family(name).f1_floor,
+        }
+    ok = all(v["f1_equal"] and v["buffer_no_larger"] and v["above_floor"]
+             for v in autotune.values())
+    savings = {
+        n: 1.0 - v["buffer_auto"] / v["buffer_hand"]
+        for n, v in autotune.items()
+    }
+    print(f"\nautotune contract (F1 equal, buffer no larger, above floor): "
+          f"{'PASS' if ok else 'FAIL'}")
+    print("auto buffer savings vs hand-tuned: " + ", ".join(
+        f"{n}={s:.0%}" for n, s in savings.items()))
+
+    out = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "height": args.height, "width": args.width,
+            "n_seeds": n_seeds, "quick": args.quick,
+        },
+        "rows": rows,
+        "autotune": autotune,
+        "autotune_contract_ok": ok,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, default=float)
+    print(f"wrote {args.out}")
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,14 @@ while the device computes batch k — and reports frames/s plus the
 heterogeneous placement plan the offload planner derives for this
 resolution (the paper's core/accelerator split, computed not hand-chosen).
 
-    PYTHONPATH=src python examples/video_pipeline.py --frames 16 --batch 4
+``--scenario`` picks any road-scene family from the scenario engine
+(``--scenario mixed`` rotates through all of them — a heterogeneous
+stream), detection quality is scored live against the planted ground truth,
+and ``--auto-max-edges`` lets the edge-density estimator size the Hough
+compaction buffer per batch.
+
+    PYTHONPATH=src python examples/video_pipeline.py --frames 16 --batch 4 \
+        --scenario mixed --auto-max-edges
 """
 
 import argparse
@@ -18,9 +25,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    HoughConfig, LineDetector, PipelineConfig, plan_line_detection,
+    HoughConfig, LineDetector, PipelineConfig, aggregate_scores,
+    plan_line_detection, score_frame,
 )
-from repro.data.images import frame_stream
+from repro.data import scenario_names, scenario_stream
 
 
 def main():
@@ -32,37 +40,89 @@ def main():
                     help="frames per device dispatch (1 = unbatched)")
     ap.add_argument("--no-compact", action="store_true",
                     help="disable the edge-compaction Hough fast path")
+    ap.add_argument("--scenario", default="converging",
+                    choices=sorted(scenario_names()) + ["mixed"],
+                    help="road-scene family (mixed = rotate through all)")
+    ap.add_argument("--auto-max-edges", action="store_true",
+                    help="size the compaction buffer from the edge-density "
+                         "estimate (HoughConfig(max_edges='auto'))")
     args = ap.parse_args()
+    if args.auto_max_edges and args.no_compact:
+        ap.error("--auto-max-edges sizes the compaction buffer; "
+                 "it needs compaction on (drop --no-compact)")
 
     print("offload plan (paper §4.4 partition, derived):")
     for p in plan_line_detection(args.height, args.width):
         print(f"  {p.stage:18s} -> {p.unit.upper():4s} ({p.reason})")
 
     det = LineDetector(PipelineConfig(
-        hough=HoughConfig(compact=not args.no_compact)
+        hough=HoughConfig(
+            compact=not args.no_compact,
+            max_edges="auto" if args.auto_max_edges else None,
+        )
     ))
+    if args.auto_max_edges:
+        from repro.kernels.ops import default_max_edges
+        # Resolve ONCE from a probe covering every family in the stream
+        # and pin the detector to that buffer: per-chunk re-resolution on
+        # a mixed stream would hop max_edges buckets and recompile inside
+        # the timed window.
+        probe_n = (len(scenario_names()) if args.scenario == "mixed"
+                   else args.batch)
+        # same seed as the timed stream below, so the probe sees the same
+        # frames (mixed: one frame of every family) the stream starts with
+        probe = jnp.asarray(
+            [s.image for s in scenario_stream(args.scenario, probe_n,
+                                              args.height, args.width,
+                                              seed=2)],
+            jnp.float32,
+        )
+        det = LineDetector(det.resolve_config(probe))
+        buf = det.cfg.hough.max_edges
+        print(f"autotuned compaction buffer: max_edges={buf} "
+              f"(hand-tuned default "
+              f"{default_max_edges(args.height * args.width)})")
+
     # warmup / compile at the steady-state batch shape
     warm = [
-        s.image for s in frame_stream(args.batch, args.height, args.width)
+        s.image
+        for s in scenario_stream(args.scenario, args.batch,
+                                 args.height, args.width)
     ]
     jax.block_until_ready(
         det.detect_batch(jnp.asarray(warm, jnp.float32)).lines
     )
 
+    # Stream frames through; keep only the tiny (K, 2)/(K,) peak fields
+    # per frame (not edges/images — memory stays O(frames * K), and the
+    # host never syncs inside the timed window).  Scoring runs after.
+    truths, peaks, valids = [], [], []
+
+    def frames():
+        for s in scenario_stream(args.scenario, args.frames,
+                                 args.height, args.width, seed=2):
+            truths.append(s.lines_rho_theta)
+            yield s.image
+
     t0 = time.time()
-    detected = 0
-    stream = (
-        s.image
-        for s in frame_stream(args.frames, args.height, args.width, seed=2)
-    )
-    for res in det.detect_stream(stream, batch_size=args.batch):
-        detected += int(res.valid.sum())
+    for res in det.detect_stream(frames(), batch_size=args.batch):
+        peaks.append(res.peaks)
+        valids.append(res.valid)
+    jax.block_until_ready(peaks[-1])
     dt = time.time() - t0
+    agg = aggregate_scores([
+        score_frame(p, v, t) for p, v, t in zip(peaks, valids, truths)
+    ])
     print(f"\n{args.frames} frames in {dt:.2f}s -> "
           f"{args.frames/dt:.1f} frames/s "
           f"({1000*dt/args.frames:.1f} ms/frame; paper target ~300 ms); "
-          f"batch={args.batch}, compact={not args.no_compact}; "
-          f"{detected} line detections")
+          f"batch={args.batch}, compact={not args.no_compact}, "
+          f"scenario={args.scenario}")
+    print(f"detection quality vs planted ground truth: "
+          f"F1={agg['f1']:.2f} (P={agg['precision']:.2f} "
+          f"R={agg['recall']:.2f}), "
+          f"rho err {agg['mean_rho_err']:.1f}px, "
+          f"theta err {agg['mean_theta_err_deg']:.1f} deg")
 
 
 if __name__ == "__main__":

@@ -7,4 +7,7 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m benchmarks.run --quick
-python -m pytest -q -m "not slow"
+# fast scenario subset first: the detection-quality net fails loudly and
+# early if a change regresses accuracy on any road-scene family
+python -m pytest -q -m "scenarios and not slow" -x
+python -m pytest -q -m "not slow and not scenarios"

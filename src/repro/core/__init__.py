@@ -6,9 +6,17 @@ the paper's float->int rewrite, phase profiling, and heterogeneous
 placement planning as first-class features.
 """
 
-from .canny import GAUSS_5x5, SOBEL_X, SOBEL_Y, CannyConfig, canny  # noqa: F401
-from .hough import HoughConfig, hough_paper_loop, hough_transform, rho_bins  # noqa: F401
+from .canny import (  # noqa: F401
+    GAUSS_5x5, SOBEL_X, SOBEL_Y, CannyConfig, canny, estimate_edge_count,
+)
+from .hough import (  # noqa: F401
+    HoughConfig, auto_max_edges, hough_paper_loop, hough_transform,
+    resolve_max_edges, rho_bins,
+)
 from .lines import LinesConfig, get_lines, render_lines  # noqa: F401
+from .metrics import (  # noqa: F401
+    DetectionScore, aggregate_scores, match_peaks, score_batch, score_frame,
+)
 from .offload import Placement, place, plan, plan_line_detection  # noqa: F401
 from .pipeline import DetectionResult, LineDetector, PipelineConfig  # noqa: F401
 from .profiling import PhaseProfiler, StageCost, line_detection_costs  # noqa: F401

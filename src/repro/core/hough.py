@@ -42,9 +42,14 @@ class HoughConfig:
     # ``max_edges`` pixels instead of H*W.  ``max_edges=None`` defers to
     # the dispatch default in ``kernels.ops.hough_vote`` (~H*W/16); edges
     # beyond the buffer are dropped, so leave compaction off when exact
-    # parity on pathologically dense edge maps matters.
+    # parity on pathologically dense edge maps matters.  ``max_edges="auto"``
+    # sizes the buffer from the workload itself: ``hough_transform`` counts
+    # the concrete edge map, the pipeline estimates from a downsampled
+    # gradient pass (``canny.estimate_edge_count``) — both land on a
+    # bucketed size via ``auto_max_edges`` that never exceeds the dense
+    # default, closing the ROADMAP autotune follow-up.
     compact: bool = False
-    max_edges: int | None = None
+    max_edges: int | str | None = None
 
 
 def rho_bins(height: int, width: int, cfg: HoughConfig) -> int:
@@ -52,11 +57,76 @@ def rho_bins(height: int, width: int, cfg: HoughConfig) -> int:
     return int(2.0 * diag / cfg.rho_res) + 1
 
 
+def auto_max_edges(n_edges: int, height: int, width: int, *,
+                   bucket: int = 512) -> int:
+    """Bucketed compaction-buffer size for an (estimated) edge count.
+
+    Rounds up to a multiple of ``bucket`` so nearby workloads share one jit
+    cache entry, and caps at the dense-dispatch default
+    (``kernels.ops.default_max_edges``) — an autotuned buffer is never
+    larger than the hand-tuned one, and past the cap both drop exactly the
+    same trailing edges.
+    """
+    cap = ops.default_max_edges(height * width)
+    need = max(bucket, -(-int(n_edges) // bucket) * bucket)
+    return int(min(cap, need))
+
+
+def resolved_auto_config(cfg: HoughConfig, n_edges: int, height: int,
+                         width: int) -> HoughConfig:
+    """Shared tail of ``max_edges="auto"`` resolution: the dense path
+    neutralizes the knob (it is inert there, and a stable value keeps jit
+    cache keys shared), the compacted path gets the bucketed buffer."""
+    if not cfg.compact:
+        return dataclasses.replace(cfg, max_edges=None)
+    return dataclasses.replace(
+        cfg, max_edges=auto_max_edges(n_edges, height, width)
+    )
+
+
+def resolve_max_edges(edges, cfg: HoughConfig) -> HoughConfig:
+    """Resolve ``max_edges="auto"`` against a *concrete* edge map.
+
+    The compacted vote buffer is a static shape, so "auto" must become an
+    int before tracing; here the edge map is already computed, so the exact
+    per-frame count (max over a batch) feeds ``auto_max_edges``.  The
+    pipeline resolves earlier — from the raw image, via the downsampled
+    gradient estimate in ``canny.estimate_edge_count`` — because under its
+    jit the edge map is a tracer.
+    """
+    if cfg.max_edges != "auto":
+        return cfg
+    H, W = edges.shape[-2:]
+    if not cfg.compact:  # knob inert on the dense path; no count needed
+        return resolved_auto_config(cfg, 0, H, W)
+    if isinstance(edges, jax.core.Tracer):
+        raise ValueError(
+            "HoughConfig(max_edges='auto') needs a concrete edge map to "
+            "size the compaction buffer; resolve via "
+            "LineDetector/resolve_max_edges before jit."
+        )
+    counts = np.asarray(edges >= cfg.edge_threshold).sum(axis=(-2, -1))
+    n = int(counts.max()) if getattr(counts, "ndim", 0) else int(counts)
+    return resolved_auto_config(cfg, n, H, W)
+
+
+def hough_transform(edges: jax.Array, cfg: HoughConfig = HoughConfig()
+                    ) -> jax.Array:
+    """Vote accumulator (..., n_rho, n_theta) from an edge map (..., H, W).
+
+    Thin wrapper resolving ``max_edges="auto"`` (a data-dependent static
+    shape) before entering the jitted body below.
+    """
+    if cfg.max_edges == "auto":
+        cfg = resolve_max_edges(edges, cfg)
+    return _hough_transform(edges, cfg)
+
+
 @functools.partial(
     jax.jit, static_argnames=("cfg",)
 )
-def hough_transform(edges: jax.Array, cfg: HoughConfig = HoughConfig()
-                    ) -> jax.Array:
+def _hough_transform(edges: jax.Array, cfg: HoughConfig = HoughConfig()
+                     ) -> jax.Array:
     """Vote accumulator (..., n_rho, n_theta) from an edge map (..., H, W).
 
     rho = j*cos(theta) + i*sin(theta)  (paper's convention: x=col, y=row),

@@ -23,8 +23,16 @@ import jax.numpy as jnp
 @dataclasses.dataclass(frozen=True)
 class LinesConfig:
     threshold: float = 80.0   # min votes for a peak (paper's threshold)
-    threshold_rel: float | None = 0.5  # if set: threshold = rel * max(votes)
-    neighborhood: int = 5     # local-max window (paper checks a vecinity)
+    # if set, the effective threshold is max(floor, rel * max(votes)):
+    # relative to the strongest peak so dashed/short strokes survive, but
+    # never below an absolute floor — a markings-free frame (scenario
+    # family "empty") must yield zero detections, not scaled-down noise.
+    # The floor defaults to min_votes_frac * image diagonal (a line must
+    # cover ~9% of the longest possible stroke), overridable via min_votes.
+    threshold_rel: float | None = 0.5
+    min_votes: float | None = None
+    min_votes_frac: float = 0.09
+    neighborhood: int = 7     # local-max window (paper checks a vecinity)
     max_lines: int = 16       # static K
     rho_res: float = 1.0
     n_theta: int = 180
@@ -50,8 +58,11 @@ def get_lines(votes: jax.Array, *, height: int, width: int,
     diag = math.hypot(height, width)
 
     if cfg.threshold_rel is not None:
-        thresh = cfg.threshold_rel * jnp.max(
-            votes, axis=(-2, -1), keepdims=True
+        floor = (cfg.min_votes if cfg.min_votes is not None
+                 else cfg.min_votes_frac * diag)
+        thresh = jnp.maximum(
+            floor,
+            cfg.threshold_rel * jnp.max(votes, axis=(-2, -1), keepdims=True),
         )
     else:
         thresh = cfg.threshold

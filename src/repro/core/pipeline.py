@@ -27,8 +27,8 @@ from typing import Iterable, Iterator, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .canny import CannyConfig, canny
-from .hough import HoughConfig, hough_transform
+from .canny import CannyConfig, canny, estimate_edge_count
+from .hough import HoughConfig, hough_transform, resolved_auto_config
 from .lines import LinesConfig, get_lines, render_lines
 from .profiling import PhaseProfiler
 
@@ -51,6 +51,22 @@ class DetectionResult(NamedTuple):
     rendered: jax.Array | None
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _detect(cfg: PipelineConfig, image: jax.Array) -> DetectionResult:
+    """Jitted detection body; ``cfg`` is fully resolved (no "auto" knobs)
+    and static, so the cache is shared across detector instances."""
+    H, W = image.shape[-2:]
+    edges = canny(image, cfg.canny)
+    votes = hough_transform(edges, cfg.hough)
+    lines, valid, peaks = get_lines(
+        votes, height=H, width=W, cfg=cfg.lines
+    )
+    rendered = None
+    if cfg.render_output:
+        rendered = render_lines(image.astype(jnp.uint8), lines, valid)
+    return DetectionResult(lines, valid, peaks, edges, rendered)
+
+
 class LineDetector:
     """The paper's application as a composable, jittable module."""
 
@@ -69,27 +85,49 @@ class LineDetector:
             )
         return img
 
-    # --- phase 2: line detection --------------------------------------
-    @functools.partial(jax.jit, static_argnames=("self",))
-    def detect(self, image: jax.Array) -> DetectionResult:
-        H, W = image.shape[-2:]
-        edges = canny(image, self.cfg.canny)
-        votes = hough_transform(edges, self.cfg.hough)
-        lines, valid, peaks = get_lines(
-            votes, height=H, width=W, cfg=self.cfg.lines
+    # --- data-dependent config resolution ------------------------------
+    def resolve_config(self, image: jax.Array | None = None
+                       ) -> PipelineConfig:
+        """Resolve data-dependent knobs against a concrete frame/batch.
+
+        ``HoughConfig(max_edges="auto")`` sizes the edge-compaction buffer
+        from a downsampled gradient pass over the input (max over a batch:
+        heterogeneous scenario mixes share one buffer sized for the densest
+        frame).  Buffer sizes are bucketed (``auto_max_edges``) so drifting
+        streams reuse jit cache entries, and capped at the hand-tuned dense
+        default — autotuning never allocates a larger buffer.
+        """
+        h = self.cfg.hough
+        if h.max_edges != "auto":
+            return self.cfg
+        if h.compact:
+            if image is None or isinstance(image, jax.core.Tracer):
+                raise ValueError(
+                    "max_edges='auto' needs a concrete input frame to size "
+                    "the compaction buffer (it is a static shape)."
+                )
+            H, W = image.shape[-2:]
+            n_est = estimate_edge_count(image, self.cfg.canny)
+        else:  # dense path: the knob is inert, keep jit keys stable
+            H = W = n_est = 0
+        return dataclasses.replace(
+            self.cfg, hough=resolved_auto_config(h, n_est, H, W)
         )
-        rendered = None
-        if self.cfg.render_output:
-            rendered = render_lines(image.astype(jnp.uint8), lines, valid)
-        return DetectionResult(lines, valid, peaks, edges, rendered)
+
+    # --- phase 2: line detection --------------------------------------
+    def detect(self, image: jax.Array) -> DetectionResult:
+        return _detect(self.resolve_config(image), image)
 
     # --- batched fast path --------------------------------------------
     def detect_batch(self, images: jax.Array) -> DetectionResult:
         """Detect lines in a stack of frames (N, H, W) as ONE jitted
         program: the conv/vote kernels lower the batch as a leading grid
-        axis, so every field of the result gains a leading N axis.
-        Bit-exact with a per-frame ``detect`` loop (the kernels are
-        row/frame-independent)."""
+        axis, so every field of the result gains a leading N axis.  The
+        frames may be a heterogeneous scenario mix (``data/scenarios.py``)
+        — with ``max_edges="auto"`` the shared compaction buffer is sized
+        for the densest frame.  Bit-exact with a per-frame ``detect`` loop
+        (the kernels are row/frame-independent, and integer-valued vote
+        sums are exact in f32 at any buffer size that drops no edges)."""
         assert images.ndim == 3, images.shape
         return self.detect(images)
 
@@ -166,10 +204,11 @@ class LineDetector:
         """
         prof = PhaseProfiler()
         H, W = image.shape[-2:]
-        canny_j = jax.jit(lambda im: canny(im, self.cfg.canny))
-        hough_j = jax.jit(lambda e: hough_transform(e, self.cfg.hough))
+        cfg = self.resolve_config(image)
+        canny_j = jax.jit(lambda im: canny(im, cfg.canny))
+        hough_j = jax.jit(lambda e: hough_transform(e, cfg.hough))
         lines_j = jax.jit(
-            lambda v: get_lines(v, height=H, width=W, cfg=self.cfg.lines)
+            lambda v: get_lines(v, height=H, width=W, cfg=cfg.lines)
         )
         edges = canny_j(image)  # warmup chains
         votes = hough_j(edges)

@@ -4,7 +4,7 @@ The paper's optimization process starts from phase-level wall-time tables;
 this module reproduces that instrument: named phases, block-until-ready
 boundaries, microsecond means over repeats, and percentage-over-total
 reports shaped like the paper's tables.  The analytic FLOP/byte counters
-feed the roofline terms (EXPERIMENTS.md #Roofline) the same way the paper's
+feed the roofline terms (``launch/roofline.py``) the same way the paper's
 cycle counters feed its speedup tables.
 """
 

@@ -1,7 +1,17 @@
-"""Data substrate: synthetic road frames (the paper's camera feed) and a
-deterministic, resumable, shard-aware token pipeline for the LM archs."""
+"""Data substrate: synthetic road frames (the paper's camera feed), the
+scenario engine (procedural road-scene families with analytic ground truth),
+and a deterministic, resumable, shard-aware token pipeline for the LM archs."""
 
 from .images import RoadScene, frame_stream, synthetic_road  # noqa: F401
+from .scenarios import (  # noqa: F401
+    ScenarioFamily,
+    get_family,
+    make_scenario,
+    scenario_batch,
+    scenario_names,
+    scenario_stream,
+    segment_rho_theta,
+)
 from .tokens import (  # noqa: F401
     TokenPipelineConfig,
     TokenStream,

@@ -6,6 +6,10 @@ lane lines with known analytic (rho, theta), optional dashes and noise.
 Because ground truth is known exactly, tests can assert that the detector
 recovers the planted lines — a stronger check than the paper's visual
 comparison (Fig. 4).
+
+This module keeps the seed workload (``synthetic_road``); the full family
+registry — curved, night, glare, rain, occlusion, multi-lane, ... — lives in
+``data/scenarios.py``, which builds on these primitives.
 """
 
 from __future__ import annotations

@@ -74,6 +74,17 @@ def conv2d_gemm(image, masks, *, out_dtype=None, impl=None, **kw):
     )
 
 
+def default_max_edges(n_pix: int) -> int:
+    """Hand-tuned edge-compaction buffer default: 1/16 of the pixel count.
+
+    The single source of truth for the dense-dispatch buffer size — the
+    autotune cap (``repro.core.hough.auto_max_edges``) and the benchmarks
+    reference it so "auto never allocates a larger buffer" stays true if
+    this is ever retuned.
+    """
+    return max(256, n_pix // 16)
+
+
 def hough_vote(xy, weights, trig, *, n_rho, impl=None, compact=False,
                max_edges=None, **kw):
     """Hough voting with optional edge compaction.
@@ -86,8 +97,14 @@ def hough_vote(xy, weights, trig, *, n_rho, impl=None, compact=False,
     """
     impl = resolve_impl(impl)
     if compact:
+        if isinstance(max_edges, str):
+            raise TypeError(
+                "max_edges='auto' is a core-layer knob; resolve it to an "
+                "int before kernel dispatch (repro.core.hough."
+                "resolve_max_edges / auto_max_edges)."
+            )
         if max_edges is None:
-            max_edges = max(256, weights.shape[-1] // 16)
+            max_edges = default_max_edges(weights.shape[-1])
         xy, weights = _compact_edges(xy, weights, max_edges=max_edges)
     if impl == "xla":
         return ref.hough_vote(xy, weights, trig, n_rho=n_rho)

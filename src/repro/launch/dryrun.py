@@ -19,7 +19,8 @@ Per cell this produces, with zero array allocation:
     collective-permute operand sizes; cost_analysis does not report these).
 
 Artifacts are JSON files under ``experiments/dryrun/`` consumed by
-``launch/roofline.py`` and EXPERIMENTS.md.  Already-complete cells are
+``launch/roofline.py`` and the ``benchmarks`` tables (ROADMAP.md tracks
+the open sweep items).  Already-complete cells are
 skipped (incremental reruns), and each cell can run in a fresh subprocess
 (``--subprocess``) so one cell's compile-memory spike cannot kill the whole
 sweep.
@@ -68,8 +69,9 @@ def analytic_bytes_per_device(arch: str, shape_name: str, n_chips: int,
     KV/state cache (sharded over all chips) + O(B x D) activations.  This
     is the quantity TPU serving is sized by, and it sidesteps the CPU
     backend's bf16->f32 scatter legalization that inflates the HLO-derived
-    byte count on decode cells (EXPERIMENTS.md §Roofline, methodology
-    note).  Train/prefill cells use the HLO-derived count instead (dots
+    byte count on decode cells (see the methodology note in
+    ``launch/roofline.py``).  Train/prefill cells use the HLO-derived
+    count instead (dots
     dominate and parse faithfully there).
     """
     cfg = get(arch)

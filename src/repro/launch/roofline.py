@@ -1,4 +1,5 @@
-"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""Roofline analysis over dry-run artifacts (``launch/dryrun.py``;
+methodology summarized in ROADMAP.md and the ``benchmarks`` output).
 
 Per (arch x shape x mesh) cell, from the compiled SPMD program's own
 counters (no wall clock exists on this host — TPU v5e is the target):
@@ -51,7 +52,8 @@ def roofline_terms(record: dict) -> dict:
     # decode cells use the analytic byte count (params+cache read once) —
     # the CPU backend's bf16 scatter legalization inflates the HLO-derived
     # number there; train/prefill use the HLO-derived count (dot-dominated,
-    # parses faithfully).  Methodology note in EXPERIMENTS.md §Roofline.
+    # parses faithfully).  Methodology note in the docstring above and
+    # in launch/dryrun.py.
     mem_bytes = record.get("bytes_analytic_per_device") or 0.0
     if not mem_bytes:
         mem_bytes = record["bytes_per_device"]

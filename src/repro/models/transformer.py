@@ -538,7 +538,8 @@ def loss_fn(params, batch, cfg, *, moe_strategy="ep", aux_coef=0.01,
     The unembedding is the single largest activation of a training step
     (256x4096x202k f32 logits for llama4-scout would be ~3.3 GB/device);
     scanning the loss over sequence chunks caps it at chunk/S of that —
-    the memory-roofline trick recorded in EXPERIMENTS.md §Perf.
+    the memory-roofline trick measured by ``launch/roofline.py`` over
+    ``benchmarks`` dry-run artifacts (see ROADMAP.md).
     """
     x, aux = forward_hidden(params, batch, cfg, moe_strategy=moe_strategy)
     targets = batch["targets"]

@@ -73,8 +73,8 @@ DEFAULT_RULES: AxisRules = {
     # Full-sequence attention activations (B, H, L, hd): heads carry TP
     # when they divide; otherwise the *sequence* does (context-parallel
     # attention — GSPMD all-gathers K/V per shard instead of psumming
-    # (B, H, L, L) score tensors, the whisper/qwen 20/40-head fix measured
-    # in EXPERIMENTS.md §Perf iteration 1).  Dim order (batch, heads,
+    # (B, H, L, L) score tensors, the whisper/qwen 20/40-head fix visible
+    # in the benchmarks/t5_dp_scaling tables).  Dim order (batch, heads,
     # attn_seq, head_dim) encodes the fallback.
     "attn_seq": ("model", None),
 }

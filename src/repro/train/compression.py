@@ -17,7 +17,8 @@ Mechanics per tensor:
 
 The all_gather moves ``P x (n/4 + 4)`` bytes instead of the ~``2n`` of a
 ring all-reduce in f32 — visible in the dry-run HLO as int8 collective
-operands (EXPERIMENTS.md §Perf, collective-bound hillclimb).
+operands (``launch/dryrun.py`` artifacts; ROADMAP.md tracks the
+collective-bound follow-ups).
 """
 
 from __future__ import annotations

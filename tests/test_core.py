@@ -153,6 +153,30 @@ def test_detect_stream_matches_batch():
                                       np.asarray(rb.valid[i]))
 
 
+@pytest.mark.parametrize("max_edges", [None, "auto"])
+def test_detect_stream_uneven_tail_matches_frame_loop(max_edges):
+    """Batch-tail correctness: a batch size that does not divide the frame
+    count (7 frames, batch 3 -> chunks 3/3/1) is bit-exact with the
+    per-frame detect loop on every result field, including with the
+    autotuned compaction buffer resolved per chunk."""
+    frames = [synthetic_road(96, 128, seed=s).image for s in range(7)]
+    det = LineDetector(PipelineConfig(
+        hough=HoughConfig(compact=True, max_edges=max_edges)
+    ))
+    got = list(det.detect_stream(iter(frames), batch_size=3))
+    assert len(got) == 7
+    for f, r in zip(frames, got):
+        ref = det.detect(jnp.asarray(f, jnp.float32))
+        np.testing.assert_array_equal(np.asarray(r.lines),
+                                      np.asarray(ref.lines))
+        np.testing.assert_array_equal(np.asarray(r.valid),
+                                      np.asarray(ref.valid))
+        np.testing.assert_array_equal(np.asarray(r.peaks),
+                                      np.asarray(ref.peaks))
+        np.testing.assert_array_equal(np.asarray(r.edges),
+                                      np.asarray(ref.edges))
+
+
 def test_compact_hough_pipeline_bit_exact(scene):
     """Edge compaction changes the iteration space, not the votes: the
     compacted pipeline's accumulator and detections match the dense path

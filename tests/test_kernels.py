@@ -8,7 +8,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.conv2d_gemm import conv2d_gemm
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.hough_vote import hough_vote
+from repro.kernels.hough_vote import compact_edges, hough_vote
 from repro.kernels.ssd_scan import ssd_scan
 from repro.kernels.tiled_matmul import tiled_matmul
 
@@ -172,6 +172,54 @@ def test_compact_edges_overflow_drops(rng):
     assert cxy.shape == (16, 3)
     np.testing.assert_array_equal(np.asarray(cw), np.ones(16, np.float32))
     np.testing.assert_array_equal(np.asarray(cxy), np.asarray(xy)[:16])
+
+
+# Deterministic twins of the hypothesis properties in test_properties.py
+# (that module is skipped wholesale when hypothesis isn't installed, so the
+# invariants the compaction fast path rests on are pinned here too).
+
+
+@pytest.mark.parametrize("seed,density,max_edges",
+                         [(0, 1, 16), (1, 5, 64), (2, 9, 64), (3, 3, 96)])
+def test_compact_edges_stable_prefix(seed, density, max_edges):
+    """Compaction output is exactly the first max_edges edge rows in
+    original index order (no permutation, no fabrication), zero-padded."""
+    rng2 = np.random.default_rng(seed)
+    n_pix = 128
+    w = (rng2.uniform(size=n_pix) < density / 10.0).astype(np.float32)
+    xy = np.stack([np.arange(n_pix), np.arange(n_pix) * 2,
+                   np.ones(n_pix)], axis=1).astype(np.float32)
+    idx = np.flatnonzero(w > 0)[:max_edges]
+    want_xy = np.zeros((max_edges, 3), np.float32)
+    want_w = np.zeros(max_edges, np.float32)
+    want_xy[: len(idx)] = xy[idx]
+    want_w[: len(idx)] = w[idx]
+    for impl in (compact_edges, ref.compact_edges):
+        cxy, cw = impl(jnp.asarray(xy), jnp.asarray(w), max_edges=max_edges)
+        np.testing.assert_array_equal(np.asarray(cxy), want_xy)
+        np.testing.assert_array_equal(np.asarray(cw), want_w)
+
+
+@pytest.mark.parametrize("seed,density", [(0, 1), (1, 3), (2, 6)])
+def test_compacted_vote_bit_exact_when_buffer_fits(seed, density):
+    """n_edges <= max_edges => compacted accumulator == dense, bit-exact."""
+    from repro.kernels import ops
+    rng2 = np.random.default_rng(seed)
+    n_pix, n_theta, n_rho = 300, 45, 80
+    xy = jnp.asarray(
+        np.stack([rng2.uniform(0, 30, n_pix), rng2.uniform(0, 30, n_pix),
+                  np.ones(n_pix)], axis=1).astype(np.float32))
+    w = jnp.asarray(
+        (rng2.uniform(size=n_pix) < density / 10.0).astype(np.float32))
+    theta = np.arange(n_theta) * (np.pi / n_theta)
+    trig = jnp.asarray(np.stack([
+        np.cos(theta), np.sin(theta), np.full_like(theta, 43.0),
+    ]).astype(np.float32))
+    max_edges = max(8, int(np.asarray(w > 0).sum()))
+    dense = ops.hough_vote(xy, w, trig, n_rho=n_rho, impl="xla")
+    compact = ops.hough_vote(xy, w, trig, n_rho=n_rho, impl="xla",
+                             compact=True, max_edges=max_edges)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(compact))
 
 
 @pytest.mark.parametrize("gqa", [1, 2, 4])

@@ -48,6 +48,64 @@ def test_hough_vote_conservation(seed, density):
 
 
 @settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 9),
+       st.sampled_from([16, 64, 96]))
+def test_compact_edges_is_prefix_of_edge_indices(seed, density, max_edges):
+    """compact_edges is a *stable* compaction: its output is exactly the
+    first ``max_edges`` edge rows in original index order (no permutation,
+    no fabrication), zero-padded past the edge count — for both the
+    prefix-sum-scatter kernel and the argsort oracle."""
+    from repro.kernels.hough_vote import compact_edges as compact_kernel
+
+    rng = np.random.default_rng(seed)
+    n_pix = 128
+    w = (rng.uniform(size=n_pix) < density / 10.0).astype(np.float32)
+    xy = np.stack([np.arange(n_pix), np.arange(n_pix) * 2,
+                   np.ones(n_pix)], axis=1).astype(np.float32)
+    idx = np.flatnonzero(w > 0)[:max_edges]
+    want_xy = np.zeros((max_edges, 3), np.float32)
+    want_w = np.zeros(max_edges, np.float32)
+    want_xy[: len(idx)] = xy[idx]
+    want_w[: len(idx)] = w[idx]
+    for impl in (compact_kernel, ref.compact_edges):
+        cxy, cw = impl(jnp.asarray(xy), jnp.asarray(w), max_edges=max_edges)
+        np.testing.assert_array_equal(np.asarray(cxy), want_xy)
+        np.testing.assert_array_equal(np.asarray(cw), want_w)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 6))
+def test_compacted_vote_bit_exact_when_buffer_fits(seed, density):
+    """Whenever n_edges <= max_edges, the compacted accumulator equals the
+    dense one bit-for-bit (vote sums are small integers, exact in f32)."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(seed)
+    H, W = 24, 32
+    img = (rng.uniform(size=(H, W)) < density / 20.0) * 255.0
+    cfg = HoughConfig(n_theta=45)
+    n_edges = int((img >= cfg.edge_threshold).sum())
+    max_edges = max(8, n_edges)  # buffer always fits
+
+    diag = math.hypot(H, W)
+    theta = np.arange(cfg.n_theta) * (math.pi / cfg.n_theta)
+    trig = np.stack([np.cos(theta), np.sin(theta),
+                     np.full_like(theta, diag)]).astype(np.float32)
+    jj, ii = np.meshgrid(np.arange(W), np.arange(H))
+    xy = np.stack([jj.ravel(), ii.ravel(), np.ones(H * W)],
+                  axis=1).astype(np.float32)
+    weights = (img.ravel() >= cfg.edge_threshold).astype(np.float32)
+    n_rho = int(2 * diag) + 1
+
+    dense = ops.hough_vote(jnp.asarray(xy), jnp.asarray(weights),
+                           jnp.asarray(trig), n_rho=n_rho, impl="xla")
+    compact = ops.hough_vote(jnp.asarray(xy), jnp.asarray(weights),
+                             jnp.asarray(trig), n_rho=n_rho, impl="xla",
+                             compact=True, max_edges=max_edges)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(compact))
+
+
+@settings(**SETTINGS)
 @given(st.integers(0, 2 ** 31 - 1))
 def test_conv_linearity(seed):
     """conv(a*x + b*y) == a*conv(x) + b*conv(y) (it IS a GEMM)."""

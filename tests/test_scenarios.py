@@ -1,0 +1,253 @@
+"""Scenario-engine detection-quality regression tests.
+
+The accuracy net every perf PR must pass: for each registered road-scene
+family the detector must recover the planted lines within (drho <= 4 px,
+dtheta <= 3 deg), hold the family's F1 floor, and do so identically across
+the dense, compacted, and autotuned (``max_edges="auto"``) execution paths.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CannyConfig, HoughConfig, LineDetector, PipelineConfig,
+    aggregate_scores, auto_max_edges, canny, estimate_edge_count,
+    score_batch, score_frame,
+)
+from repro.core.metrics import match_peaks, rho_theta_residual
+from repro.data import (
+    get_family, make_scenario, scenario_batch, scenario_names,
+    scenario_stream, segment_rho_theta,
+)
+
+pytestmark = pytest.mark.scenarios
+
+FAMILIES = scenario_names()
+
+# The three execution paths the quality bar covers: dense voting, the
+# compacted fast path (hand-tuned buffer), and the autotuned buffer.
+VARIANTS = {
+    "dense": HoughConfig(compact=False),
+    "compact": HoughConfig(compact=True),
+    "auto": HoughConfig(compact=True, max_edges="auto"),
+}
+
+
+def _detector(variant: str) -> LineDetector:
+    return LineDetector(PipelineConfig(hough=VARIANTS[variant]))
+
+
+# --- geometry / registry sanity -------------------------------------------
+
+
+def test_registry_has_required_families():
+    """The engine covers the scenario classes the ISSUE demands (>= 8)."""
+    assert len(FAMILIES) >= 8
+    for required in ("straight", "converging", "dashed", "curved", "night",
+                     "glare", "rain", "occlusion", "multilane"):
+        assert required in FAMILIES
+
+
+def test_segment_rho_theta_roundtrip():
+    """Planted normal forms satisfy x cos(t) + y sin(t) = rho at both
+    endpoints, with theta canonicalized into [0, pi)."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        x0, y0, x1, y1 = rng.uniform(-100, 400, 4)
+        if abs(x1 - x0) + abs(y1 - y0) < 1e-3:
+            continue
+        rho, theta = segment_rho_theta(x0, y0, x1, y1)
+        assert 0.0 <= theta < math.pi
+        for x, y in ((x0, y0), (x1, y1)):
+            assert abs(x * math.cos(theta) + y * math.sin(theta) - rho) < 1e-6
+
+
+def test_scenarios_are_deterministic_and_distinct():
+    for name in FAMILIES:
+        a = make_scenario(name, 96, 128, seed=5)
+        b = make_scenario(name, 96, 128, seed=5)
+        np.testing.assert_array_equal(a.image, b.image)
+        np.testing.assert_array_equal(a.lines_rho_theta, b.lines_rho_theta)
+        c = make_scenario(name, 96, 128, seed=6)
+        assert not np.array_equal(a.image, c.image)
+
+
+# --- metric self-tests ------------------------------------------------------
+
+
+def test_metrics_wraparound_identity():
+    """(rho, theta) and (-rho, theta + pi) are the same line."""
+    drho, dth = rho_theta_residual((50.0, 0.02), (-50.0, math.pi - 0.01))
+    assert drho < 1e-6 and dth < 0.05
+
+
+def test_metrics_matching_is_one_to_one():
+    truth = np.array([[100.0, 1.0], [200.0, 2.0]])
+    det = np.array([[101.0, 1.01], [100.5, 1.0], [300.0, 0.5]])
+    matches = match_peaks(det, truth)
+    assert len(matches) == 1  # only one detection may claim truth 0
+    s = score_frame(det, np.ones(3, bool), truth)
+    assert s.tp == 1 and s.fn == 1
+    assert s.dup == 1   # the second near-duplicate of truth 0
+    assert s.fp == 1    # the (300, 0.5) stray
+
+
+def test_metrics_empty_cases():
+    s = score_frame(np.zeros((0, 2)), np.zeros(0, bool), np.zeros((0, 2)))
+    assert s.f1 == 1.0 and s.perfect
+    s = score_frame(np.array([[1.0, 1.0]]), np.ones(1, bool),
+                    np.zeros((0, 2)))
+    assert s.fp == 1 and s.precision == 0.0
+
+
+# --- the regression net -----------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+@pytest.mark.parametrize("name", FAMILIES)
+def test_family_recovers_planted_lines(name, variant):
+    """Strict per-line recovery at small resolution: every planted line is
+    matched within (4 px, 3 deg) on each of 4 seeds, on every execution
+    path (dense / compact / autotuned buffer)."""
+    det = _detector(variant)
+    for seed in range(4):
+        sc = make_scenario(name, 120, 160, seed=seed)
+        res = det.detect(jnp.asarray(sc.image, jnp.float32))
+        s = score_frame(res.peaks, res.valid, sc.lines_rho_theta)
+        assert s.fn == 0, (
+            f"{name} seed {seed} [{variant}]: "
+            f"{s.fn} of {len(sc.lines_rho_theta)} planted lines missed"
+        )
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_family_f1_floor_batch(name):
+    """Micro-averaged F1 over an 8-seed batch at 240x320 stays above the
+    family's registered floor, with tight localization on the matches."""
+    imgs, truths = scenario_batch([name] * 8, 240, 320, seed=0)
+    det = _detector("compact")
+    res = det.detect_batch(jnp.asarray(imgs))
+    agg = aggregate_scores(score_batch(res.peaks, res.valid, truths))
+    floor = get_family(name).f1_floor
+    assert agg["f1"] >= floor, (name, agg)
+    if agg["tp"]:
+        assert agg["mean_rho_err"] <= 4.0
+        assert agg["mean_theta_err_deg"] <= 3.0
+
+
+def test_empty_scene_has_no_detections():
+    """False-positive control: a markings-free frame yields zero valid
+    peaks (the relative threshold is floored, not free-falling)."""
+    det = _detector("dense")
+    for seed in range(4):
+        sc = make_scenario("empty", 240, 320, seed=seed)
+        res = det.detect(jnp.asarray(sc.image, jnp.float32))
+        assert int(np.asarray(res.valid).sum()) == 0
+
+
+# --- autotuned max_edges ----------------------------------------------------
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_estimator_upper_bounds_edge_count(name):
+    """The downsampled gradient estimate never under-sizes the buffer:
+    estimate >= actual Canny edge count on every family and seed."""
+    cfg = CannyConfig()
+    for seed in range(4):
+        sc = make_scenario(name, 120, 160, seed=seed)
+        edges = canny(jnp.asarray(sc.image, jnp.float32), cfg)
+        actual = int(np.asarray(edges >= 250).sum())
+        est = estimate_edge_count(sc.image, cfg)
+        assert est >= actual, (name, seed, est, actual)
+
+
+def test_auto_never_exceeds_hand_tuned_buffer():
+    """auto_max_edges caps at the dense-dispatch default (the hand-tuned
+    buffer), and bucketing keeps nearby workloads on one jit key."""
+    cap = max(256, (240 * 320) // 16)
+    assert auto_max_edges(10 ** 9, 240, 320) == cap
+    assert auto_max_edges(100, 240, 320) == 512
+    assert auto_max_edges(513, 240, 320) == 1024
+    for name in FAMILIES:
+        det = _detector("auto")
+        sc = make_scenario(name, 240, 320, seed=0)
+        got = det.resolve_config(
+            jnp.asarray(sc.image, jnp.float32)
+        ).hough.max_edges
+        assert isinstance(got, int) and 512 <= got <= cap, (name, got)
+
+
+@pytest.mark.parametrize("name", ("converging", "rain", "multilane"))
+def test_auto_bit_exact_with_dense(name):
+    """Autotuning never drops a planted line: the auto-sized compacted
+    pipeline's detections equal the dense path bit-for-bit."""
+    sc = make_scenario(name, 240, 320, seed=1)
+    img = jnp.asarray(sc.image, jnp.float32)
+    rd = _detector("dense").detect(img)
+    ra = _detector("auto").detect(img)
+    np.testing.assert_array_equal(np.asarray(rd.lines), np.asarray(ra.lines))
+    np.testing.assert_array_equal(np.asarray(rd.valid), np.asarray(ra.valid))
+    np.testing.assert_array_equal(np.asarray(rd.peaks), np.asarray(ra.peaks))
+
+
+def test_auto_on_heterogeneous_batch_sizes_for_densest_frame():
+    """A mixed-family batch resolves ONE buffer >= every per-frame need,
+    and the batched result matches the per-frame loop bit-exactly."""
+    names = ["empty", "rain", "straight", "multilane"]
+    imgs, _ = scenario_batch(names, 120, 160, seed=0)
+    det = _detector("auto")
+    batch_cfg = det.resolve_config(jnp.asarray(imgs))
+    per_frame = [
+        det.resolve_config(jnp.asarray(imgs[i])).hough.max_edges
+        for i in range(len(names))
+    ]
+    assert batch_cfg.hough.max_edges == max(per_frame)
+    rb = det.detect_batch(jnp.asarray(imgs))
+    for i in range(len(names)):
+        r = det.detect(jnp.asarray(imgs[i]))
+        np.testing.assert_array_equal(np.asarray(rb.lines[i]),
+                                      np.asarray(r.lines))
+        np.testing.assert_array_equal(np.asarray(rb.valid[i]),
+                                      np.asarray(r.valid))
+
+
+def test_auto_requires_concrete_input_under_jit():
+    import jax
+    det = _detector("auto")
+    with pytest.raises((ValueError, jax.errors.TracerArrayConversionError)):
+        jax.jit(det.detect)(jnp.zeros((32, 32), jnp.float32))
+
+
+def test_auto_resolution_in_hough_transform():
+    """hough_transform resolves "auto" from a concrete edge map via the
+    exact edge count (no estimator needed post-Canny)."""
+    from repro.core import hough_transform
+    sc = make_scenario("converging", 120, 160, seed=0)
+    edges = canny(jnp.asarray(sc.image, jnp.float32), CannyConfig())
+    dense = hough_transform(edges, HoughConfig())
+    auto = hough_transform(
+        edges, HoughConfig(compact=True, max_edges="auto")
+    )
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(auto))
+
+
+# --- heterogeneous streaming ------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", ("compact", "auto"))
+def test_mixed_scenario_stream_matches_per_frame(variant):
+    """detect_stream over a rotating-family stream (uneven final batch)
+    yields exactly the per-frame loop's results, in order."""
+    frames = [s.image for s in scenario_stream("mixed", 5, 96, 128, seed=2)]
+    det = _detector(variant)
+    got = list(det.detect_stream(iter(frames), batch_size=2))
+    assert len(got) == 5
+    for f, r in zip(frames, got):
+        ref = det.detect(jnp.asarray(f, jnp.float32))
+        np.testing.assert_array_equal(np.asarray(r.lines),
+                                      np.asarray(ref.lines))
+        np.testing.assert_array_equal(np.asarray(r.valid),
+                                      np.asarray(ref.valid))
