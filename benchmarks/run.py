@@ -6,7 +6,11 @@ bench run is machine-readable (the throughput benchmark writes its own
 ``--scenarios`` the detection-quality suite also runs and emits
 ``BENCH_scenarios.json`` (see ``benchmarks/scenario_suite.py``).
 
+With ``--service`` the mixed-resolution detection-service benchmark runs
+too and emits ``BENCH_service.json`` (see ``benchmarks/service_suite.py``).
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--scenarios]
+    [--service]
 """
 
 from __future__ import annotations
@@ -57,6 +61,35 @@ def main() -> None:
             )
         else:  # suite aborted before writing — treat as a failed contract
             summary["scenario_autotune_contract_ok"] = False
+
+    if "--service" in sys.argv:
+        from . import service_suite
+        saved_argv = sys.argv
+        sys.argv = [saved_argv[0]] + (["--quick"] if quick else [])
+        import os
+        service_ok = True
+        try:
+            service_suite.main()
+        except SystemExit:
+            # the suite writes its JSON before exiting (same contract as
+            # --scenarios): read the real bars instead of guessing which
+            # one failed
+            service_ok = False
+        finally:
+            sys.argv = saved_argv
+        if os.path.exists("BENCH_service.json"):
+            with open("BENCH_service.json") as f:
+                sv = json.load(f)
+            summary["service_mixed_ge_batch8"] = sv["mixed_ge_batch8"]
+            summary["service_holds_batch8"] = sv["service_holds_batch8"]
+            summary["service_speedup_vs_naive"] = sv["speedup_vs_naive"]
+        else:  # suite aborted before writing
+            summary["service_mixed_ge_batch8"] = False
+            summary["service_holds_batch8"] = False
+        summary["service_contract_ok"] = service_ok and (
+            summary["service_mixed_ge_batch8"]
+            and summary["service_holds_batch8"]
+        )
 
     t1 = table1_full_pipeline()
     t2 = table2_elided()
@@ -112,7 +145,8 @@ def main() -> None:
     with open(path, "w") as f:
         json.dump(summary, f, indent=2, default=float)
     print(f"\nwrote {path}")
-    if not summary.get("scenario_autotune_contract_ok", True):
+    if not (summary.get("scenario_autotune_contract_ok", True)
+            and summary.get("service_contract_ok", True)):
         raise SystemExit(1)  # CI gates on the exit code, not the JSON
 
 

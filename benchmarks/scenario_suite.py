@@ -14,8 +14,10 @@ Two detector variants are compared per family:
 
   * ``hand``  — the PR-1 compacted fast path with the hand-tuned default
     buffer (``max_edges=None`` => H*W/16);
-  * ``auto``  — ``HoughConfig(max_edges="auto")``: the edge-density
-    estimator sizes the compaction buffer per batch.
+  * ``auto``  — ``HoughConfig(max_edges="auto")``: the device-side autotune
+    (``core/plan.py``) picks a compaction tier per batch from the exact
+    on-device edge count; the ``buffer`` column reports the host-visible
+    estimator tier (``resolve_config``), an upper bound on what runs.
 
 The suite asserts the ROADMAP autotune contract — on every family, ``auto``
 matches ``hand`` F1 exactly while allocating a no-larger buffer — and

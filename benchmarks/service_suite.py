@@ -1,0 +1,246 @@
+"""Mixed-resolution detection-service benchmark -> ``BENCH_service.json``.
+
+Measures the continuous-batching ``DetectionService`` (``serve/detection.py``)
+on the traffic shape the ROADMAP north star cares about — a queue of
+requests carrying frames of heterogeneous resolutions — against two
+references:
+
+  * ``naive``   — the pre-service deployment: a per-frame ``detect`` loop
+    at each request's native resolution (no batching, no buckets);
+  * ``batch8``  — the PR-1 single-resolution fast path: ``detect_batch``
+    over full batches of 8 at the bucket resolution.  The acceptance bar is
+    that the *service*, fed single-bucket traffic at ``batch_size=8``,
+    sustains at least this throughput — slotting/padding/double-buffering
+    must not eat the batching win.
+
+Reported per workload: requests/s, mean ms/request, and p50/p99 request
+latency (submit -> result ready).  Latencies are measured under
+drip-feed submission (requests arrive while the service runs), so they
+reflect queueing + batching delay, not just compute.
+
+Usage: PYTHONPATH=src python -m benchmarks.service_suite [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HoughConfig, LineDetector, PipelineConfig
+from repro.data import make_scenario, scenario_names
+from repro.serve.detection import DetectionRequest, DetectionService
+
+from .common import print_table
+
+# The mixed-resolution ladder: requests cycle through these shapes (all
+# land in the (120,160) or (240,320) buckets of DEFAULT_BUCKETS).
+MIXED_SHAPES = ((120, 160), (240, 320), (96, 128), (240, 320), (180, 240))
+BUCKETS = ((120, 160), (240, 320))
+
+
+def _cfg() -> PipelineConfig:
+    return PipelineConfig(
+        hough=HoughConfig(compact=True, max_edges="auto")
+    )
+
+
+def make_requests(n: int, shapes) -> list[np.ndarray]:
+    fams = scenario_names()
+    return [
+        make_scenario(
+            fams[i % len(fams)], *shapes[i % len(shapes)], seed=i
+        ).image
+        for i in range(n)
+    ]
+
+
+def percentile(xs: list[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p))
+
+
+def run_service(frames: list[np.ndarray], *, batch_size: int,
+                drip: int) -> dict:
+    """Drive a fresh service; drip-feed ``drip`` requests per step so the
+    queue behaves like live traffic rather than one pre-loaded burst."""
+    svc = DetectionService(_cfg(), buckets=BUCKETS, batch_size=batch_size)
+    # warm every bucket's plan outside the timed window (compile cost is
+    # a one-time property of the plan, not of the traffic), then zero the
+    # counters so the JSON reports the timed workload only
+    for shape in BUCKETS:
+        svc.detect_many([np.zeros(shape, np.float32)] * batch_size)
+    svc.dispatches = svc.completed = 0
+    reqs = [DetectionRequest(uid=i, frame=f) for i, f in enumerate(frames)]
+    t0 = time.perf_counter()
+    pending = list(reqs)
+    while pending:  # live traffic: a few arrivals between engine steps
+        for r in pending[:drip]:
+            svc.submit(r)
+        pending = pending[drip:]
+        svc.step()
+    svc.run()  # traffic over: flush partial grids and drain in-flight
+    dt = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    lats = [r.latency_s * 1e3 for r in reqs]
+    return {
+        "n_requests": len(reqs),
+        "wall_s": dt,
+        "requests_per_s": len(reqs) / dt,
+        "ms_per_request": dt / len(reqs) * 1e3,
+        "latency_ms_p50": percentile(lats, 50),
+        "latency_ms_p99": percentile(lats, 99),
+        "dispatches": svc.dispatches,
+    }
+
+
+def run_naive(frames: list[np.ndarray]) -> dict:
+    """The pre-service loop: one unbatched detect per request at native
+    resolution (per-resolution plans still cached and warm)."""
+    det = LineDetector(_cfg())
+    shapes = sorted({f.shape[:2] for f in frames})
+    for shape in shapes:  # warm per-shape compiles
+        jax.block_until_ready(
+            det.detect(jnp.zeros(shape, jnp.float32)).lines
+        )
+    t0 = time.perf_counter()
+    last = None
+    for f in frames:
+        last = det.detect(jnp.asarray(f, jnp.float32))
+    jax.block_until_ready(last.lines)
+    dt = time.perf_counter() - t0
+    return {
+        "n_requests": len(frames),
+        "wall_s": dt,
+        "requests_per_s": len(frames) / dt,
+        "ms_per_request": dt / len(frames) * 1e3,
+    }
+
+
+def run_batch8(shape: tuple[int, int], n: int) -> dict:
+    """PR-1 reference: full detect_batch(8) dispatches at one resolution."""
+    det = LineDetector(_cfg())
+    frames = make_requests(n, (shape,))
+    imgs = jnp.asarray(np.stack([f.astype(np.float32) for f in frames]))
+    jax.block_until_ready(det.detect_batch(imgs[:8]).lines)  # warm
+    t0 = time.perf_counter()
+    last = None
+    for k in range(0, n, 8):
+        last = det.detect_batch(imgs[k:k + 8])
+    jax.block_until_ready(last.lines)
+    dt = time.perf_counter() - t0
+    return {
+        "n_requests": n,
+        "wall_s": dt,
+        "requests_per_s": n / dt,
+        "ms_per_request": dt / n * 1e3,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer requests per workload")
+    ap.add_argument("--out", default="BENCH_service.json")
+    args = ap.parse_args()
+
+    n_mixed = 20 if args.quick else 60
+    n_single = 16 if args.quick else 48
+    repeats = 2 if args.quick else 3
+
+    # Interleave repeats of every workload and keep each one's best run:
+    # min-wall is robust to the CPU contention spikes a shared host shows,
+    # and interleaving keeps A/B comparisons honest under drifting load.
+    mixed_frames = make_requests(n_mixed, MIXED_SHAPES)
+    single_frames = make_requests(n_single, ((240, 320),))
+    best: dict[str, dict] = {}
+    for _ in range(repeats):
+        for key, fn in (
+            # 1) mixed-resolution traffic through the service (the new
+            #    capability), 2) the naive per-frame loop on the same
+            #    traffic, 3) single-bucket service at batch 8, 4) the raw
+            #    batch-8 fast path it must sustain
+            ("mixed", lambda: run_service(mixed_frames, batch_size=4,
+                                          drip=3)),
+            ("naive", lambda: run_naive(mixed_frames)),
+            ("svc8", lambda: run_service(single_frames, batch_size=8,
+                                         drip=8)),
+            ("raw8", lambda: run_batch8((240, 320), n_single)),
+        ):
+            r = fn()
+            if key not in best or r["wall_s"] < best[key]["wall_s"]:
+                best[key] = r
+    mixed, naive, svc8, raw8 = (
+        best["mixed"], best["naive"], best["svc8"], best["raw8"]
+    )
+
+    rows = [
+        ["service mixed (b=4)", mixed["n_requests"],
+         f"{mixed['requests_per_s']:.2f}", f"{mixed['ms_per_request']:.1f}",
+         f"{mixed['latency_ms_p50']:.1f}", f"{mixed['latency_ms_p99']:.1f}"],
+        ["naive loop (mixed)", naive["n_requests"],
+         f"{naive['requests_per_s']:.2f}", f"{naive['ms_per_request']:.1f}",
+         "-", "-"],
+        ["service 240x320 (b=8)", svc8["n_requests"],
+         f"{svc8['requests_per_s']:.2f}", f"{svc8['ms_per_request']:.1f}",
+         f"{svc8['latency_ms_p50']:.1f}", f"{svc8['latency_ms_p99']:.1f}"],
+        ["detect_batch(8) 240x320", raw8["n_requests"],
+         f"{raw8['requests_per_s']:.2f}", f"{raw8['ms_per_request']:.1f}",
+         "-", "-"],
+    ]
+    print_table(
+        "detection service (mixed-resolution continuous batching)",
+        ["workload", "reqs", "req/s", "ms/req", "p50 ms", "p99 ms"],
+        rows,
+    )
+
+    speedup_vs_naive = mixed["requests_per_s"] / naive["requests_per_s"]
+    # Two gates, both required.  mixed_ge_batch8 is the PR acceptance bar
+    # (mixed traffic sustains the batch-8 single-res path) but mixed
+    # requests are partly cheaper than the 240x320 reference, so the
+    # same-cost regression guard is service_holds_batch8: single-bucket
+    # service vs the raw batch-8 loop, 5% tolerance for slot/padding
+    # overhead.  speedup_vs_naive is recorded, not gated — on CPU-bound
+    # hosts batching buys nothing per frame, so the naive loop can win
+    # wall-clock there; the service's batching win needs an accelerator.
+    mixed_ge_batch8 = (
+        mixed["requests_per_s"] >= raw8["requests_per_s"]
+    )
+    service_holds_batch8 = (
+        svc8["requests_per_s"] >= raw8["requests_per_s"] * 0.95
+    )
+    print(f"\nmixed service vs naive loop: {speedup_vs_naive:.2f}x")
+    print(f"mixed service vs batch-8 single-res path: "
+          f"{mixed['requests_per_s']:.2f} vs {raw8['requests_per_s']:.2f} "
+          f"req/s -> {'OK' if mixed_ge_batch8 else 'FAIL'}")
+    print(f"service(b=8) vs raw batch-8 path within bucket: "
+          f"{svc8['requests_per_s']:.2f} vs {raw8['requests_per_s']:.2f} "
+          f"req/s -> {'OK' if service_holds_batch8 else 'REGRESSION'}")
+
+    out = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "quick": args.quick,
+            "buckets": [list(b) for b in BUCKETS],
+            "mixed_shapes": [list(s) for s in MIXED_SHAPES],
+        },
+        "service_mixed": mixed,
+        "naive_mixed": naive,
+        "service_single_b8": svc8,
+        "raw_batch8": raw8,
+        "speedup_vs_naive": speedup_vs_naive,
+        "mixed_ge_batch8": mixed_ge_batch8,
+        "service_holds_batch8": service_holds_batch8,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, default=float)
+    print(f"wrote {args.out}")
+    if not (mixed_ge_batch8 and service_holds_batch8):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -62,24 +62,14 @@ def main():
         )
     ))
     if args.auto_max_edges:
+        from repro.core import max_edge_tiers
         from repro.kernels.ops import default_max_edges
-        # Resolve ONCE from a probe covering every family in the stream
-        # and pin the detector to that buffer: per-chunk re-resolution on
-        # a mixed stream would hop max_edges buckets and recompile inside
-        # the timed window.
-        probe_n = (len(scenario_names()) if args.scenario == "mixed"
-                   else args.batch)
-        # same seed as the timed stream below, so the probe sees the same
-        # frames (mixed: one frame of every family) the stream starts with
-        probe = jnp.asarray(
-            [s.image for s in scenario_stream(args.scenario, probe_n,
-                                              args.height, args.width,
-                                              seed=2)],
-            jnp.float32,
-        )
-        det = LineDetector(det.resolve_config(probe))
-        buf = det.cfg.hough.max_edges
-        print(f"autotuned compaction buffer: max_edges={buf} "
+        # No probe/pinning needed: the detector's plan resolves "auto" ON
+        # THE DEVICE — each chunk's edge count picks a compaction tier
+        # inside the compiled program (core/plan.py), so a mixed stream
+        # never re-resolves or recompiles mid-flight.
+        tiers = max_edge_tiers(args.height, args.width)
+        print(f"device-side autotune tiers: max_edges in {tiers} "
               f"(hand-tuned default "
               f"{default_max_edges(args.height * args.width)})")
 

@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""CI detection-quality gate: per-family F1 must not regress.
+
+Compares the per-family F1 of a fresh ``BENCH_scenarios.json`` (written by
+``benchmarks/scenario_suite.py``) against the committed baseline
+``benchmarks/baselines/f1_baseline.json`` and exits nonzero on any
+regression, so a perf PR that trades accuracy for speed fails CI instead of
+landing silently.  The scenario generators and the detector are
+deterministic, so a genuine improvement shows up as an exact F1 increase —
+record it with ``--update`` (review the diff like any other baseline bump).
+
+Checked per family (batch-8 ``auto`` rows — the deployment configuration):
+  * F1 >= baseline F1 - tolerance (default 0.0: bit-deterministic suite),
+  * F1 >= the family's registered floor (double-checks the suite's own bar).
+
+Usage:
+  PYTHONPATH=src python scripts/check_f1.py [--bench BENCH_scenarios.json]
+      [--baseline benchmarks/baselines/f1_baseline.json]
+      [--tolerance 0.0] [--update]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def batch8_auto_f1(bench: dict) -> dict[str, dict]:
+    """{family: {"f1": ..., "f1_floor": ...}} from the suite's rows."""
+    out = {}
+    for r in bench["rows"]:
+        if r["mode"] == "auto" and r["batch"] == 8:
+            out[r["scenario"]] = {
+                "f1": float(r["f1"]), "f1_floor": float(r["f1_floor"]),
+            }
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="BENCH_scenarios.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/f1_baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.0,
+                    help="allowed F1 drop before failing (default: none)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current bench run")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.bench):
+        print(f"check_f1: {args.bench} not found — run "
+              f"`python -m benchmarks.scenario_suite` first", file=sys.stderr)
+        return 2
+    with open(args.bench) as f:
+        current = batch8_auto_f1(json.load(f))
+
+    if args.update:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=2, sort_keys=True)
+        print(f"check_f1: wrote baseline for {len(current)} families "
+              f"-> {args.baseline}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"check_f1: no baseline at {args.baseline}; create one with "
+              f"--update", file=sys.stderr)
+        return 2
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures, new_families = [], []
+    for name, base in sorted(baseline.items()):
+        if name not in current:
+            failures.append(f"{name}: family missing from bench run")
+            continue
+        cur = current[name]
+        if cur["f1"] < base["f1"] - args.tolerance:
+            failures.append(
+                f"{name}: F1 {cur['f1']:.4f} < baseline {base['f1']:.4f}"
+            )
+        if cur["f1"] < cur["f1_floor"]:
+            failures.append(
+                f"{name}: F1 {cur['f1']:.4f} below registered floor "
+                f"{cur['f1_floor']:.2f}"
+            )
+    new_families = sorted(set(current) - set(baseline))
+    if new_families:
+        print(f"check_f1: families without baseline (add with --update): "
+              f"{', '.join(new_families)}")
+
+    if failures:
+        print("check_f1: FAIL")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print(f"check_f1: OK — {len(baseline)} families at or above baseline"
+          + (f" (tolerance {args.tolerance})" if args.tolerance else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

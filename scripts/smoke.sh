@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Fast CI smoke: quick paper-table benches + the non-slow test suite.
+# Fast CI smoke: quick paper-table benches + the non-slow test suite +
+# the detection-quality regression gate.
 # The slow marker (pytest.ini) excludes the multi-device subprocess and
 # convergence tests; the full tier-1 sweep is `python -m pytest -q`.
 set -euo pipefail
@@ -10,4 +11,11 @@ python -m benchmarks.run --quick
 # fast scenario subset first: the detection-quality net fails loudly and
 # early if a change regresses accuracy on any road-scene family
 python -m pytest -q -m "scenarios and not slow" -x
-python -m pytest -q -m "not slow and not scenarios"
+# serving layer next: plan resolution + the continuous-batching detection
+# service (pytest.ini marker `serve`)
+python -m pytest -q -m "serve and not slow" -x
+python -m pytest -q -m "not slow and not scenarios and not serve"
+# CI F1 gate: regenerate the scenario suite and compare per-family F1
+# against the committed baseline (benchmarks/baselines/f1_baseline.json)
+python -m benchmarks.scenario_suite --quick
+python scripts/check_f1.py

@@ -8,12 +8,16 @@ placement planning as first-class features.
 
 from .canny import (  # noqa: F401
     GAUSS_5x5, SOBEL_X, SOBEL_Y, CannyConfig, canny, estimate_edge_count,
+    estimate_edge_count_device,
 )
 from .hough import (  # noqa: F401
     HoughConfig, auto_max_edges, hough_paper_loop, hough_transform,
-    resolve_max_edges, rho_bins,
+    hough_transform_tiered, max_edge_tiers, resolve_max_edges, rho_bins,
 )
 from .lines import LinesConfig, get_lines, render_lines  # noqa: F401
+from .plan import (  # noqa: F401
+    DetectionPlan, PlanCache, batch_bucket, load_frame, resolve_static,
+)
 from .metrics import (  # noqa: F401
     DetectionScore, aggregate_scores, match_peaks, score_batch, score_frame,
 )

@@ -231,31 +231,55 @@ def canny(image: jax.Array, cfg: CannyConfig = CannyConfig()) -> jax.Array:
 canny_jit = jax.jit(canny, static_argnames=("cfg",))
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "stride", "margin"))
+def estimate_edge_count_device(image: jax.Array,
+                               cfg: CannyConfig = CannyConfig(), *,
+                               stride: int = 2, margin: float = 2.5
+                               ) -> jax.Array:
+    """Device-side downsampled-gradient edge-count bound (int32 scalar).
+
+    The traced body of :func:`estimate_edge_count`: the image is subsampled
+    by ``stride``, finite differences stand in for Sobel-of-Gaussian
+    (``kernels.ops.grad_hits``), and coarse hits are scaled by
+    ``stride * margin`` into an upper bound on the post-NMS Canny edge
+    count.  Runs entirely on the device; batches reduce to the max
+    per-frame estimate.  This pre-Canny estimate backs the legacy host
+    resolver (``LineDetector.resolve_config`` — one readback, outside any
+    hot loop); the plan path doesn't need it, because its jitted body has
+    the actual edge map and tier-dispatches on the exact device-side count
+    (``core.hough.hough_transform_tiered``).  ``tests/test_scenarios.py``
+    validates the bound (estimate >= actual edge count) on every family.
+    """
+    # low/2, floored at 20: contrast below that never survives the double
+    # threshold, and 20 sits >3 sigma above asphalt-texture differences so
+    # the count tracks strokes/speckle, not ground-plane noise.
+    thresh = max(cfg.low / 2.0, 20.0)
+    hits = ops.grad_hits(image, stride=stride, thresh=thresh,
+                         impl=cfg.impl)
+    worst = hits.max().astype(jnp.float32)
+    return jnp.floor(worst * stride * margin).astype(jnp.int32) + 64
+
+
 def estimate_edge_count(image, cfg: CannyConfig = CannyConfig(), *,
                         stride: int = 2, margin: float = 2.5) -> int:
     """Cheap downsampled gradient pass: upper-bound the Canny edge count.
 
     Sizes the Hough edge-compaction buffer (``HoughConfig(max_edges="auto")``)
-    *before* the jitted pipeline runs, so the buffer is a static shape.  The
-    image is subsampled by ``stride`` and finite differences stand in for
-    Sobel-of-Gaussian; each coarse hit represents at most ~``stride``
-    post-NMS edge pixels per stroke side, and ``margin`` absorbs the
-    both-sides-of-a-stroke factor plus speckle that subsampling undercounts.
-    ``tests/test_scenarios.py`` validates the bound (estimate >= actual edge
-    count) on every scenario family.
+    *before* the jitted pipeline runs, so the buffer is a static shape.  Each
+    coarse hit represents at most ~``stride`` post-NMS edge pixels per stroke
+    side, and ``margin`` absorbs the both-sides-of-a-stroke factor plus
+    speckle that subsampling undercounts.
 
     Accepts a single frame (H, W) or a batch (N, H, W): batches return the
-    max per-frame estimate, since the compaction buffer is shared.  Host-side
-    numpy on concrete values — never call under jit.
+    max per-frame estimate, since the compaction buffer is shared.  This is
+    the *host* entry point — it runs :func:`estimate_edge_count_device` and
+    reads the scalar back, so it must see concrete values (never call under
+    jit; the plan layer keeps the device value traced instead).
     """
-    img = np.asarray(image, np.float32)
-    sub = img[..., ::stride, ::stride]
-    gx = np.abs(sub[..., :, 1:] - sub[..., :, :-1])[..., :-1, :]
-    gy = np.abs(sub[..., 1:, :] - sub[..., :-1, :])[..., :, :-1]
-    # low/2, floored at 20: contrast below that never survives the double
-    # threshold, and 20 sits >3 sigma above asphalt-texture differences so
-    # the count tracks strokes/speckle, not ground-plane noise.
-    thresh = max(cfg.low / 2.0, 20.0)
-    hits = (np.maximum(gx, gy) >= thresh).sum(axis=(-2, -1))
-    worst = int(hits.max()) if hits.ndim else int(hits)
-    return int(worst * stride * margin) + 64
+    if isinstance(image, jax.core.Tracer):
+        raise ValueError(
+            "estimate_edge_count reads the estimate back to the host; under "
+            "jit use estimate_edge_count_device (core/plan.py does)."
+        )
+    return int(estimate_edge_count_device(image, cfg, stride=stride,
+                                          margin=margin))

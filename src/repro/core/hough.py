@@ -43,11 +43,13 @@ class HoughConfig:
     # the dispatch default in ``kernels.ops.hough_vote`` (~H*W/16); edges
     # beyond the buffer are dropped, so leave compaction off when exact
     # parity on pathologically dense edge maps matters.  ``max_edges="auto"``
-    # sizes the buffer from the workload itself: ``hough_transform`` counts
-    # the concrete edge map, the pipeline estimates from a downsampled
-    # gradient pass (``canny.estimate_edge_count``) — both land on a
-    # bucketed size via ``auto_max_edges`` that never exceeds the dense
-    # default, closing the ROADMAP autotune follow-up.
+    # sizes the buffer from the workload itself: the plan path counts the
+    # edge map ON DEVICE and ``lax.switch``-es over the static tier set
+    # (``hough_transform_tiered`` — zero host syncs, jit-safe); the eager
+    # ``hough_transform`` counts the concrete edge map and the legacy
+    # resolver estimates from a downsampled gradient pass
+    # (``canny.estimate_edge_count``) — all land on a tier via
+    # ``auto_max_edges`` that never exceeds the dense default.
     compact: bool = False
     max_edges: int | str | None = None
 
@@ -57,19 +59,40 @@ def rho_bins(height: int, width: int, cfg: HoughConfig) -> int:
     return int(2.0 * diag / cfg.rho_res) + 1
 
 
-def auto_max_edges(n_edges: int, height: int, width: int, *,
-                   bucket: int = 512) -> int:
-    """Bucketed compaction-buffer size for an (estimated) edge count.
+def max_edge_tiers(height: int, width: int, *, base: int = 512
+                   ) -> tuple[int, ...]:
+    """The static set of compaction-buffer sizes for one resolution.
 
-    Rounds up to a multiple of ``bucket`` so nearby workloads share one jit
-    cache entry, and caps at the dense-dispatch default
-    (``kernels.ops.default_max_edges``) — an autotuned buffer is never
-    larger than the hand-tuned one, and past the cap both drop exactly the
-    same trailing edges.
+    Geometric tiers ``base, 2*base, 4*base, ...`` capped at (and always
+    including) the dense-dispatch default (``kernels.ops.default_max_edges``)
+    — a small finite set, so everything keyed on a resolved ``max_edges``
+    (jit cache entries, the tiered ``lax.switch`` in the plan path) stays
+    bounded no matter how edge density drifts across a stream.
     """
     cap = ops.default_max_edges(height * width)
-    need = max(bucket, -(-int(n_edges) // bucket) * bucket)
-    return int(min(cap, need))
+    tiers = []
+    t = base
+    while t < cap:
+        tiers.append(t)
+        t *= 2
+    tiers.append(cap)
+    return tuple(tiers)
+
+
+def auto_max_edges(n_edges: int, height: int, width: int, *,
+                   base: int = 512) -> int:
+    """Tiered compaction-buffer size for an (estimated) edge count.
+
+    Snaps up to the smallest tier in ``max_edge_tiers`` that holds
+    ``n_edges``, so nearby workloads share one jit cache entry, and caps at
+    the dense-dispatch default — an autotuned buffer is never larger than
+    the hand-tuned one, and past the cap both drop exactly the same
+    trailing edges.
+    """
+    for t in max_edge_tiers(height, width, base=base):
+        if int(n_edges) <= t:
+            return t
+    return max_edge_tiers(height, width, base=base)[-1]
 
 
 def resolved_auto_config(cfg: HoughConfig, n_edges: int, height: int,
@@ -120,6 +143,48 @@ def hough_transform(edges: jax.Array, cfg: HoughConfig = HoughConfig()
     if cfg.max_edges == "auto":
         cfg = resolve_max_edges(edges, cfg)
     return _hough_transform(edges, cfg)
+
+
+def hough_transform_tiered(edges: jax.Array, cfg: HoughConfig,
+                           tiers: tuple[int, ...] | None = None
+                           ) -> jax.Array:
+    """Device-side ``max_edges`` autotune: trace-safe tiered dispatch.
+
+    The compaction buffer is a static shape, so a *traced* edge map cannot
+    pick an arbitrary size — but it can pick from a small static set.  The
+    exact per-frame edge count (a cheap device reduction; max over a batch)
+    selects the smallest tier in ``max_edge_tiers`` that holds every edge,
+    and ``lax.switch`` runs the one branch compiled for that tier.  No
+    host round-trip anywhere: this is how the plan layer (``core/plan.py``)
+    keeps ``max_edges="auto"`` streams free of per-chunk syncs.
+
+    Bit-exact with the dense path whenever the chosen tier drops no edges
+    (the count is exact, so only the cap tier can drop any — the same
+    trailing edges the hand-tuned dense default drops).  The jit cache
+    stays finite: one compiled program per (shape, cfg), holding
+    ``len(tiers)`` vote variants.
+    """
+    if not cfg.compact:
+        return _hough_transform(
+            edges, dataclasses.replace(cfg, max_edges=None)
+        )
+    H, W = edges.shape[-2:]
+    if tiers is None:
+        tiers = max_edge_tiers(H, W)
+    counts = (edges >= cfg.edge_threshold).sum(axis=(-2, -1))
+    worst = counts.max().astype(jnp.int32)
+    idx = jnp.minimum(
+        sum((worst > t).astype(jnp.int32) for t in tiers),
+        len(tiers) - 1,
+    )
+    branches = [
+        functools.partial(
+            _hough_transform,
+            cfg=dataclasses.replace(cfg, max_edges=int(t)),
+        )
+        for t in tiers
+    ]
+    return jax.lax.switch(idx, branches, edges)
 
 
 @functools.partial(

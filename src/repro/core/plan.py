@@ -1,0 +1,219 @@
+"""Resolve-once execution plans for the line-detection stack.
+
+"Deciding how to run" and "running" used to be interleaved: every
+``LineDetector`` call re-resolved data-dependent knobs (``max_edges="auto"``
+copied each batch back to the host to count gradients), and every distinct
+batch shape recompiled.  This module splits them:
+
+  * A frozen :class:`DetectionPlan` is built exactly once per
+    ``(height, width, batch-bucket)`` and pins everything static — the fully
+    resolved :class:`PipelineConfig`, the batch padding bucket, and (for
+    ``max_edges="auto"``) the static tier set the device-side autotune
+    dispatches over.  Plans are pure facts; the compiled callables they bind
+    to are the module-level jitted bodies below, so two detectors with equal
+    configs share one compilation.
+  * Device-side autotune: the plan's ``"auto"`` body counts edge pixels on
+    the device (a reduction over the Canny output) and ``lax.switch``-es
+    between vote kernels compiled for a small static set of ``max_edges``
+    tiers (``core.hough.max_edge_tiers``).  No per-batch host round-trip —
+    ``LineDetector.detect_stream`` runs its hot loop under
+    ``jax.transfer_guard("disallow")``.
+
+``core/pipeline.py`` re-exports the config/result types and layers the
+user-facing ``LineDetector`` on top; ``serve/detection.py`` builds one plan
+per resolution bucket for the continuous-batching detection service.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .canny import CannyConfig, canny
+from .hough import (
+    HoughConfig, hough_transform, hough_transform_tiered, max_edge_tiers,
+)
+from .lines import LinesConfig, get_lines, render_lines
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    canny: CannyConfig = CannyConfig()
+    hough: HoughConfig = HoughConfig()
+    lines: LinesConfig = LinesConfig()
+    render_output: bool = False   # paper's elision: off by default
+
+
+class DetectionResult(NamedTuple):
+    # Per-frame shapes; every field gains a leading N axis from
+    # detect_batch (detect_stream splits that axis back off).
+    lines: jax.Array      # (K, 4) endpoints
+    valid: jax.Array      # (K,) mask
+    peaks: jax.Array      # (K, 2) (rho, theta)
+    edges: jax.Array      # (H, W) uint8 Canny output
+    rendered: jax.Array | None
+
+
+# BT.601 luma weights — the single source for BOTH grayscale conversions:
+# the host staging path (load_frame) and the device path
+# (LineDetector.load).  Same weights, same f32 order; XLA may still fuse
+# the multiply-adds, so the two can differ in the last ulp (gray inputs —
+# every test/benchmark path — are untouched by either).
+LUMA_WEIGHTS = (0.299, 0.587, 0.114)
+
+
+def load_frame(raw) -> np.ndarray:
+    """Host-side phase 1: uint8 frame (possibly RGB) -> grayscale f32.
+
+    Pure numpy so streaming can stage whole batches on the host and ship
+    them with ONE explicit ``jax.device_put`` — the pinned-transfer
+    discipline ``transfer_guard("disallow")`` enforces on the hot loop.
+    """
+    img = np.asarray(raw)
+    if img.ndim == 3:  # luma conversion
+        wr, wg, wb = LUMA_WEIGHTS
+        img = img.astype(np.float32)
+        img = wr * img[..., 0] + wg * img[..., 1] + wb * img[..., 2]
+    return np.asarray(img, np.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "tiers"))
+def _detect(cfg: PipelineConfig, image: jax.Array, *,
+            tiers: tuple[int, ...] | None = None) -> DetectionResult:
+    """The one jitted detection body, shared across detector instances.
+
+    With ``tiers=None``, ``cfg`` must be fully resolved (no "auto" knobs).
+    With a tier tuple — the ``max_edges="auto"`` plan path — the device
+    counts the Canny edge pixels (max over a batch: the compaction buffer
+    is shared) and ``lax.switch``-es the vote stage to the tier that holds
+    them all; one compiled program per (shape, cfg), zero host
+    round-trips."""
+    H, W = image.shape[-2:]
+    edges = canny(image, cfg.canny)
+    if tiers is None:
+        votes = hough_transform(edges, cfg.hough)
+    else:
+        votes = hough_transform_tiered(edges, cfg.hough, tiers)
+    lines, valid, peaks = get_lines(
+        votes, height=H, width=W, cfg=cfg.lines
+    )
+    rendered = None
+    if cfg.render_output:
+        rendered = render_lines(image.astype(jnp.uint8), lines, valid)
+    return DetectionResult(lines, valid, peaks, edges, rendered)
+
+
+def batch_bucket(n: int) -> int:
+    """Round a batch size up to the next power of two.
+
+    Drifting batch sizes (uneven stream tails, partially full service
+    slots) pad to a bucket instead of recompiling at their own shape."""
+    if n <= 1:
+        return 1
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def resolve_static(cfg: PipelineConfig, height: int, width: int
+                   ) -> tuple[PipelineConfig, tuple[int, ...] | None]:
+    """Resolve every shape-static knob of ``cfg`` for one resolution.
+
+    Returns ``(resolved_cfg, tiers)``: ``tiers`` is the static
+    ``max_edges`` tier set when the config asks for the device-side
+    autotune (``compact=True, max_edges="auto"``), else ``None`` with any
+    inert ``"auto"`` neutralized so jit cache keys stay shared.  Pure and
+    idempotent — ``resolve_static(*resolve_static(cfg, h, w)[:1], h, w)``
+    is a fixed point (property-tested in ``tests/test_detection_service``).
+    """
+    h = cfg.hough
+    if h.max_edges != "auto":
+        return cfg, None
+    if not h.compact:  # knob inert on the dense path
+        return dataclasses.replace(
+            cfg, hough=dataclasses.replace(h, max_edges=None)
+        ), None
+    return cfg, max_edge_tiers(height, width)
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectionPlan:
+    """A frozen "how to run" record for one ``(H, W, batch)`` workload.
+
+    Everything data-independent is decided at build time: the resolved
+    config, the batch padding bucket, and the autotune tier set.  ``run``
+    only pads, dispatches the shared jitted body, and slices — safe under
+    ``jax.transfer_guard("disallow")`` once warm.
+    """
+    cfg: PipelineConfig           # resolved: "auto" only with tiers set
+    height: int
+    width: int
+    batch: int | None             # padded batch bucket; None = single frame
+    tiers: tuple[int, ...] | None  # static autotune tiers (iff "auto")
+
+    @classmethod
+    def build(cls, cfg: PipelineConfig, height: int, width: int, *,
+              batch: int | None = None) -> "DetectionPlan":
+        resolved, tiers = resolve_static(cfg, height, width)
+        return cls(resolved, height, width, batch, tiers)
+
+    # --- execution ----------------------------------------------------
+    def _dispatch(self, images: jax.Array) -> DetectionResult:
+        return _detect(self.cfg, images, tiers=self.tiers)
+
+    def run(self, images) -> DetectionResult:
+        """Detect on a frame (H, W) or batch (N <= bucket, H, W).
+
+        Batches shorter than the bucket are padded with zero frames (every
+        stage is frame-independent, so pad rows never leak into real
+        results) and the result is sliced back to the true length.
+        """
+        if self.batch is None:
+            assert images.shape[-2:] == (self.height, self.width), (
+                images.shape, self)
+            return self._dispatch(images)
+        n = images.shape[0]
+        assert (images.ndim == 3 and n <= self.batch
+                and images.shape[-2:] == (self.height, self.width)), (
+            images.shape, self)
+        if n < self.batch:
+            images = jnp.concatenate([
+                images,
+                jnp.zeros((self.batch - n, self.height, self.width),
+                          images.dtype),
+            ])
+        res = self._dispatch(images)
+        if n == self.batch:
+            return res
+        return DetectionResult(
+            res.lines[:n], res.valid[:n], res.peaks[:n], res.edges[:n],
+            None if res.rendered is None else res.rendered[:n],
+        )
+
+    __call__ = run
+
+
+class PlanCache:
+    """Per-detector memo of plans keyed by ``(H, W, batch-bucket)``."""
+
+    def __init__(self, cfg: PipelineConfig):
+        self.cfg = cfg
+        self._plans: dict[tuple[int, int, int | None], DetectionPlan] = {}
+
+    def plan_for(self, height: int, width: int, *,
+                 batch: int | None = None) -> DetectionPlan:
+        key = (height, width, batch)
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = DetectionPlan.build(self.cfg, height, width, batch=batch)
+            self._plans[key] = plan
+        return plan
+
+    def __len__(self) -> int:
+        return len(self._plans)

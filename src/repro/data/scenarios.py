@@ -302,6 +302,61 @@ def _multilane(height: int, width: int, *, seed: int = 0) -> RoadScene:
     return _finish(img, planted)
 
 
+@_register("fog", 0.85,
+           "atmospheric haze: contrast decays exponentially toward the horizon")
+def _fog(height: int, width: int, *, seed: int = 0) -> RoadScene:
+    rng = np.random.default_rng(seed)
+    img = _asphalt(height, width, rng)
+    planted: list = []
+    for fx, deg in ((0.35, 30.0), (0.65, 150.0)):
+        p0, p1 = _lane_endpoints(
+            height, width, fx, deg + rng.uniform(-3.0, 3.0),
+            y_top_frac=0.12,
+        )
+        _plant_segment(img, planted, p0, p1, 235.0)
+    # Koschmieder scattering: I = I0*t + A*(1-t) with transmission
+    # t = exp(-beta * depth); rows near the top of the frame are far away,
+    # so their contrast collapses toward the airlight A.  beta is drawn so
+    # the worst seed still leaves the upper lane ends ~25 gray levels
+    # above the hazed asphalt — visible, but a real low-contrast regime.
+    airlight = 190.0
+    beta = rng.uniform(1.1, 1.5)
+    depth = np.linspace(1.0, 0.0, height, dtype=np.float32)[:, None]
+    t = np.exp(-beta * depth)
+    img = img * t + airlight * (1.0 - t)
+    return _finish(img, planted)
+
+
+@_register("lens_distortion", 0.85,
+           "mild barrel distortion: straight markings bow toward the rim")
+def _lens_distortion(height: int, width: int, *, seed: int = 0) -> RoadScene:
+    rng = np.random.default_rng(seed)
+    img = _asphalt(height, width, rng)
+    planted: list = []
+    for fx, deg in ((0.32, 25.0), (0.68, 155.0)):
+        p0, p1 = _lane_endpoints(height, width, fx,
+                                 deg + rng.uniform(-2.0, 2.0))
+        _plant_segment(img, planted, p0, p1, 235.0)
+    # Barrel remap (inverse mapping, nearest-neighbour): the sampled source
+    # radius grows as r*(1 + k1*(r/rmax)^2), bowing straight strokes by at
+    # most ~k1*rmax pixels at the rim.  k1 is small enough that the
+    # dominant Hough peak of each bowed stroke stays within the harness's
+    # (4 px, 3 deg) matching tolerance of the undistorted ground truth —
+    # the family measures robustness to mild uncorrected optics, not a
+    # fisheye rectifier.
+    k1 = rng.uniform(0.010, 0.018)
+    cy, cx = (height - 1) / 2.0, (width - 1) / 2.0
+    yy, xx = np.mgrid[0:height, 0:width].astype(np.float32)
+    dx, dy = xx - cx, yy - cy
+    r = np.hypot(dx, dy)
+    rmax = math.hypot(cx, cy)
+    scale = 1.0 + k1 * (r / rmax) ** 2
+    sx = np.clip(np.rint(cx + dx * scale), 0, width - 1).astype(np.int32)
+    sy = np.clip(np.rint(cy + dy * scale), 0, height - 1).astype(np.int32)
+    img = img[sy, sx]
+    return _finish(img, planted)
+
+
 @_register("empty", 0.99, "no markings at all: false-positive control")
 def _empty(height: int, width: int, *, seed: int = 0) -> RoadScene:
     rng = np.random.default_rng(seed)

@@ -85,6 +85,17 @@ def default_max_edges(n_pix: int) -> int:
     return max(256, n_pix // 16)
 
 
+def grad_hits(image, *, stride, thresh, impl=None):
+    """Downsampled-gradient hit count (the autotune estimator's reduction).
+
+    Element-wise + reduction (VPU work): every impl routes to the jnp form
+    in ``ref.py`` — a Pallas variant would buy nothing, but the dispatch
+    seam keeps the estimator swappable like every other op here.
+    """
+    del impl  # single implementation; signature matches the package
+    return ref.grad_hits(image, stride=stride, thresh=thresh)
+
+
 def hough_vote(xy, weights, trig, *, n_rho, impl=None, compact=False,
                max_edges=None, **kw):
     """Hough voting with optional edge compaction.

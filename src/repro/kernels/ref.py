@@ -78,6 +78,28 @@ def conv2d_stencil(image: jax.Array, masks: jax.Array, *, out_dtype=None
     return jnp.stack(outs, axis=-3).astype(out_dtype)
 
 
+def grad_hits(image: jax.Array, *, stride: int, thresh: float
+              ) -> jax.Array:
+    """Downsampled finite-difference gradient hit count (per frame).
+
+    The reduction behind the ``max_edges`` autotune estimator
+    (``core.canny.estimate_edge_count_device``): subsample by ``stride``,
+    take |dx|/|dy| finite differences as a stand-in for Sobel-of-Gaussian,
+    and count coarse pixels whose stronger difference clears ``thresh``.
+    Returns an int32 count per leading-axis frame ((..., H, W) -> (...)).
+    Element-wise + reduction — VPU work, no Pallas variant needed; it lives
+    here so the estimator shares the kernel package's dispatch/oracle
+    structure and a future fused on-device tuner has one seam to replace.
+    """
+    img = jnp.asarray(image, jnp.float32)
+    sub = img[..., ::stride, ::stride]
+    gx = jnp.abs(sub[..., :, 1:] - sub[..., :, :-1])[..., :-1, :]
+    gy = jnp.abs(sub[..., 1:, :] - sub[..., :-1, :])[..., :, :-1]
+    return (jnp.maximum(gx, gy) >= thresh).sum(
+        axis=(-2, -1), dtype=jnp.int32
+    )
+
+
 def hough_vote(xy: jax.Array, weights: jax.Array, trig: jax.Array,
                *, n_rho: int) -> jax.Array:
     """Scatter-add vote oracle (the paper's Algorithm 2, vectorized).

@@ -1,12 +1,23 @@
-"""Serving substrate: batched prefill/decode engine with slot scheduling.
+"""Serving substrate: continuous batching for tokens AND frames.
 
-``Engine`` implements continuous batching over a fixed slot grid: requests
-are admitted into free slots (prefill), all active slots decode in lock-step
-(one jitted ``decode_step`` for the whole grid), and finished requests free
-their slots immediately.  Caches are linear, ring (SWA long-context), or
-SSM-state depending on the architecture — the engine is cache-layout
-agnostic because the model owns its cache pytree.
+``Engine`` implements continuous batching over a fixed slot grid for LM
+traffic: requests are admitted into free slots (prefill), all active slots
+decode in lock-step (one jitted ``decode_step`` for the whole grid), and
+finished requests free their slots immediately.  Caches are linear, ring
+(SWA long-context), or SSM-state depending on the architecture — the engine
+is cache-layout agnostic because the model owns its cache pytree.
+
+``DetectionService`` applies the same slot/bucket design to the paper's
+line-detection stack (``serve/detection.py``): mixed-resolution frame
+requests pad to resolution buckets, fill fixed batch slots, and drain
+double-buffered through resolve-once ``DetectionPlan``s (``core/plan.py``).
 """
 
+from .detection import (  # noqa: F401
+    DetectionRequest,
+    DetectionService,
+    crop_result,
+    pad_to_bucket,
+)
 from .engine import Engine, Request  # noqa: F401
 from .sampling import sample  # noqa: F401

@@ -1,0 +1,346 @@
+"""Continuous-batching detection service: mixed-resolution request traffic.
+
+The LM engine (``serve/engine.py``) serves token traffic with a fixed slot
+grid; this module applies the same slot/bucket design to the line-detection
+stack so heavy mixed-resolution camera traffic (the ROADMAP north star)
+rides the batched plan path instead of a per-frame loop:
+
+  * **Resolution buckets** — requests carry frames of heterogeneous
+    resolutions; each frame pads (tapered edge replication, top-left
+    anchored) to the smallest registered bucket that holds it.  Top-left
+    anchoring keeps the original pixel coordinates, so detected
+    (rho, theta) peaks need no remapping; line endpoints parameterize the
+    infinite line in those same coordinates (they can lie outside any
+    frame, padded or native — clip when rasterizing, as ``render_lines``
+    does).
+  * **Fixed batch slots** — every bucket owns a grid of ``batch_size``
+    slots.  Admission fills free slots from the queue; a dispatch always
+    runs the full grid (empty slots carry zero frames that the
+    frame-independent kernels ignore), so each bucket compiles exactly one
+    program — the same static-shapes-for-lock-step trade the LM engine
+    makes.
+  * **Double-buffered drain** — while the device computes bucket batch k,
+    the host stages batch k+1 (admission, padding, one explicit
+    ``device_put``).  Completion splits the batched result back to the
+    requests, crops per-frame fields to the original resolution, and frees
+    the slots for immediate readmission — requests from different arrival
+    times coexist in one grid, which is what "continuous batching" means.
+
+Plans come from ``core/plan.py``: one frozen ``DetectionPlan`` per bucket,
+resolved once (device-side ``max_edges`` autotune included).
+``benchmarks/service_suite.py`` measures throughput/latency against the
+naive per-frame loop and writes ``BENCH_service.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Iterable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.plan import (
+    DetectionPlan, DetectionResult, PipelineConfig, load_frame,
+)
+
+# Default resolution ladder: QQVGA-ish up to the paper's camera frame.
+DEFAULT_BUCKETS: tuple[tuple[int, int], ...] = (
+    (120, 160), (240, 320), (480, 640),
+)
+
+
+@dataclasses.dataclass
+class DetectionRequest:
+    """One frame in, one ``DetectionResult`` out."""
+    uid: int
+    frame: np.ndarray                       # (H, W) or (H, W, 3)
+    # filled by the service
+    result: Optional[DetectionResult] = None
+    bucket: Optional[tuple[int, int]] = None
+    done: bool = False
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_at - self.submitted_at
+
+
+class _BucketGrid:
+    """Slot grid + staging state for one resolution bucket."""
+
+    def __init__(self, shape: tuple[int, int], batch_size: int,
+                 plan: DetectionPlan):
+        self.shape = shape
+        self.plan = plan
+        self.slots: list[Optional[DetectionRequest]] = [None] * batch_size
+        self.staged = np.zeros((batch_size, *shape), np.float32)
+        # (requests snapshot, async result) awaiting completion
+        self.in_flight: Optional[
+            tuple[list[Optional[DetectionRequest]], DetectionResult]
+        ] = None
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+
+# Pad decay horizon (pixels): the diffused pad reaches the flat fill level
+# by this depth regardless of pad size.
+_PAD_TAPER = 32
+
+
+def _diffuse_pad(border: np.ndarray, n: int, fill: np.float32
+                 ) -> np.ndarray:
+    """Continue a border line outward for ``n`` steps, diffusing as it
+    fades: each step blurs the previous line ([1, 2, 1]/4) and decays it
+    toward ``fill``.  The blur spreads any stroke crossing the border so
+    its transverse contrast collapses within a few steps (no extruded bar
+    for Hough to vote up), while the decay's along-step slope stays under
+    the Canny low threshold (no edge along the taper itself).
+
+    ``border``: (W,) the outermost content line.  Returns (n, W).
+    """
+    rows = np.empty((n, border.shape[0]), np.float32)
+    prev = border.astype(np.float32)
+    for i in range(n):
+        blurred = prev.copy()
+        blurred[1:-1] = (
+            0.25 * prev[:-2] + 0.5 * prev[1:-1] + 0.25 * prev[2:]
+        )
+        k = max(0.0, 1.0 - (i + 1.0) / _PAD_TAPER)
+        prev = fill + (blurred - fill) * np.float32(k)
+        rows[i] = prev
+    return rows
+
+
+def pad_to_bucket(frame: np.ndarray, shape: tuple[int, int]) -> np.ndarray:
+    """Grayscale-load ``frame`` and pad it (top-left anchored) to the
+    bucket shape with a *diffusing* edge continuation: the boundary
+    row/column carries on (no synthetic step at the content border) while
+    blurring and fading to the frame mean.  Plain replication would
+    extrude every stroke touching the border into a long axis-aligned
+    bright bar — strong enough to vote up spurious near-vertical/
+    horizontal lines and to inflate the peak the relative threshold
+    normalizes by.  Diffusion kills the bar's transverse contrast within
+    a few pixels and the fade slope stays below the Canny thresholds, so
+    the pad region contributes (nearly) no edges at any pad size
+    (regression-tested in ``tests/test_detection_service.py``)."""
+    img = load_frame(frame)
+    H, W = img.shape
+    bh, bw = shape
+    assert H <= bh and W <= bw, (img.shape, shape)
+    if (H, W) == (bh, bw):
+        return img
+    fill = np.float32(img.mean())
+    out = np.empty((bh, bw), np.float32)
+    out[:H, :W] = img
+    if bh > H:
+        out[H:, :W] = _diffuse_pad(img[H - 1, :], bh - H, fill)
+    if bw > W:
+        # columns diffuse from the full left part (content + row pad), so
+        # the corner continues both tapers consistently
+        out[:, W:] = _diffuse_pad(out[:, W - 1], bw - W, fill).T
+    return out
+
+
+def crop_result(res: DetectionResult, height: int, width: int
+                ) -> DetectionResult:
+    """Un-pad one frame's result: (rho, theta) peaks are already in
+    original coordinates (top-left anchoring) and ``lines`` endpoints
+    parameterize the same infinite lines (out-of-frame endpoints are
+    normal — the unbatched detector produces them too); raster fields
+    crop to (H, W)."""
+    return DetectionResult(
+        res.lines, res.valid, res.peaks,
+        res.edges[..., :height, :width],
+        None if res.rendered is None
+        else res.rendered[..., :height, :width, :],
+    )
+
+
+class DetectionService:
+    """Request-level line detection over fixed per-bucket batch slots.
+
+    ``submit`` enqueues requests; ``step`` admits, dispatches one bucket
+    grid, and completes the previously dispatched one (double-buffering);
+    ``run`` drains everything.  ``detect_many`` is the convenience loop the
+    benchmarks use.
+    """
+
+    def __init__(self, cfg: PipelineConfig = PipelineConfig(), *,
+                 buckets: Sequence[tuple[int, int]] = DEFAULT_BUCKETS,
+                 batch_size: int = 4):
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.buckets = tuple(sorted(buckets))
+        self.grids = {
+            shape: _BucketGrid(
+                shape, batch_size,
+                DetectionPlan.build(cfg, *shape, batch=batch_size),
+            )
+            for shape in self.buckets
+        }
+        self.queue: deque[DetectionRequest] = deque()
+        self._rr = 0            # round-robin cursor over buckets
+        self._warmed: set[tuple[int, int]] = set()
+        self.dispatches = 0
+        self.completed = 0
+
+    # --- bucketing -----------------------------------------------------
+    def bucket_for(self, frame: np.ndarray) -> tuple[int, int]:
+        """Smallest registered bucket that holds ``frame``."""
+        H, W = frame.shape[:2]
+        for bh, bw in self.buckets:
+            if H <= bh and W <= bw:
+                return (bh, bw)
+        raise ValueError(
+            f"frame {frame.shape} exceeds every bucket {self.buckets}"
+        )
+
+    # --- request lifecycle ---------------------------------------------
+    def submit(self, req: DetectionRequest) -> None:
+        req.bucket = self.bucket_for(req.frame)
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        """Fill free slots in arrival order; skip over requests whose
+        bucket grid is full (they keep their queue position)."""
+        blocked: list[DetectionRequest] = []
+        while self.queue:
+            req = self.queue.popleft()
+            grid = self.grids[req.bucket]
+            slot = grid.free_slot()
+            if slot is None:
+                blocked.append(req)
+                if all(g.free_slot() is None for g in self.grids.values()):
+                    break
+                continue
+            grid.slots[slot] = req
+            grid.staged[slot] = pad_to_bucket(req.frame, grid.shape)
+        self.queue.extendleft(reversed(blocked))
+
+    def _reap(self) -> None:
+        """Retire any in-flight batch whose result is already ready.
+
+        Keeps ``latency_s`` honest (a result is delivered as soon as the
+        device finishes, not when its grid next refills) without ever
+        blocking — ``is_ready`` is a non-blocking poll.
+        """
+        for g in self.grids.values():
+            if g.in_flight is None:
+                continue
+            lines = g.in_flight[1].lines
+            if getattr(lines, "is_ready", lambda: False)():
+                self._complete(g)
+
+    def _complete(self, grid: _BucketGrid) -> None:
+        """Resolve the grid's in-flight batch back onto its requests."""
+        if grid.in_flight is None:
+            return
+        reqs, res = grid.in_flight
+        grid.in_flight = None
+        jax.block_until_ready(res.lines)
+        now = time.perf_counter()
+        for i, req in enumerate(reqs):
+            if req is None:
+                continue
+            H, W = req.frame.shape[:2]
+            req.result = crop_result(
+                DetectionResult(
+                    res.lines[i], res.valid[i], res.peaks[i], res.edges[i],
+                    None if res.rendered is None else res.rendered[i],
+                ),
+                H, W,
+            )
+            req.done = True
+            req.finished_at = now
+            self.completed += 1
+
+    def _next_grid(self, flush: bool) -> Optional[_BucketGrid]:
+        """Round-robin over buckets: FULL grids first (a dispatch always
+        computes ``batch_size`` frames, so partial grids waste slots), then
+        — only when flushing — any occupied grid."""
+        n = len(self.buckets)
+        for want_full in (True, False) if flush else (True,):
+            for k in range(n):
+                shape = self.buckets[(self._rr + k) % n]
+                grid = self.grids[shape]
+                if grid.active == len(grid.slots) or (
+                    not want_full and grid.active
+                ):
+                    self._rr = (self._rr + k + 1) % n
+                    return grid
+        return None
+
+    def step(self, *, flush: bool = False) -> bool:
+        """Admit -> dispatch one bucket grid -> free its slots for the next
+        admission wave; completion of the *previous* dispatch on that grid
+        happens just before the new one lands (one batch in flight per
+        bucket).  Only full grids dispatch unless ``flush`` — partial
+        batches are for draining, not steady state.  Returns True if any
+        work remains."""
+        self._reap()
+        self._admit()
+        grid = self._next_grid(flush)
+        if grid is None:
+            # nothing dispatchable: drain whatever is still in flight
+            for g in self.grids.values():
+                self._complete(g)
+            return bool(self.queue) or any(
+                g.active for g in self.grids.values()
+            )
+        reqs = list(grid.slots)
+        imgs = jax.device_put(grid.staged)
+        # device_put may alias (zero-copy) a numpy buffer on CPU backends:
+        # hand the old buffer to the in-flight batch and stage the next
+        # wave into a fresh one rather than mutating shared memory.
+        grid.staged = np.zeros_like(grid.staged)
+        if grid.shape in self._warmed:
+            with jax.transfer_guard("disallow"):
+                res = grid.plan.run(imgs)       # async dispatch of batch k
+        else:
+            res = grid.plan.run(imgs)           # first call compiles
+            self._warmed.add(grid.shape)
+        # batch k-1 retires while k computes; if the dispatch above raised,
+        # it is still in_flight and a later step/run() drains it
+        self._complete(grid)
+        grid.in_flight = (reqs, res)
+        self.dispatches += 1
+        grid.slots = [None] * self.batch_size   # slots free immediately
+        return True
+
+    def run(self, max_steps: int = 10_000) -> None:
+        """Drive until the queue, slots, and in-flight batches drain
+        (flushing: partial grids dispatch rather than wait for traffic)."""
+        while max_steps > 0:
+            busy = self.step(flush=True)
+            pending = any(
+                g.active or g.in_flight is not None
+                for g in self.grids.values()
+            )
+            if not busy and not pending and not self.queue:
+                return
+            max_steps -= 1
+
+    # --- convenience ----------------------------------------------------
+    def detect_many(self, frames: Iterable[np.ndarray]
+                    ) -> list[DetectionRequest]:
+        """Submit one request per frame, drain, return in submit order."""
+        reqs = [DetectionRequest(uid=i, frame=np.asarray(f))
+                for i, f in enumerate(frames)]
+        for r in reqs:
+            self.submit(r)
+        self.run()
+        assert all(r.done for r in reqs)
+        return reqs

@@ -214,11 +214,24 @@ def test_auto_on_heterogeneous_batch_sizes_for_densest_frame():
                                       np.asarray(r.valid))
 
 
-def test_auto_requires_concrete_input_under_jit():
+def test_auto_works_under_jit_via_tiered_plan():
+    """The plan layer resolves "auto" ON DEVICE (tiered lax.switch), so
+    detect traces cleanly under an outer jit — the PR-2 behaviour (a
+    ValueError demanding a concrete frame) is gone — and the traced result
+    equals the eager path bit-for-bit."""
     import jax
     det = _detector("auto")
+    sc = make_scenario("converging", 96, 128, seed=0)
+    img = jnp.asarray(sc.image, jnp.float32)
+    eager = det.detect(img)
+    traced = jax.jit(det.detect)(img)
+    np.testing.assert_array_equal(np.asarray(eager.lines),
+                                  np.asarray(traced.lines))
+    np.testing.assert_array_equal(np.asarray(eager.valid),
+                                  np.asarray(traced.valid))
+    # the legacy host-side resolver still demands a concrete frame
     with pytest.raises((ValueError, jax.errors.TracerArrayConversionError)):
-        jax.jit(det.detect)(jnp.zeros((32, 32), jnp.float32))
+        jax.jit(det.resolve_config)(jnp.zeros((32, 32), jnp.float32))
 
 
 def test_auto_resolution_in_hough_transform():
