@@ -18,6 +18,15 @@ latency (submit -> result ready).  Latencies are measured under
 drip-feed submission (requests arrive while the service runs), so they
 reflect queueing + batching delay, not just compute.
 
+The **deadline regime** exercises the QoS layer on a ``VirtualClock``:
+scripted arrivals, a fixed modeled service time per bucket dispatch, and
+deterministic completion stamping make the miss rate and the virtual p99 a
+pure function of the scheduling policy — the 2-core bench host's timing
+noise cannot flake the gate.  Two gates: slack deadlines must see zero
+misses, and EDF scheduling must never miss more than the same traffic
+pushed through the deadline-blind throughput scheduler (FIFO reference,
+scored post-hoc against the same budgets).
+
 Usage: PYTHONPATH=src python -m benchmarks.service_suite [--quick]
 """
 
@@ -33,7 +42,9 @@ import numpy as np
 
 from repro.core import HoughConfig, LineDetector, PipelineConfig
 from repro.data import make_scenario, scenario_names
-from repro.serve.detection import DetectionRequest, DetectionService
+from repro.serve.detection import (
+    DetectionRequest, DetectionService, VirtualClock,
+)
 
 from .common import print_table
 
@@ -41,6 +52,22 @@ from .common import print_table
 # land in the (120,160) or (240,320) buckets of DEFAULT_BUCKETS).
 MIXED_SHAPES = ((120, 160), (240, 320), (96, 128), (240, 320), (180, 240))
 BUCKETS = ((120, 160), (240, 320))
+
+# Modeled per-dispatch service time per bucket (seconds) for the
+# virtual-clock deadline simulation.  The values are in the ballpark of
+# this host's measured dispatch times but their role is to be *fixed*:
+# the miss-rate gate scores the scheduling policy, not the hardware.
+MODEL_COST = {(120, 160): 0.02, (240, 320): 0.06}
+# Deadline ladder for the tight regime: feasible-only-with-early-close,
+# comfortable, and generous budgets interleaved across the shape cycle
+# (the floor sits above the largest bucket's modeled dispatch cost, so
+# every budget is feasible for a scheduler that closes batches early).
+TIGHT_DEADLINES = (0.09, 0.20, 0.50)
+SLACK_DEADLINE = 1.0
+# Inter-arrival gap: ~55% modeled utilization.  The deadline regime probes
+# *scheduling* (does grid-fill waiting bust tight budgets?), not overload —
+# under overload no policy can win and throughput batching is optimal.
+ARRIVAL_GAP_S = 0.02
 
 
 def _cfg() -> PipelineConfig:
@@ -84,6 +111,7 @@ def run_service(frames: list[np.ndarray], *, batch_size: int,
         svc.step()
     svc.run()  # traffic over: flush partial grids and drain in-flight
     dt = time.perf_counter() - t0
+    svc.close()
     assert all(r.done for r in reqs)
     lats = [r.latency_s * 1e3 for r in reqs]
     return {
@@ -93,6 +121,85 @@ def run_service(frames: list[np.ndarray], *, batch_size: int,
         "ms_per_request": dt / len(reqs) * 1e3,
         "latency_ms_p50": percentile(lats, 50),
         "latency_ms_p99": percentile(lats, 99),
+        "dispatches": svc.dispatches,
+    }
+
+
+def run_deadline_sim(frames: list[np.ndarray], deadlines: list[float], *,
+                     batch_size: int, max_queue: int | None,
+                     use_deadlines: bool) -> dict:
+    """Deterministic deadline-regime simulation on a ``VirtualClock``.
+
+    Requests arrive every ``ARRIVAL_GAP_S`` of virtual time; each dispatch
+    advances the clock by the bucket's ``MODEL_COST`` and is drained
+    immediately (deterministic completion stamps).  The detection compute
+    itself runs for real — only *time* is modeled, so the miss rate and
+    virtual latencies depend on nothing but the scheduling policy.
+
+    ``use_deadlines=False`` is the FIFO reference: the same traffic runs
+    through the deadline-blind throughput scheduler and is scored post-hoc
+    against the same budgets.
+    """
+    clock = VirtualClock()
+    svc = DetectionService(
+        _cfg(), buckets=BUCKETS, batch_size=batch_size, clock=clock,
+        max_queue=max_queue,   # same backpressure bound for EDF and FIFO
+    )
+    for shape, grid in svc.grids.items():
+        grid.est_s = MODEL_COST[shape]   # the sim's own cost model
+        grid.est_measured = True         # modeled == measured for the sim
+    reqs = [
+        DetectionRequest(
+            uid=i, frame=f,
+            deadline_s=deadlines[i % len(deadlines)] if use_deadlines
+            else None,
+        )
+        for i, f in enumerate(frames)
+    ]
+    i = 0
+    for _ in range(100_000):
+        while i < len(reqs) and i * ARRIVAL_GAP_S <= clock() + 1e-12:
+            svc.submit(reqs[i])
+            i += 1
+        arrived_all = i == len(reqs)
+        d0 = svc.dispatches
+        svc.step(flush=arrived_all)
+        if svc.dispatches > d0:
+            shape, _, _ = svc.dispatch_log[-1]
+            clock.advance(MODEL_COST[shape])
+            svc.drain()                  # deterministic completion stamp
+            continue
+        if not arrived_all:
+            # idle until the next arrival or the next early-close point,
+            # whichever comes first (EDF wakes up to protect deadlines)
+            targets = [i * ARRIVAL_GAP_S]
+            targets += [
+                g.tightest_deadline() - g.est_s
+                for g in svc.grids.values() if g.active
+            ]
+            nxt = min(t for t in targets if np.isfinite(t))
+            clock.advance(max(nxt - clock(), 0.0) or 1e-4)
+        elif svc.queued or any(g.active for g in svc.grids.values()):
+            clock.advance(1e-4)          # drain stragglers
+        else:
+            break
+    svc.close()
+    assert all(r.done for r in reqs)
+    budgets = [deadlines[i % len(deadlines)] for i in range(len(reqs))]
+    missed = [
+        (not r.ok) or r.latency_s > b for r, b in zip(reqs, budgets)
+    ]
+    lats = [r.latency_s * 1e3 for r in reqs if r.ok]
+    return {
+        "n_requests": len(reqs),
+        "policy": "edf" if use_deadlines else "fifo",
+        "miss_rate": float(np.mean(missed)),
+        "missed": int(np.sum(missed)),
+        "shed_deadline": svc.shed_deadline,
+        "rejected_queue_full": svc.rejected_queue_full,
+        "completed_late": svc.completed_late,
+        "latency_ms_p50_virtual": percentile(lats, 50) if lats else 0.0,
+        "latency_ms_p99_virtual": percentile(lats, 99) if lats else 0.0,
         "dispatches": svc.dispatches,
     }
 
@@ -149,7 +256,10 @@ def main() -> None:
 
     n_mixed = 20 if args.quick else 60
     n_single = 16 if args.quick else 48
-    repeats = 2 if args.quick else 3
+    # min-wall over interleaved repeats: this 2-core host shows >2x
+    # round-to-round contention noise, so 2 repeats flaked the in-run
+    # svc8-vs-raw8 comparison; 3 keeps quick mode honest
+    repeats = 3
 
     # Interleave repeats of every workload and keep each one's best run:
     # min-wall is robust to the CPU contention spikes a shared host shows,
@@ -177,6 +287,20 @@ def main() -> None:
         best["mixed"], best["naive"], best["svc8"], best["raw8"]
     )
 
+    # Deadline regime: deterministic virtual-clock simulation — one run
+    # each, no repeats (there is no noise to average away).
+    n_dl = 24 if args.quick else 48
+    dl_frames = make_requests(n_dl, MIXED_SHAPES)
+    slack = run_deadline_sim(dl_frames, [SLACK_DEADLINE],
+                             batch_size=4, max_queue=None,
+                             use_deadlines=True)
+    tight_edf = run_deadline_sim(dl_frames, list(TIGHT_DEADLINES),
+                                 batch_size=4, max_queue=8,
+                                 use_deadlines=True)
+    tight_fifo = run_deadline_sim(dl_frames, list(TIGHT_DEADLINES),
+                                  batch_size=4, max_queue=8,
+                                  use_deadlines=False)
+
     rows = [
         ["service mixed (b=4)", mixed["n_requests"],
          f"{mixed['requests_per_s']:.2f}", f"{mixed['ms_per_request']:.1f}",
@@ -197,6 +321,25 @@ def main() -> None:
         rows,
     )
 
+    dl_rows = [
+        [name, r["n_requests"], f"{r['miss_rate']:.1%}", r["shed_deadline"],
+         r["rejected_queue_full"], r["completed_late"],
+         f"{r['latency_ms_p50_virtual']:.1f}",
+         f"{r['latency_ms_p99_virtual']:.1f}"]
+        for name, r in (
+            ("slack deadlines (EDF)", slack),
+            ("tight deadlines (EDF)", tight_edf),
+            ("tight deadlines (FIFO ref)", tight_fifo),
+        )
+    ]
+    print_table(
+        "deadline regime (virtual clock, modeled dispatch cost — "
+        "deterministic)",
+        ["workload", "reqs", "miss", "shed", "rej", "late",
+         "p50 ms*", "p99 ms*"],
+        dl_rows,
+    )
+
     speedup_vs_naive = mixed["requests_per_s"] / naive["requests_per_s"]
     # Two gates, both required.  mixed_ge_batch8 is the PR acceptance bar
     # (mixed traffic sustains the batch-8 single-res path) but mixed
@@ -212,6 +355,13 @@ def main() -> None:
     service_holds_batch8 = (
         svc8["requests_per_s"] >= raw8["requests_per_s"] * 0.95
     )
+    # Deterministic QoS gates: slack deadlines must see zero misses, and
+    # EDF must never miss more than the deadline-blind FIFO reference on
+    # the same traffic.  Virtual-clock scheduling cannot flake on a noisy
+    # host, so both are hard gates.
+    deadline_slack_zero_miss = slack["missed"] == 0
+    deadline_edf_le_fifo = tight_edf["miss_rate"] <= tight_fifo["miss_rate"]
+
     print(f"\nmixed service vs naive loop: {speedup_vs_naive:.2f}x")
     print(f"mixed service vs batch-8 single-res path: "
           f"{mixed['requests_per_s']:.2f} vs {raw8['requests_per_s']:.2f} "
@@ -219,6 +369,11 @@ def main() -> None:
     print(f"service(b=8) vs raw batch-8 path within bucket: "
           f"{svc8['requests_per_s']:.2f} vs {raw8['requests_per_s']:.2f} "
           f"req/s -> {'OK' if service_holds_batch8 else 'REGRESSION'}")
+    print(f"slack deadlines: {slack['missed']} misses "
+          f"-> {'OK' if deadline_slack_zero_miss else 'FAIL'}")
+    print(f"tight deadlines, EDF vs FIFO miss rate: "
+          f"{tight_edf['miss_rate']:.1%} vs {tight_fifo['miss_rate']:.1%} "
+          f"-> {'OK' if deadline_edf_le_fifo else 'FAIL'}")
 
     out = {
         "meta": {
@@ -226,19 +381,31 @@ def main() -> None:
             "quick": args.quick,
             "buckets": [list(b) for b in BUCKETS],
             "mixed_shapes": [list(s) for s in MIXED_SHAPES],
+            "deadline_model_cost_s": {
+                f"{h}x{w}": c for (h, w), c in MODEL_COST.items()
+            },
+            "tight_deadlines_s": list(TIGHT_DEADLINES),
+            "slack_deadline_s": SLACK_DEADLINE,
+            "arrival_gap_s": ARRIVAL_GAP_S,
         },
         "service_mixed": mixed,
         "naive_mixed": naive,
         "service_single_b8": svc8,
         "raw_batch8": raw8,
+        "deadline_slack": slack,
+        "deadline_tight_edf": tight_edf,
+        "deadline_tight_fifo": tight_fifo,
         "speedup_vs_naive": speedup_vs_naive,
         "mixed_ge_batch8": mixed_ge_batch8,
         "service_holds_batch8": service_holds_batch8,
+        "deadline_slack_zero_miss": deadline_slack_zero_miss,
+        "deadline_edf_le_fifo": deadline_edf_le_fifo,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2, default=float)
     print(f"wrote {args.out}")
-    if not (mixed_ge_batch8 and service_holds_batch8):
+    if not (mixed_ge_batch8 and service_holds_batch8
+            and deadline_slack_zero_miss and deadline_edf_le_fifo):
         raise SystemExit(1)
 
 

@@ -14,8 +14,16 @@ stream), detection quality is scored live against the planted ground truth,
 and ``--auto-max-edges`` lets the edge-density estimator size the Hough
 compaction buffer per batch.
 
+``--deadline-ms`` switches the loop from the raw stream to the
+deadline-aware ``DetectionService`` (``serve/detection.py``): every frame
+becomes a request with that latency budget, the dispatcher schedules
+earliest-deadline-first with early batch close, and the run reports the
+miss/shed counts next to throughput — the paper's real-time contract made
+observable.  ``--render-overlay`` asks for the per-request phase-3 overlay
+on the final frame (the paper's elided image-generation phase, on demand).
+
     PYTHONPATH=src python examples/video_pipeline.py --frames 16 --batch 4 \
-        --scenario mixed --auto-max-edges
+        --scenario mixed --auto-max-edges --deadline-ms 500
 """
 
 import argparse
@@ -23,12 +31,72 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import (
     HoughConfig, LineDetector, PipelineConfig, aggregate_scores,
     plan_line_detection, score_frame,
 )
 from repro.data import scenario_names, scenario_stream
+
+
+def serve_with_deadlines(args, cfg: PipelineConfig) -> None:
+    """Drive the stream through the deadline-aware DetectionService:
+    per-request latency budgets, EDF dispatch with early batch close, and
+    explicit miss accounting instead of silent tail latency."""
+    from repro.serve.detection import DetectionRequest, DetectionService
+
+    shape = (args.height, args.width)
+    svc = DetectionService(cfg, buckets=(shape,), batch_size=args.batch)
+    svc.detect_many([np.zeros(shape, np.float32)] * args.batch)  # warm
+    if args.render_overlay:
+        # warm the render-bound program too, or its compile lands inside
+        # the timed loop and masquerades as a deadline miss
+        warm = DetectionRequest(uid=-1, frame=np.zeros(shape, np.float32),
+                                render_output=True)
+        svc.submit(warm)
+        svc.run()
+    svc.dispatches = svc.completed = 0
+    scenes = list(scenario_stream(args.scenario, args.frames,
+                                  args.height, args.width, seed=2))
+    reqs = [
+        DetectionRequest(
+            uid=i, frame=s.image, deadline_s=args.deadline_ms / 1e3,
+            render_output=args.render_overlay and i == len(scenes) - 1,
+        )
+        for i, s in enumerate(scenes)
+    ]
+    t0 = time.time()
+    for r in reqs:       # drip-feed: one arrival per engine step
+        svc.submit(r)
+        svc.step()
+    svc.run()
+    dt = time.time() - t0
+    svc.close()
+    answered = [r for r in reqs if r.ok]
+    missed = sum(r.missed_deadline for r in reqs)
+    lat = sorted(r.latency_s for r in answered)
+    p99 = (f"p99 latency {1e3 * lat[int(0.99 * (len(lat) - 1))]:.1f} ms"
+           if lat else "no requests answered")
+    print(f"\n{len(reqs)} requests in {dt:.2f}s -> "
+          f"{len(reqs)/dt:.1f} req/s at deadline {args.deadline_ms:.0f} ms; "
+          f"answered {len(answered)}, shed {svc.shed_deadline}, "
+          f"rejected {svc.rejected_queue_full}, late {svc.completed_late} "
+          f"-> miss rate {missed/len(reqs):.0%}; {p99}")
+    if answered:
+        agg = aggregate_scores([
+            score_frame(r.result.peaks, r.result.valid,
+                        scenes[r.uid].lines_rho_theta)
+            for r in answered
+        ])
+        print(f"detection quality (answered requests): "
+              f"F1={agg['f1']:.2f} (P={agg['precision']:.2f} "
+              f"R={agg['recall']:.2f})")
+    if args.render_overlay and reqs[-1].ok:
+        rend = np.asarray(reqs[-1].result.rendered)
+        print(f"final-frame overlay: shape {rend.shape}, "
+              f"{int((rend[..., 0] == 255).sum())} red line pixels "
+              f"(per-request render_output)")
 
 
 def main():
@@ -46,7 +114,19 @@ def main():
     ap.add_argument("--auto-max-edges", action="store_true",
                     help="size the compaction buffer from the edge-density "
                          "estimate (HoughConfig(max_edges='auto'))")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="serve frames through the deadline-aware "
+                         "DetectionService with this latency budget per "
+                         "request (EDF + early batch close) and report the "
+                         "miss rate")
+    ap.add_argument("--render-overlay", action="store_true",
+                    help="with --deadline-ms: request the rendered line "
+                         "overlay for the final frame (per-request "
+                         "render_output)")
     args = ap.parse_args()
+    if args.render_overlay and args.deadline_ms is None:
+        ap.error("--render-overlay demonstrates per-request render on the "
+                 "service path; it needs --deadline-ms")
     if args.auto_max_edges and args.no_compact:
         ap.error("--auto-max-edges sizes the compaction buffer; "
                  "it needs compaction on (drop --no-compact)")
@@ -55,12 +135,17 @@ def main():
     for p in plan_line_detection(args.height, args.width):
         print(f"  {p.stage:18s} -> {p.unit.upper():4s} ({p.reason})")
 
-    det = LineDetector(PipelineConfig(
+    cfg = PipelineConfig(
         hough=HoughConfig(
             compact=not args.no_compact,
             max_edges="auto" if args.auto_max_edges else None,
         )
-    ))
+    )
+    if args.deadline_ms is not None:
+        serve_with_deadlines(args, cfg)
+        return
+
+    det = LineDetector(cfg)
     if args.auto_max_edges:
         from repro.core import max_edge_tiers
         from repro.kernels.ops import default_max_edges

@@ -14,7 +14,10 @@ python -m pytest -q -m "scenarios and not slow" -x
 # serving layer next: plan resolution + the continuous-batching detection
 # service (pytest.ini marker `serve`)
 python -m pytest -q -m "serve and not slow" -x
-python -m pytest -q -m "not slow and not scenarios and not serve"
+# deadline/QoS layer: virtual-clock tests, fully deterministic (marker
+# `deadline`) — backpressure, EDF + early close, prefetch staging, render
+python -m pytest -q -m "deadline and not slow" -x
+python -m pytest -q -m "not slow and not scenarios and not serve and not deadline"
 # CI F1 gate: regenerate the scenario suite and compare per-family F1
 # against the committed baseline (benchmarks/baselines/f1_baseline.json)
 python -m benchmarks.scenario_suite --quick

@@ -163,6 +163,23 @@ class DetectionPlan:
         resolved, tiers = resolve_static(cfg, height, width)
         return cls(resolved, height, width, batch, tiers)
 
+    # --- derived plans -------------------------------------------------
+    def with_render(self, render: bool) -> "DetectionPlan":
+        """The same plan with the render phase bound on or off.
+
+        Rendering is a config-static knob of the jitted body, so each
+        value is its own compiled program; binding it at the plan level
+        lets callers with per-request render demands (the detection
+        service) flip between two frozen plans instead of re-resolving.
+        Detection outputs (lines/valid/peaks/edges) are computed by the
+        same ops either way — only the extra ``rendered`` field differs.
+        """
+        if self.cfg.render_output == render:
+            return self
+        return dataclasses.replace(
+            self, cfg=dataclasses.replace(self.cfg, render_output=render)
+        )
+
     # --- execution ----------------------------------------------------
     def _dispatch(self, images: jax.Array) -> DetectionResult:
         return _detect(self.cfg, images, tiers=self.tiers)

@@ -8,14 +8,26 @@ finished requests free their slots immediately.  Caches are linear, ring
 is cache-layout agnostic because the model owns its cache pytree.
 
 ``DetectionService`` applies the same slot/bucket design to the paper's
-line-detection stack (``serve/detection.py``): mixed-resolution frame
-requests pad to resolution buckets, fill fixed batch slots, and drain
-double-buffered through resolve-once ``DetectionPlan``s (``core/plan.py``).
+line-detection stack (``serve/detection.py``) and adds the QoS layer an AV
+control loop needs: mixed-resolution frame requests pad to resolution
+buckets and fill fixed batch slots; a bounded admission queue applies
+backpressure (``RequestStatus.QUEUE_FULL`` / ``DEADLINE_EXCEEDED`` instead
+of silent tail latency); requests with ``deadline_s`` schedule earliest-
+deadline-first with early batch close, falling back to full-grid-first
+throughput mode when no deadlines are set; host staging runs ahead on a
+``PrefetchStager`` worker thread; and every timing decision reads an
+injectable clock (``VirtualClock`` makes the whole policy deterministic
+under test).  Results drain double-buffered through resolve-once
+``DetectionPlan``s (``core/plan.py``), cropped back bit-exact — including
+the per-request ``render_output`` overlay.
 """
 
 from .detection import (  # noqa: F401
     DetectionRequest,
     DetectionService,
+    PrefetchStager,
+    RequestStatus,
+    VirtualClock,
     crop_result,
     pad_to_bucket,
 )

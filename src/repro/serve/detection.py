@@ -1,43 +1,69 @@
-"""Continuous-batching detection service: mixed-resolution request traffic.
+"""Deadline-aware continuous-batching detection service.
 
 The LM engine (``serve/engine.py``) serves token traffic with a fixed slot
 grid; this module applies the same slot/bucket design to the line-detection
-stack so heavy mixed-resolution camera traffic (the ROADMAP north star)
-rides the batched plan path instead of a per-frame loop:
+stack — and, because the paper's deployment is an AV control loop where a
+*late* detection is a *useless* detection, layers an explicit QoS policy on
+top of the PR-3 throughput machinery:
 
   * **Resolution buckets** — requests carry frames of heterogeneous
     resolutions; each frame pads (tapered edge replication, top-left
-    anchored) to the smallest registered bucket that holds it.  Top-left
-    anchoring keeps the original pixel coordinates, so detected
-    (rho, theta) peaks need no remapping; line endpoints parameterize the
-    infinite line in those same coordinates (they can lie outside any
-    frame, padded or native — clip when rasterizing, as ``render_lines``
-    does).
+    anchored) to the smallest registered bucket that holds it, and results
+    crop back bit-exact (``pad_to_bucket`` / ``crop_result``).
   * **Fixed batch slots** — every bucket owns a grid of ``batch_size``
-    slots.  Admission fills free slots from the queue; a dispatch always
-    runs the full grid (empty slots carry zero frames that the
-    frame-independent kernels ignore), so each bucket compiles exactly one
-    program — the same static-shapes-for-lock-step trade the LM engine
-    makes.
-  * **Double-buffered drain** — while the device computes bucket batch k,
-    the host stages batch k+1 (admission, padding, one explicit
-    ``device_put``).  Completion splits the batched result back to the
-    requests, crops per-frame fields to the original resolution, and frees
-    the slots for immediate readmission — requests from different arrival
-    times coexist in one grid, which is what "continuous batching" means.
+    slots; a dispatch always runs the full grid (empty slots carry zero
+    frames the frame-independent kernels ignore), so each bucket compiles
+    exactly one program per render binding.
+  * **Backpressure** — the admission queue is bounded (``max_queue``):
+    submits beyond the bound are *rejected* with
+    ``RequestStatus.QUEUE_FULL`` instead of silently stretching the tail,
+    and queued requests that are expired — or whose remaining budget is
+    below one dispatch's estimated service time (hopeless) — are *shed*
+    with ``RequestStatus.DEADLINE_EXCEEDED`` before they waste a slot.
+    Every request terminates with an explicit status; nothing blows up
+    latency silently, and doomed work never dominoes feasible work.
+  * **QoS scheduling** — requests may carry a ``deadline_s`` budget and a
+    ``priority`` tiebreak.  Admission within a bucket is earliest-deadline-
+    first; dispatch picks the occupied grid with the tightest deadline and
+    *closes a batch early* (dispatches a partial grid) when waiting for
+    more traffic would bust that deadline, given a per-bucket service-time
+    estimate (EMA of measured dispatch times).  With no deadlines anywhere
+    admitted the scheduler falls back to PR-3's full-grid-first round-robin
+    throughput mode — same traffic, bit-identical results.
+  * **Prefetch staging** — host-side staging (grayscale decode + taper
+    pad) runs ahead on a ``PrefetchStager`` worker thread: frame N+1
+    stages while the device computes batch N.  The worker touches only
+    numpy; the single explicit ``jax.device_put`` per dispatch stays on
+    the scheduler thread, so the post-warmup hot loop still runs under
+    ``jax.transfer_guard("disallow")``.
+  * **Per-request rendering** — ``DetectionRequest(render_output=True)``
+    returns the paper's phase-3 overlay for that request only, cropped
+    back to the native resolution bit-exact; the grid flips to the plan's
+    render binding (``DetectionPlan.with_render``) only when someone in
+    the batch asked.
+  * **Injectable clock** — every timestamp and every deadline/backpressure
+    decision reads ``self.clock()`` (default ``time.perf_counter``).
+    Passing a :class:`VirtualClock` makes the whole policy deterministic:
+    ``tests/test_service_deadlines.py`` and the deadline regime of
+    ``benchmarks/service_suite.py`` drive traffic on virtual time, so no
+    assertion ever races the noisy 2-core bench host.
 
-Plans come from ``core/plan.py``: one frozen ``DetectionPlan`` per bucket,
-resolved once (device-side ``max_edges`` autotune included).
-``benchmarks/service_suite.py`` measures throughput/latency against the
-naive per-frame loop and writes ``BENCH_service.json``.
+Plans come from ``core/plan.py``: one frozen ``DetectionPlan`` per bucket
+(plus its render-bound twin on demand).  ``benchmarks/service_suite.py``
+measures throughput/latency and the deadline-regime miss rates and writes
+``BENCH_service.json``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import enum
+import heapq
+import math
 import time
 from collections import deque
-from typing import Iterable, Optional, Sequence
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Iterable, Optional, Sequence
 
 import jax
 import numpy as np
@@ -52,35 +78,117 @@ DEFAULT_BUCKETS: tuple[tuple[int, int], ...] = (
 )
 
 
+class RequestStatus(enum.Enum):
+    """Terminal disposition of a request (plus the initial PENDING)."""
+    PENDING = "pending"
+    DONE = "done"                          # result delivered
+    QUEUE_FULL = "queue_full"              # rejected at submit (backpressure)
+    DEADLINE_EXCEEDED = "deadline_exceeded"  # shed before dispatch
+
+
+class VirtualClock:
+    """Deterministic monotonic clock: advances only when told to.
+
+    Inject as ``DetectionService(..., clock=VirtualClock())`` to make every
+    deadline/backpressure/early-close decision — and every latency stamp —
+    a pure function of the driven schedule.  The unit for ``advance`` is
+    seconds, same as ``time.perf_counter``.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self.t = float(start)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        assert dt >= 0.0, dt
+        self.t += float(dt)
+        return self.t
+
+
+class PrefetchStager:
+    """Single worker thread staging host-side work ahead of the device
+    (a one-worker ``ThreadPoolExecutor`` under a staging-shaped API).
+
+    ``stage(fn, *args)`` enqueues ``fn(*args)`` and returns a
+    ``concurrent.futures.Future``; the service resolves it at admission
+    time, by which point the worker has usually finished — frame N+1 pads
+    while the device computes batch N.  The worker runs numpy only
+    (grayscale decode + taper pad); ``jax.device_put`` stays on the
+    scheduler thread so ``transfer_guard("disallow")`` still polices the
+    hot loop.  Staging is deterministic, so the threaded stream is
+    bit-for-bit the synchronous one (property-tested).
+    """
+
+    def __init__(self):
+        self._pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="detection-prefetch"
+        )
+
+    def stage(self, fn, *args) -> Future:
+        return self._pool.submit(fn, *args)
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+
+
 @dataclasses.dataclass
 class DetectionRequest:
-    """One frame in, one ``DetectionResult`` out."""
+    """One frame in, one ``DetectionResult`` (or explicit refusal) out."""
     uid: int
     frame: np.ndarray                       # (H, W) or (H, W, 3)
+    deadline_s: Optional[float] = None      # latency budget from submit
+    priority: int = 0                       # deadline tiebreak: lower first
+    render_output: bool = False             # per-request phase-3 overlay
     # filled by the service
     result: Optional[DetectionResult] = None
+    status: RequestStatus = RequestStatus.PENDING
     bucket: Optional[tuple[int, int]] = None
-    done: bool = False
+    done: bool = False                      # terminal (any status)
     submitted_at: float = 0.0
     finished_at: float = 0.0
+    deadline_at: Optional[float] = None     # absolute, on the service clock
+    _staged: Optional[Future] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def latency_s(self) -> float:
         return self.finished_at - self.submitted_at
+
+    @property
+    def ok(self) -> bool:
+        return self.status is RequestStatus.DONE
+
+    @property
+    def missed_deadline(self) -> bool:
+        """Shed, rejected, or completed after its deadline."""
+        if self.deadline_at is None:
+            return False
+        if self.status in (RequestStatus.QUEUE_FULL,
+                           RequestStatus.DEADLINE_EXCEEDED):
+            return True
+        return self.done and self.finished_at > self.deadline_at
 
 
 class _BucketGrid:
     """Slot grid + staging state for one resolution bucket."""
 
     def __init__(self, shape: tuple[int, int], batch_size: int,
-                 plan: DetectionPlan):
+                 plan: DetectionPlan, est_s: float):
         self.shape = shape
         self.plan = plan
+        self.est_s = est_s      # EMA service-time estimate for one dispatch
+        self.est_measured = False   # True once a real dispatch fed the EMA
         self.slots: list[Optional[DetectionRequest]] = [None] * batch_size
         self.staged = np.zeros((batch_size, *shape), np.float32)
-        # (requests snapshot, async result) awaiting completion
+        # (requests snapshot, async result, dispatch time, warm?) awaiting
+        # completion; warm=False marks a compiling dispatch whose wall time
+        # must not feed the service-time EMA
         self.in_flight: Optional[
-            tuple[list[Optional[DetectionRequest]], DetectionResult]
+            tuple[list[Optional[DetectionRequest]], DetectionResult,
+                  float, bool]
         ] = None
 
     @property
@@ -92,6 +200,12 @@ class _BucketGrid:
             if s is None:
                 return i
         return None
+
+    def tightest_deadline(self) -> float:
+        """Earliest deadline among slotted requests (inf if none)."""
+        ds = [r.deadline_at for r in self.slots
+              if r is not None and r.deadline_at is not None]
+        return min(ds) if ds else math.inf
 
 
 # Pad decay horizon (pixels): the diffused pad reaches the flat fill level
@@ -159,7 +273,7 @@ def crop_result(res: DetectionResult, height: int, width: int
     original coordinates (top-left anchoring) and ``lines`` endpoints
     parameterize the same infinite lines (out-of-frame endpoints are
     normal — the unbatched detector produces them too); raster fields
-    crop to (H, W)."""
+    (edges, the rendered overlay) crop to (H, W)."""
     return DetectionResult(
         res.lines, res.valid, res.peaks,
         res.edges[..., :height, :width],
@@ -169,32 +283,84 @@ def crop_result(res: DetectionResult, height: int, width: int
 
 
 class DetectionService:
-    """Request-level line detection over fixed per-bucket batch slots.
+    """Request-level line detection with backpressure + QoS over fixed
+    per-bucket batch slots.
 
-    ``submit`` enqueues requests; ``step`` admits, dispatches one bucket
-    grid, and completes the previously dispatched one (double-buffering);
-    ``run`` drains everything.  ``detect_many`` is the convenience loop the
+    ``submit`` enqueues (or rejects) requests; ``step`` sheds expired work,
+    admits earliest-deadline-first, dispatches one bucket grid — closing a
+    batch early when the tightest admitted deadline can't wait — and
+    completes the previously dispatched one (double-buffering); ``run``
+    drains everything.  ``detect_many`` is the convenience loop the
     benchmarks use.
+
+    QoS knobs:
+      * ``max_queue`` — bound on the admission queue (None = unbounded);
+        submits beyond it return ``RequestStatus.QUEUE_FULL``.
+      * ``est_dispatch_s`` / ``est_smoothing`` — initial per-bucket
+        service-time estimate and its EMA factor; the early-close rule
+        dispatches a partial grid when ``deadline - now <= est``.
+      * ``clock`` — injectable monotonic clock (see :class:`VirtualClock`).
+      * ``prefetch`` — stage frames on a :class:`PrefetchStager` worker
+        thread (True, default) or synchronously at admission (False);
+        results are bit-identical either way.
     """
 
     def __init__(self, cfg: PipelineConfig = PipelineConfig(), *,
                  buckets: Sequence[tuple[int, int]] = DEFAULT_BUCKETS,
-                 batch_size: int = 4):
+                 batch_size: int = 4,
+                 max_queue: Optional[int] = None,
+                 est_dispatch_s: float = 0.05,
+                 est_smoothing: float = 0.3,
+                 clock: Callable[[], float] = time.perf_counter,
+                 prefetch: bool = True):
         self.cfg = cfg
         self.batch_size = batch_size
         self.buckets = tuple(sorted(buckets))
+        self.max_queue = max_queue
+        self.est_smoothing = est_smoothing
+        self.clock = clock
+        self.prefetch = prefetch
         self.grids = {
             shape: _BucketGrid(
                 shape, batch_size,
                 DetectionPlan.build(cfg, *shape, batch=batch_size),
+                est_dispatch_s,
             )
             for shape in self.buckets
         }
-        self.queue: deque[DetectionRequest] = deque()
-        self._rr = 0            # round-robin cursor over buckets
-        self._warmed: set[tuple[int, int]] = set()
+        # EDF admission queues: heap of (deadline, priority, seq, request)
+        self.queues: dict[
+            tuple[int, int],
+            list[tuple[float, int, int, DetectionRequest]],
+        ] = {shape: [] for shape in self.buckets}
+        self._seq = 0
+        self._rr = 0            # round-robin cursor (throughput mode)
+        self._warmed: set[tuple[tuple[int, int], bool]] = set()
+        self._loader: Optional[PrefetchStager] = None
         self.dispatches = 0
         self.completed = 0
+        self.rejected_queue_full = 0
+        self.shed_deadline = 0
+        self.completed_late = 0
+        # (shape, active slots, render) per dispatch — introspection for
+        # tests/benchmarks; bounded so a long-running service cannot
+        # accrete it without limit
+        self.dispatch_log: deque[tuple[tuple[int, int], int, bool]] = (
+            deque(maxlen=4096)
+        )
+
+    # --- lifecycle ------------------------------------------------------
+    def close(self) -> None:
+        """Stop the prefetch worker (idempotent)."""
+        if self._loader is not None:
+            self._loader.close()
+            self._loader = None
+
+    def __enter__(self) -> "DetectionService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # --- bucketing -----------------------------------------------------
     def bucket_for(self, frame: np.ndarray) -> tuple[int, int]:
@@ -207,28 +373,108 @@ class DetectionService:
             f"frame {frame.shape} exceeds every bucket {self.buckets}"
         )
 
+    @property
+    def queued(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
     # --- request lifecycle ---------------------------------------------
-    def submit(self, req: DetectionRequest) -> None:
+    def submit(self, req: DetectionRequest) -> RequestStatus:
+        """Enqueue ``req`` — or reject it with ``QUEUE_FULL`` when the
+        bounded admission queue is at capacity (backpressure: the caller
+        learns *now*, instead of every queued request learning late)."""
         req.bucket = self.bucket_for(req.frame)
-        req.submitted_at = time.perf_counter()
-        self.queue.append(req)
+        now = self.clock()
+        req.submitted_at = now
+        if req.deadline_s is not None:
+            req.deadline_at = now + req.deadline_s
+        if self.max_queue is not None and self.queued >= self.max_queue:
+            req.status = RequestStatus.QUEUE_FULL
+            req.done = True
+            req.finished_at = now
+            self.rejected_queue_full += 1
+            return req.status
+        # Prefetch pays only when staging does real work (luma conversion
+        # or taper padding).  A grayscale frame already at bucket shape is
+        # a pass-through: shipping it to the worker would add one thread
+        # round-trip of pure overhead per request — measurable on a 2-core
+        # host where the worker steals cycles from device compute.
+        needs_staging = (
+            req.frame.ndim == 3 or req.frame.shape[:2] != req.bucket
+            or req.frame.dtype != np.float32
+        )
+        if self.prefetch and needs_staging:
+            if self._loader is None:
+                self._loader = PrefetchStager()
+            req._staged = self._loader.stage(
+                pad_to_bucket, req.frame, req.bucket
+            )
+        self._seq += 1
+        key = req.deadline_at if req.deadline_at is not None else math.inf
+        heapq.heappush(
+            self.queues[req.bucket], (key, req.priority, self._seq, req)
+        )
+        return RequestStatus.PENDING
+
+    def _shed_expired(self) -> None:
+        """Shed queued requests that are expired — or *hopeless*: a queued
+        request whose remaining budget is below one dispatch's estimated
+        service time cannot finish in time even if it is admitted right
+        now, and running it anyway is the EDF overload pathology (doomed
+        work dominoes feasible work into lateness).  Either way the
+        explicit ``DEADLINE_EXCEEDED`` is the honest answer the admission
+        contract promises — instead of a result that arrives too late to
+        steer with.
+
+        The hopeless test only engages once the grid's estimate is
+        *measured* (a real dispatch fed the EMA): shedding against an
+        unvalidated prior could latch into refusing an entirely feasible
+        workload forever, since the estimate only corrects on completions.
+        """
+        now = self.clock()
+        for shape, q in self.queues.items():
+            grid = self.grids[shape]
+            est = grid.est_s if grid.est_measured else 0.0
+            if not q or q[0][0] > now + est:  # heap min: tightest deadline
+                continue
+            keep = []
+            for entry in q:
+                key, _, _, req = entry
+                if key <= now or key < now + est:
+                    req.status = RequestStatus.DEADLINE_EXCEEDED
+                    req.done = True
+                    req.finished_at = now
+                    req._staged = None
+                    self.shed_deadline += 1
+                else:
+                    keep.append(entry)
+            q[:] = keep
+            heapq.heapify(q)
 
     def _admit(self) -> None:
-        """Fill free slots in arrival order; skip over requests whose
-        bucket grid is full (they keep their queue position)."""
-        blocked: list[DetectionRequest] = []
-        while self.queue:
-            req = self.queue.popleft()
-            grid = self.grids[req.bucket]
-            slot = grid.free_slot()
-            if slot is None:
-                blocked.append(req)
-                if all(g.free_slot() is None for g in self.grids.values()):
+        """Fill free slots earliest-deadline-first within each bucket
+        (no-deadline requests order FIFO after all deadlined ones; equal
+        deadlines tiebreak on ``priority`` then arrival).  Staged frames
+        come from the prefetch worker when enabled — admission only copies
+        the finished pad into the slot buffer."""
+        for shape in self.buckets:
+            grid = self.grids[shape]
+            q = self.queues[shape]
+            while q:
+                slot = grid.free_slot()
+                if slot is None:
                     break
-                continue
-            grid.slots[slot] = req
-            grid.staged[slot] = pad_to_bucket(req.frame, grid.shape)
-        self.queue.extendleft(reversed(blocked))
+                _, _, _, req = heapq.heappop(q)
+                # resolve staging BEFORE taking the slot: if the prefetch
+                # worker raised, the exception surfaces here with the
+                # request un-slotted (still PENDING) — never a DONE result
+                # silently computed from the slot's zeroed frame
+                if req._staged is not None:
+                    staged = req._staged.result()
+                    req._staged = None
+                else:
+                    staged = pad_to_bucket(req.frame, grid.shape)
+                grid.slots[slot] = req
+                grid.staged[slot] = staged
 
     def _reap(self) -> None:
         """Retire any in-flight batch whose result is already ready.
@@ -242,32 +488,89 @@ class DetectionService:
                 continue
             lines = g.in_flight[1].lines
             if getattr(lines, "is_ready", lambda: False)():
-                self._complete(g)
+                # the device finished some unknown time ago (we only just
+                # polled), so dispatch->now includes idle gap, not service
+                # time — deliver the results but keep it out of the EMA
+                self._complete(g, update_est=False)
 
-    def _complete(self, grid: _BucketGrid) -> None:
-        """Resolve the grid's in-flight batch back onto its requests."""
+    def drain(self) -> None:
+        """Block until every in-flight batch has completed and resolved
+        back onto its requests (deterministic completion stamping for
+        virtual-clock drivers — no ``is_ready`` poll races).
+
+        Like ``_reap``, drain's timing samples are idle-contaminated upper
+        bounds, so they can lower the service-time estimate but never
+        raise it: one long idle gap must not push the estimate past every
+        offered deadline (hopeless-shed livelock).  Only back-to-back
+        dispatches — the previous batch still in flight when the next one
+        landed — can raise it."""
+        for g in self.grids.values():
+            self._complete(g, update_est=False)
+
+    def _complete(self, grid: _BucketGrid, *, update_est: bool = True
+                  ) -> None:
+        """Resolve the grid's in-flight batch back onto its requests.
+
+        The dispatch->completion sample ``dt`` feeds the grid's EMA
+        service-time estimate (which drives early close + hopeless shed)
+        under an asymmetric rule.  ``update_est=True`` — the dispatch-
+        completes-previous path in ``step``, where the previous batch was
+        still occupying the device — may move the estimate either way.
+        ``update_est=False`` — ``_reap`` and ``drain``, whose samples
+        include however long the batch sat finished before anyone asked —
+        may only ratchet it *down or hold it* (an idle-contaminated sample
+        is an upper bound on the true service time, so a sample at or
+        below the estimate is still evidence, while a sample above it must
+        never inflate the estimate into shedding feasible work).
+        Compiling (cold) dispatches are excluded entirely: one XLA compile
+        is seconds on this stack, and a seconds-scale estimate would shed
+        every sub-second budget."""
         if grid.in_flight is None:
             return
-        reqs, res = grid.in_flight
+        reqs, res, t_disp, was_warm = grid.in_flight
         grid.in_flight = None
         jax.block_until_ready(res.lines)
-        now = time.perf_counter()
+        now = self.clock()
+        dt = now - t_disp
+        if was_warm and dt > 0.0 and (update_est or dt <= grid.est_s):
+            a = self.est_smoothing
+            grid.est_s = (1.0 - a) * grid.est_s + a * dt
+            grid.est_measured = True
         for i, req in enumerate(reqs):
             if req is None:
                 continue
+            assert not req.done, f"request {req.uid} answered twice"
             H, W = req.frame.shape[:2]
+            want = req.render_output or self.cfg.render_output
+            rendered = (
+                res.rendered[i]
+                if want and res.rendered is not None else None
+            )
             req.result = crop_result(
                 DetectionResult(
                     res.lines[i], res.valid[i], res.peaks[i], res.edges[i],
-                    None if res.rendered is None else res.rendered[i],
+                    rendered,
                 ),
                 H, W,
             )
+            req.status = RequestStatus.DONE
             req.done = True
             req.finished_at = now
+            if req.deadline_at is not None and now > req.deadline_at:
+                self.completed_late += 1
             self.completed += 1
 
-    def _next_grid(self, flush: bool) -> Optional[_BucketGrid]:
+    # --- scheduling -----------------------------------------------------
+    def _deadline_mode(self) -> bool:
+        """QoS scheduling engages iff any *admitted* request carries a
+        deadline; otherwise the service is exactly the PR-3 throughput
+        scheduler (full-grid-first round-robin)."""
+        return any(
+            r is not None and r.deadline_at is not None
+            for g in self.grids.values() for r in g.slots
+        )
+
+    def _next_grid_throughput(self, flush: bool) -> Optional[_BucketGrid]:
         """Round-robin over buckets: FULL grids first (a dispatch always
         computes ``batch_size`` frames, so partial grids waste slots), then
         — only when flushing — any occupied grid."""
@@ -283,45 +586,93 @@ class DetectionService:
                     return grid
         return None
 
+    def _next_grid_deadline(self, flush: bool, now: float
+                            ) -> Optional[_BucketGrid]:
+        """Earliest-deadline-first over occupied grids.
+
+        A grid dispatches when it is full, when it must close early
+        (``tightest deadline - now <= est_s``: one more wait would bust
+        it), or when flushing.  A less urgent grid may only jump ahead of
+        the tightest waiting one if its own dispatch fits inside that
+        grid's slack — EDF with admission control, not strict EDF, so
+        throughput traffic still flows around a slack deadline."""
+        order = sorted(
+            (g for g in self.grids.values() if g.active),
+            key=lambda g: (g.tightest_deadline(),
+                           self.buckets.index(g.shape)),
+        )
+        guard: Optional[tuple[float, float]] = None  # (deadline, est) held
+        for g in order:
+            d = g.tightest_deadline()
+            full = g.active == len(g.slots)
+            urgent = math.isfinite(d) and (d - now) <= g.est_s
+            if full or urgent or flush:
+                if guard is not None:
+                    gd, gest = guard
+                    if gd - now - g.est_s < gest:
+                        continue   # would bust the tighter waiting grid
+                return g
+            if guard is None and math.isfinite(d):
+                guard = (d, g.est_s)
+        return None
+
     def step(self, *, flush: bool = False) -> bool:
-        """Admit -> dispatch one bucket grid -> free its slots for the next
-        admission wave; completion of the *previous* dispatch on that grid
-        happens just before the new one lands (one batch in flight per
-        bucket).  Only full grids dispatch unless ``flush`` — partial
-        batches are for draining, not steady state.  Returns True if any
-        work remains."""
+        """Shed -> admit (EDF) -> dispatch one bucket grid -> free its
+        slots for the next admission wave; completion of the *previous*
+        dispatch on that grid happens just before the new one lands (one
+        batch in flight per bucket).  Without deadlines only full grids
+        dispatch unless ``flush``; with deadlines the tightest grid may
+        close early.  Returns True if any work remains."""
         self._reap()
+        self._shed_expired()
         self._admit()
-        grid = self._next_grid(flush)
+        if self._deadline_mode():
+            grid = self._next_grid_deadline(flush, self.clock())
+        else:
+            grid = self._next_grid_throughput(flush)
         if grid is None:
             # nothing dispatchable: drain whatever is still in flight
-            for g in self.grids.values():
-                self._complete(g)
-            return bool(self.queue) or any(
+            self.drain()
+            return bool(self.queued) or any(
                 g.active for g in self.grids.values()
             )
+        want_render = any(
+            r is not None and r.render_output for r in grid.slots
+        )
+        plan = grid.plan.with_render(True) if want_render else grid.plan
         reqs = list(grid.slots)
         imgs = jax.device_put(grid.staged)
+        warm_key = (grid.shape, plan.cfg.render_output)
+        was_warm = warm_key in self._warmed
+        if was_warm:
+            with jax.transfer_guard("disallow"):
+                res = plan.run(imgs)            # async dispatch of batch k
+        else:
+            # a compile takes seconds: retire the previous batch BEFORE it,
+            # so the blocking-path EMA sample below cannot absorb compile
+            # time (there is no overlap to preserve during a compile), and
+            # est_s cannot inflate into shedding feasible traffic
+            self._complete(grid)
+            res = plan.run(imgs)                # first call compiles
+            self._warmed.add(warm_key)
         # device_put may alias (zero-copy) a numpy buffer on CPU backends:
         # hand the old buffer to the in-flight batch and stage the next
-        # wave into a fresh one rather than mutating shared memory.
+        # wave into a fresh one rather than mutating shared memory.  Only
+        # AFTER a successful dispatch — if plan.run raised, the slots still
+        # hold their requests and a retry must re-ship the real frames,
+        # not a zeroed buffer.
         grid.staged = np.zeros_like(grid.staged)
-        if grid.shape in self._warmed:
-            with jax.transfer_guard("disallow"):
-                res = grid.plan.run(imgs)       # async dispatch of batch k
-        else:
-            res = grid.plan.run(imgs)           # first call compiles
-            self._warmed.add(grid.shape)
         # batch k-1 retires while k computes; if the dispatch above raised,
         # it is still in_flight and a later step/run() drains it
         self._complete(grid)
-        grid.in_flight = (reqs, res)
+        grid.in_flight = (reqs, res, self.clock(), was_warm)
         self.dispatches += 1
+        self.dispatch_log.append((grid.shape, grid.active, want_render))
         grid.slots = [None] * self.batch_size   # slots free immediately
         return True
 
     def run(self, max_steps: int = 10_000) -> None:
-        """Drive until the queue, slots, and in-flight batches drain
+        """Drive until the queues, slots, and in-flight batches drain
         (flushing: partial grids dispatch rather than wait for traffic)."""
         while max_steps > 0:
             busy = self.step(flush=True)
@@ -329,7 +680,7 @@ class DetectionService:
                 g.active or g.in_flight is not None
                 for g in self.grids.values()
             )
-            if not busy and not pending and not self.queue:
+            if not busy and not pending and not self.queued:
                 return
             max_steps -= 1
 

@@ -1,0 +1,520 @@
+"""QoS layer of the detection service, on a virtual clock.
+
+Every test here drives ``DetectionService`` with an injected
+:class:`VirtualClock`: deadlines, backpressure, EDF ordering, and early
+batch close are decided on virtual time, so no assertion depends on wall
+clock, sleeps, or host load (the bench host is a noisy 2-core box).  The
+throughput-mode fallback must stay bit-identical to the PR-3 scheduler,
+and the prefetch-threaded staging path must match synchronous staging
+bit-for-bit.
+"""
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LineDetector, HoughConfig, PipelineConfig
+from repro.core.plan import load_frame
+from repro.serve.detection import (
+    DetectionRequest, DetectionService, PrefetchStager, RequestStatus,
+    VirtualClock, crop_result, pad_to_bucket,
+)
+
+pytestmark = pytest.mark.deadline
+
+BUCKETS = ((96, 128), (120, 160))
+
+
+def _cfg() -> PipelineConfig:
+    return PipelineConfig(hough=HoughConfig(compact=True, max_edges="auto"))
+
+
+def make_svc(**kw) -> DetectionService:
+    kw.setdefault("buckets", BUCKETS)
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("clock", VirtualClock())
+    kw.setdefault("prefetch", False)   # thread coverage is explicit below
+    return DetectionService(_cfg(), **kw)
+
+
+def _frame(h: int, w: int, seed: int = 0) -> np.ndarray:
+    from repro.data import make_scenario
+    return make_scenario("straight", h, w, seed=seed).image
+
+
+# --- virtual clock ----------------------------------------------------------
+
+
+def test_virtual_clock_is_deterministic():
+    clock = VirtualClock()
+    assert clock() == 0.0
+    clock.advance(0.25)
+    clock.advance(0.0)
+    assert clock() == 0.25
+    with pytest.raises(AssertionError):
+        clock.advance(-1.0)
+
+
+# --- EDF ordering -----------------------------------------------------------
+
+
+def test_edf_ordering_within_bucket():
+    """Four requests, two slots: the two *earliest deadlines* dispatch in
+    the first wave regardless of arrival order."""
+    svc = make_svc(buckets=((96, 128),), est_dispatch_s=0.0)
+    deadlines = [4.0, 1.0, 3.0, 2.0]
+    reqs = [DetectionRequest(uid=i, frame=_frame(96, 128, seed=i),
+                             deadline_s=d)
+            for i, d in enumerate(deadlines)]
+    for r in reqs:
+        assert svc.submit(r) is RequestStatus.PENDING
+    assert svc.step()          # admits EDF, grid full, dispatches
+    svc.drain()
+    first_wave = {r.uid for r in reqs if r.done}
+    assert first_wave == {1, 3}          # deadlines 1.0 and 2.0
+    svc.run()
+    assert all(r.ok for r in reqs)
+    assert svc.completed == 4 and svc.completed_late == 0
+
+
+def test_priority_breaks_deadline_ties():
+    svc = make_svc(buckets=((96, 128),), batch_size=1)
+    r_lo = DetectionRequest(uid=0, frame=_frame(96, 128, seed=0),
+                            deadline_s=1.0, priority=5)
+    r_hi = DetectionRequest(uid=1, frame=_frame(96, 128, seed=1),
+                            deadline_s=1.0, priority=0)
+    svc.submit(r_lo)
+    svc.submit(r_hi)           # same deadline_at (clock never moved)
+    svc.step()
+    svc.drain()
+    assert r_hi.done and not r_lo.done   # lower priority value goes first
+    svc.run()
+    assert r_lo.ok
+
+
+def test_no_deadlines_means_throughput_mode_bit_exact():
+    """With no deadlines set (or with uniformly slack ones) the scheduler
+    is the PR-3 full-grid-first path: identical traffic must produce
+    bit-identical results and the same dispatch composition (EDF may order
+    grids differently on ties, but the batches it forms are the same)."""
+    shapes = [(96, 128), (120, 160), (80, 100), (96, 128),
+              (100, 144), (120, 160)]
+    frames = [_frame(h, w, seed=i) for i, (h, w) in enumerate(shapes)]
+
+    plain = make_svc()
+    reqs_plain = plain.detect_many(frames)
+
+    slack = make_svc()
+    reqs_slack = [DetectionRequest(uid=i, frame=f, deadline_s=1000.0)
+                  for i, f in enumerate(frames)]
+    for r in reqs_slack:
+        slack.submit(r)
+    slack.run()
+
+    assert sorted((s, n) for s, n, _ in plain.dispatch_log) == \
+        sorted((s, n) for s, n, _ in slack.dispatch_log)
+    for a, b in zip(reqs_plain, reqs_slack):
+        assert b.ok and not b.missed_deadline
+        np.testing.assert_array_equal(np.asarray(a.result.lines),
+                                      np.asarray(b.result.lines))
+        np.testing.assert_array_equal(np.asarray(a.result.valid),
+                                      np.asarray(b.result.valid))
+        np.testing.assert_array_equal(np.asarray(a.result.peaks),
+                                      np.asarray(b.result.peaks))
+        np.testing.assert_array_equal(np.asarray(a.result.edges),
+                                      np.asarray(b.result.edges))
+
+
+# --- early batch close ------------------------------------------------------
+
+
+def test_early_batch_close_on_tight_deadline():
+    """A lone request in a 4-slot grid waits while its deadline has slack,
+    then closes the batch early (partial dispatch) once one more wait
+    would bust it — decided purely on the virtual clock."""
+    clock = VirtualClock()
+    svc = make_svc(buckets=((96, 128),), batch_size=4, clock=clock,
+                   est_dispatch_s=0.05)
+    req = DetectionRequest(uid=0, frame=_frame(96, 128), deadline_s=0.1)
+    svc.submit(req)
+    assert svc.step()                    # slack 0.1 > est 0.05: hold
+    assert svc.dispatches == 0
+    assert svc.grids[(96, 128)].active == 1      # admitted, waiting
+    clock.advance(0.06)                  # slack 0.04 <= est 0.05: close
+    assert svc.step()
+    assert svc.dispatches == 1
+    assert svc.dispatch_log[-1] == ((96, 128), 1, False)
+    svc.drain()
+    assert req.ok and not req.missed_deadline
+    assert svc.completed_late == 0
+
+
+def test_full_grid_never_waits_without_deadlines():
+    svc = make_svc(buckets=((96, 128),), batch_size=2)
+    for i in range(2):
+        svc.submit(DetectionRequest(uid=i, frame=_frame(96, 128, seed=i)))
+    assert svc.step()
+    assert svc.dispatches == 1           # full grid dispatches immediately
+
+
+def test_less_urgent_full_grid_yields_to_tight_deadline():
+    """EDF admission control: a full no-deadline grid only jumps ahead of
+    a waiting deadlined grid when its dispatch fits in that grid's slack."""
+    def build(deadline_s):
+        clock = VirtualClock()
+        svc = make_svc(clock=clock, est_dispatch_s=0.05)
+        svc.submit(DetectionRequest(uid=0, frame=_frame(96, 128),
+                                    deadline_s=deadline_s))
+        for i in (1, 2):                 # fill the (120,160) grid
+            svc.submit(DetectionRequest(uid=i,
+                                        frame=_frame(120, 160, seed=i)))
+        return clock, svc
+
+    # tight: dispatching the full grid first (est 0.05) would leave
+    # 0.08 - 0.05 = 0.03 < est of the deadlined grid -> hold everything
+    clock, svc = build(0.08)
+    assert svc.step()
+    assert svc.dispatches == 0
+    clock.advance(0.04)                  # now the deadlined grid is urgent
+    assert svc.step()
+    assert svc.dispatch_log[-1] == ((96, 128), 1, False)
+    svc.run()
+
+    # slack: the full grid fits inside the 0.5s budget -> throughput flows
+    _, svc = build(0.5)
+    assert svc.step()
+    assert svc.dispatch_log[-1] == ((120, 160), 2, False)
+    svc.run()
+
+
+# --- backpressure + shedding ------------------------------------------------
+
+
+def test_queue_full_rejects_with_explicit_status():
+    svc = make_svc(buckets=((96, 128),), batch_size=1, max_queue=2)
+    reqs = [DetectionRequest(uid=i, frame=_frame(96, 128, seed=i),
+                             deadline_s=1.0)
+            for i in range(4)]
+    statuses = [svc.submit(r) for r in reqs]
+    assert statuses[:2] == [RequestStatus.PENDING, RequestStatus.PENDING]
+    assert statuses[2:] == [RequestStatus.QUEUE_FULL,
+                            RequestStatus.QUEUE_FULL]
+    assert svc.rejected_queue_full == 2
+    for r in reqs[2:]:
+        assert r.done and r.result is None and r.missed_deadline
+    svc.run()
+    assert all(r.ok for r in reqs[:2])
+    # queue capacity freed by admission: new submits are accepted again
+    late = DetectionRequest(uid=9, frame=_frame(96, 128))
+    assert svc.submit(late) is RequestStatus.PENDING
+    svc.run()
+    assert late.ok
+
+
+def test_expired_requests_are_shed_not_run():
+    clock = VirtualClock()
+    svc = make_svc(clock=clock)
+    req = DetectionRequest(uid=0, frame=_frame(96, 128), deadline_s=0.05)
+    svc.submit(req)
+    clock.advance(0.1)                   # deadline passed while queued
+    svc.run()
+    assert req.status is RequestStatus.DEADLINE_EXCEEDED
+    assert req.done and req.result is None and req.missed_deadline
+    assert svc.shed_deadline == 1 and svc.dispatches == 0
+
+
+def test_hopeless_requests_are_shed_at_admission():
+    """Admission control: once the service-time estimate is *measured*, a
+    queued request whose remaining budget is below it is shed before it
+    wastes a slot — even though its deadline has not passed yet."""
+    clock = VirtualClock()
+    svc = make_svc(buckets=((96, 128),), batch_size=1, clock=clock,
+                   est_dispatch_s=0.05)
+    # ground the estimate: the first (compiling) dispatch never measures,
+    # so dispatch 2's completion — 0.05s of virtual time after it was
+    # issued, at or below the 0.05 prior, so every completion path accepts
+    # the sample — grounds the EMA at 0.05
+    warms = [DetectionRequest(uid=u, frame=_frame(96, 128, seed=u))
+             for u in (7, 8, 9)]
+    for w in warms:
+        svc.submit(w)
+        svc.step()
+        clock.advance(0.05)
+    svc.drain()
+    assert all(w.ok for w in warms)
+    assert svc.grids[(96, 128)].est_measured
+
+    doomed = DetectionRequest(uid=0, frame=_frame(96, 128),
+                              deadline_s=0.02)    # < est: cannot make it
+    ok = DetectionRequest(uid=1, frame=_frame(96, 128, seed=1),
+                          deadline_s=0.2)
+    svc.submit(doomed)
+    svc.submit(ok)
+    svc.run()
+    assert doomed.status is RequestStatus.DEADLINE_EXCEEDED
+    assert doomed.result is None and svc.shed_deadline == 1
+    assert ok.ok and not ok.missed_deadline
+
+
+def test_unmeasured_estimate_never_latches_into_shedding():
+    """Before any dispatch has grounded the estimate, a sub-estimate
+    budget is NOT shed: an inflated prior must not lock the service into
+    refusing feasible work forever (the estimate only corrects on
+    completions, so shedding everything would never recover)."""
+    svc = make_svc(buckets=((96, 128),), batch_size=1,
+                   est_dispatch_s=10.0)           # absurd prior
+    req = DetectionRequest(uid=0, frame=_frame(96, 128), deadline_s=0.5)
+    svc.submit(req)
+    svc.run()
+    assert req.ok and svc.shed_deadline == 0
+
+
+def test_completed_late_is_counted_not_hidden():
+    clock = VirtualClock()
+    svc = make_svc(buckets=((96, 128),), batch_size=1, clock=clock)
+    req = DetectionRequest(uid=0, frame=_frame(96, 128), deadline_s=0.05)
+    svc.submit(req)
+    svc.step()                           # full 1-slot grid dispatches at t=0
+    clock.advance(0.1)                   # "compute" outlives the deadline
+    svc.drain()
+    assert req.ok and req.missed_deadline
+    assert svc.completed_late == 1 and svc.shed_deadline == 0
+
+
+def test_zero_misses_when_deadlines_are_slack():
+    clock = VirtualClock()
+    svc = make_svc(clock=clock)
+    shapes = [(96, 128), (120, 160)] * 4
+    reqs = [DetectionRequest(uid=i, frame=_frame(h, w, seed=i),
+                             deadline_s=100.0)
+            for i, (h, w) in enumerate(shapes)]
+    for r in reqs:
+        svc.submit(r)
+        clock.advance(0.001)
+        svc.step()
+    svc.run()
+    assert all(r.ok and not r.missed_deadline for r in reqs)
+    assert svc.shed_deadline == 0 == svc.completed_late
+    assert svc.rejected_queue_full == 0
+
+
+# --- per-request render_output ----------------------------------------------
+
+
+@pytest.mark.parametrize("shape,bucket",
+                         [((80, 100), (96, 128)), ((100, 144), (120, 160)),
+                          ((96, 128), (96, 128))])
+def test_render_output_round_trip_per_bucket(shape, bucket):
+    """The per-request overlay equals the unbatched render path on the
+    padded frame, cropped back bit-exact; outside the detected lines every
+    pixel is the native frame (no pad pixels survive the crop)."""
+    svc = make_svc()
+    req = DetectionRequest(uid=0, frame=_frame(*shape),
+                           render_output=True)
+    svc.submit(req)
+    svc.run()
+    assert req.bucket == bucket
+    rend = np.asarray(req.result.rendered)
+    assert rend.shape == (*shape, 3)
+
+    det = LineDetector(dataclasses.replace(_cfg(), render_output=True))
+    padded = pad_to_bucket(req.frame, bucket)
+    ref = crop_result(det.detect(jnp.asarray(padded)), *shape)
+    np.testing.assert_array_equal(rend, np.asarray(ref.rendered))
+
+    base = load_frame(req.frame).astype(np.uint8)
+    line_px = ((rend[..., 0] == 255) & (rend[..., 1] == 0)
+               & (rend[..., 2] == 0))
+    assert line_px.any()                 # the overlay actually drew lines
+    for c in range(3):
+        np.testing.assert_array_equal(rend[..., c][~line_px],
+                                      base[~line_px])
+
+
+def test_render_binding_is_per_request_within_a_grid():
+    """One grid, one request asking for the overlay: only that request
+    gets ``rendered``; detection outputs are unchanged by the render
+    binding (same values as a render-free service run)."""
+    frames = [_frame(96, 128, seed=7), _frame(96, 128, seed=8)]
+    svc = make_svc(buckets=((96, 128),))
+    reqs = [
+        DetectionRequest(uid=0, frame=frames[0], render_output=True),
+        DetectionRequest(uid=1, frame=frames[1]),
+    ]
+    for r in reqs:
+        svc.submit(r)
+    svc.run()
+    assert svc.dispatch_log[-1] == ((96, 128), 2, True)
+    assert reqs[0].result.rendered is not None
+    assert reqs[1].result.rendered is None
+
+    plain = make_svc(buckets=((96, 128),)).detect_many(frames)
+    for got, ref in zip(reqs, plain):
+        np.testing.assert_array_equal(np.asarray(got.result.lines),
+                                      np.asarray(ref.result.lines))
+        np.testing.assert_array_equal(np.asarray(got.result.peaks),
+                                      np.asarray(ref.result.peaks))
+        np.testing.assert_array_equal(np.asarray(got.result.edges),
+                                      np.asarray(ref.result.edges))
+
+
+def test_config_level_render_still_delivers_overlays():
+    """A service built with ``PipelineConfig(render_output=True)`` (the
+    pre-QoS way to get overlays) must still return ``rendered`` for every
+    request, without the per-request flag."""
+    cfg = dataclasses.replace(_cfg(), render_output=True)
+    svc = DetectionService(cfg, buckets=((96, 128),), batch_size=2,
+                           clock=VirtualClock(), prefetch=False)
+    reqs = svc.detect_many([_frame(80, 100, seed=3)])
+    assert reqs[0].result.rendered is not None
+    assert reqs[0].result.rendered.shape == (80, 100, 3)
+
+
+# --- prefetch staging -------------------------------------------------------
+
+
+def test_prefetch_loader_matches_synchronous_staging():
+    loader = PrefetchStager()
+    try:
+        frames = [_frame(80, 100, seed=i) for i in range(4)]
+        futs = [loader.stage(pad_to_bucket, f, (96, 128)) for f in frames]
+        for f, fut in zip(frames, futs):
+            np.testing.assert_array_equal(fut.result(),
+                                          pad_to_bucket(f, (96, 128)))
+    finally:
+        loader.close()
+
+
+def test_prefetch_loader_propagates_exceptions():
+    loader = PrefetchStager()
+    try:
+        fut = loader.stage(pad_to_bucket, np.zeros((500, 500)), (96, 128))
+        with pytest.raises(AssertionError):
+            fut.result()                 # frame exceeds the bucket
+    finally:
+        loader.close()
+
+
+# --- arbitrary interleavings (shared driver; hypothesis widens the space) ---
+
+_SHAPES = ((80, 100), (96, 128), (100, 144), (120, 160))
+_DEADLINES = (None, 0.02, 0.08, 10.0)
+_REF_DET = LineDetector(_cfg())
+
+
+def _run_interleaving(ops, seed):
+    """Drive the same traffic schedule through a prefetch-threaded service
+    and a synchronous one and check the QoS invariants:
+
+      * every request terminates exactly once, with an explicit status
+        (DONE results / QUEUE_FULL / DEADLINE_EXCEEDED partition the set);
+      * crop-back stays bit-exact vs the unbatched detector on the padded
+        frame for every answered request;
+      * the threaded stream matches the synchronous stream bit-for-bit
+        (scheduling reads the clock and the queues, never the thread).
+
+    ``ops``: list of (shape_idx, deadline_idx, advance_ms, step_after).
+    """
+    rng = np.random.default_rng(seed)
+    frames = [
+        rng.uniform(0.0, 255.0, _SHAPES[si]).astype(np.float32)
+        for si, _, _, _ in ops
+    ]
+    runs = []
+    for prefetch in (True, False):
+        clock = VirtualClock()
+        svc = DetectionService(
+            _cfg(), buckets=BUCKETS, batch_size=2, clock=clock,
+            prefetch=prefetch, est_dispatch_s=0.01, max_queue=3,
+        )
+        reqs = []
+        for i, (si, di, adv_ms, step_after) in enumerate(ops):
+            clock.advance(adv_ms / 1000.0)
+            r = DetectionRequest(uid=i, frame=frames[i],
+                                 deadline_s=_DEADLINES[di])
+            svc.submit(r)
+            reqs.append(r)
+            if step_after:
+                svc.step()
+                svc.drain()              # deterministic completion stamps
+        svc.run()
+        svc.close()
+        # answered exactly once, explicit statuses partition the requests
+        assert all(r.done for r in reqs)
+        n_ok = sum(r.ok for r in reqs)
+        assert svc.completed == n_ok
+        assert (svc.completed + svc.shed_deadline
+                + svc.rejected_queue_full) == len(reqs)
+        for r in reqs:
+            assert (r.result is not None) == r.ok
+            if r.status in (RequestStatus.QUEUE_FULL,
+                            RequestStatus.DEADLINE_EXCEEDED):
+                assert r.missed_deadline or r.deadline_at is None
+        runs.append(reqs)
+    threaded, synchronous = runs
+    for ra, rb in zip(threaded, synchronous):
+        assert ra.status == rb.status, (ra.uid, ra.status, rb.status)
+        if ra.ok:
+            for field in ("lines", "valid", "peaks", "edges"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(ra.result, field)),
+                    np.asarray(getattr(rb.result, field)),
+                )
+    # crop-back bit-exactness vs the unbatched reference
+    for r in threaded:
+        if not r.ok:
+            continue
+        padded = pad_to_bucket(r.frame, r.bucket)
+        ref = crop_result(_REF_DET.detect(jnp.asarray(padded)),
+                          *r.frame.shape[:2])
+        np.testing.assert_array_equal(np.asarray(r.result.lines),
+                                      np.asarray(ref.lines))
+        np.testing.assert_array_equal(np.asarray(r.result.peaks),
+                                      np.asarray(ref.peaks))
+        np.testing.assert_array_equal(np.asarray(r.result.edges),
+                                      np.asarray(ref.edges))
+
+
+_FIXED_INTERLEAVINGS = [
+    # same-bucket burst, mixed deadlines, shed via the 40ms advance
+    [(1, 3, 0, False), (1, 1, 5, True), (0, 0, 0, False), (1, 2, 10, True),
+     (1, 1, 40, False)],
+    # cross-bucket with backpressure (max_queue=3) and a late drain
+    [(3, 1, 0, False), (0, 1, 0, False), (2, 3, 0, False), (1, 0, 0, False),
+     (0, 0, 50, True), (3, 3, 5, True)],
+    # steady drip, no deadlines: pure throughput mode under the driver
+    [(2, 0, 0, True), (2, 0, 1, True), (2, 0, 1, True), (2, 0, 1, False)],
+]
+
+
+@pytest.mark.parametrize("case", range(len(_FIXED_INTERLEAVINGS)))
+def test_interleaved_traffic_invariants(case):
+    _run_interleaving(_FIXED_INTERLEAVINGS[case], seed=case)
+
+
+def test_interleaved_traffic_property():
+    """Hypothesis-widened version of the fixed interleavings (skips where
+    hypothesis is absent — the deterministic cases above always run)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=6, deadline=None)
+    @given(
+        st.lists(
+            st.tuples(
+                st.integers(0, len(_SHAPES) - 1),
+                st.integers(0, len(_DEADLINES) - 1),
+                st.integers(0, 60),
+                st.booleans(),
+            ),
+            min_size=1, max_size=8,
+        ),
+        st.integers(0, 2 ** 31 - 1),
+    )
+    def prop(ops, seed):
+        _run_interleaving(ops, seed)
+
+    prop()
