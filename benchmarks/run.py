@@ -9,8 +9,12 @@ bench run is machine-readable (the throughput benchmark writes its own
 With ``--service`` the mixed-resolution detection-service benchmark runs
 too and emits ``BENCH_service.json`` (see ``benchmarks/service_suite.py``).
 
+With ``--tracking`` the temporal drive-cycle suite runs and emits
+``BENCH_tracking.json`` (see ``benchmarks/tracking_suite.py``): tracked vs
+per-frame F1 and the prediction-gated Hough steady-state speedup.
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--scenarios]
-    [--service]
+    [--service] [--tracking]
 """
 
 from __future__ import annotations
@@ -107,6 +111,40 @@ def main() -> None:
             and summary["service_deadline_edf_le_fifo"]
         )
 
+    if "--tracking" in sys.argv:
+        import os
+
+        from . import tracking_suite
+        if os.path.exists("BENCH_tracking.json"):
+            os.remove("BENCH_tracking.json")  # never score a stale run
+        saved_argv = sys.argv
+        sys.argv = [saved_argv[0]] + (["--quick"] if quick else [])
+        tracking_ok = True
+        try:
+            tracking_suite.main()
+        except SystemExit:
+            # the suite writes its JSON before exiting (same contract as
+            # the other suites): read the real bars below
+            tracking_ok = False
+        finally:
+            sys.argv = saved_argv
+        if os.path.exists("BENCH_tracking.json"):
+            with open("BENCH_tracking.json") as f:
+                tr = json.load(f)
+            summary["tracking_tracked_ge_per_frame"] = (
+                tr["tracked_ge_per_frame_on_noisy"]
+            )
+            summary["tracking_gated_speedup"] = tr["gated_speedup"]
+            summary["tracking_gated_speedup_ok"] = tr["gated_speedup_ok"]
+        else:  # suite aborted before writing
+            summary["tracking_tracked_ge_per_frame"] = False
+            summary["tracking_gated_speedup"] = None
+            summary["tracking_gated_speedup_ok"] = False
+        summary["tracking_contract_ok"] = tracking_ok and (
+            summary["tracking_tracked_ge_per_frame"]
+            and summary["tracking_gated_speedup_ok"]
+        )
+
     t1 = table1_full_pipeline()
     t2 = table2_elided()
     summary["elision_speedup"] = t1["total_us"] / t2["total_us"]
@@ -164,13 +202,21 @@ def main() -> None:
         print(f"  detection service: deadline regime (virtual clock) "
               f"{miss_txt}, QoS+throughput gates "
               f"{'ok' if ok else 'VIOLATED'}")
+    if "tracking_contract_ok" in summary:
+        sp = summary.get("tracking_gated_speedup")
+        sp_txt = f"{sp:.2f}x" if sp is not None else "missing"
+        ok = summary["tracking_contract_ok"]
+        print(f"  temporal tracking: gated-Hough steady state {sp_txt} "
+              f"(gate >= 1.5x), tracked>=per-frame on noisy cycles "
+              f"{'ok' if ok else 'VIOLATED'}")
 
     path = "BENCH_paper_tables.json"
     with open(path, "w") as f:
         json.dump(summary, f, indent=2, default=float)
     print(f"\nwrote {path}")
     if not (summary.get("scenario_autotune_contract_ok", True)
-            and summary.get("service_contract_ok", True)):
+            and summary.get("service_contract_ok", True)
+            and summary.get("tracking_contract_ok", True)):
         raise SystemExit(1)  # CI gates on the exit code, not the JSON
 
 

@@ -1,0 +1,210 @@
+"""Temporal-tracking benchmark -> ``BENCH_tracking.json``.
+
+Two regimes over the drive cycles of ``data/scenarios.py``:
+
+  * **Quality** — for each family's standard drive cycle (sway + curvature
+    ramp + lane change; dropouts and noise bursts on the noisy families),
+    per-frame detection F1 vs tracked F1 (``core/tracking.py``:
+    ``TrackingPipeline`` — smoothed, coasting through dropouts).  The gate:
+    tracked F1 >= per-frame F1 on every noisy family (rain/night/glare) —
+    the temporal layer must *pay* for its latency footprint exactly where
+    per-frame detection degrades.
+  * **Throughput** — steady-state prediction-gated Hough vs the full theta
+    sweep at the paper's 240x320, min-wall over repeated passes (the bench
+    host is a noisy 2-core box: min-of-repeats, never single-sample, never
+    sleep-based).  The gated pipeline sweeps ``theta_band`` of the 180
+    theta bins once its tracks confirm; the gate: >= 1.5x frames/s over
+    the identical pipeline running full sweeps, tracker overhead included
+    on both sides.
+
+Usage: PYTHONPATH=src python -m benchmarks.tracking_suite [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (
+    HoughConfig, LineDetector, PipelineConfig, TrackingPipeline,
+    aggregate_scores, score_frame, tracks_as_peaks,
+)
+from repro.data import (
+    NOISY_FAMILIES, make_scenario, scenario_names, standard_drive_cycle,
+)
+
+from .common import print_table
+
+#: Families the smoke-gate baseline pins (scripts/check_f1.py): the noisy
+#: three — where the temporal win is mandatory — plus a clean reference.
+GATED_FAMILIES: tuple[str, ...] = NOISY_FAMILIES + ("straight",)
+
+
+def _cfg() -> PipelineConfig:
+    return PipelineConfig(hough=HoughConfig(compact=True, max_edges="auto"))
+
+
+def bench_family_quality(family: str, height: int, width: int,
+                         n_frames: int) -> dict:
+    """Per-frame vs tracked detection quality over one standard cycle."""
+    cyc = standard_drive_cycle(family, n_frames, height, width, seed=0)
+    det = LineDetector(_cfg())
+    tp = TrackingPipeline(_cfg(), height=height, width=width)
+    per, trk, drop_fn = [], [], 0
+    for f in cyc:
+        res = det.detect(np.asarray(f.scene.image, np.float32))
+        per.append(score_frame(np.asarray(res.peaks),
+                               np.asarray(res.valid),
+                               f.scene.lines_rho_theta))
+        rep = tp.process(f.scene.image).tracks
+        trk.append(score_frame(*tracks_as_peaks(rep),
+                               f.scene.lines_rho_theta))
+        if f.dropout:
+            drop_fn += score_frame(
+                *tracks_as_peaks(rep), f.scene.lines_rho_theta,
+                tol_rho=8.0, tol_theta_deg=6.0,
+            ).fn
+    agg_p, agg_t = aggregate_scores(per), aggregate_scores(trk)
+    return {
+        "family": family,
+        "n_frames": n_frames,
+        "f1_per_frame": agg_p["f1"],
+        "f1_tracked": agg_t["f1"],
+        "tracked_ge_per_frame": agg_t["f1"] >= agg_p["f1"],
+        "dropout_frames": sum(f.dropout for f in cyc),
+        "dropout_fn_tracked_2x_tol": drop_fn,
+        "gated_frames": tp.gated_frames,
+        "full_frames": tp.full_frames,
+        "noisy": family in NOISY_FAMILIES,
+    }
+
+
+def bench_gated_throughput(height: int, width: int, *, n_frames: int,
+                           repeats: int, theta_band: int) -> dict:
+    """Steady-state gated vs full-sweep frame throughput (min-wall).
+
+    Both sides run the identical ``TrackingPipeline.process`` loop —
+    detector dispatch, host sync, tracker update — on the same static
+    steady-state frame (locked gate, zero re-acquisition sweeps), so the
+    ratio isolates what the theta gate buys, with the tracker's own
+    overhead charged against it."""
+    scene = make_scenario("straight", height, width, seed=0)
+    frame = scene.image
+
+    gated = TrackingPipeline(_cfg(), height=height, width=width,
+                             theta_band=theta_band)
+    full = TrackingPipeline(_cfg(), height=height, width=width,
+                            theta_band=None)
+    for tp in (gated, full):        # warm: compile + confirm + engage gate
+        for _ in range(4):
+            tp.process(frame)
+
+    # Per-frame minima over interleaved samples, not per-pass sums: on the
+    # noisy 2-core bench host a pass-level timing soaks up scheduler
+    # interference across its whole window, and interleaving gives both
+    # sweeps the same noise environment; the per-frame min is the
+    # reproducible steady-state capability each is judged by.
+    sec_gated = sec_full = np.inf
+    n_samples = repeats * n_frames
+    for _ in range(n_samples):
+        t0 = time.perf_counter()
+        gated.process(frame)
+        sec_gated = min(sec_gated, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        full.process(frame)
+        sec_full = min(sec_full, time.perf_counter() - t0)
+    assert gated.gated_frames >= n_samples, (
+        "gate never engaged in steady state", gated.gated_frames)
+    return {
+        "height": height, "width": width,
+        "n_frames": n_frames, "repeats": repeats,
+        "theta_band": theta_band,
+        "n_theta_full": _cfg().hough.n_theta,
+        "fps_gated": 1.0 / sec_gated,
+        "fps_full": 1.0 / sec_full,
+        "ms_per_frame_gated": sec_gated * 1e3,
+        "ms_per_frame_full": sec_full * 1e3,
+        "speedup": sec_full / sec_gated,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="gated families only, shorter cycles, fewer "
+                         "timing repeats")
+    ap.add_argument("--height", type=int, default=240)
+    ap.add_argument("--width", type=int, default=320)
+    ap.add_argument("--theta-band", type=int, default=40)
+    ap.add_argument("--out", default="BENCH_tracking.json")
+    args = ap.parse_args()
+
+    families = GATED_FAMILIES if args.quick else scenario_names()
+    # The cycle length is NOT a --quick knob: the tracked F1 of a family
+    # is deterministic per (cycle, detector), so quick runs must measure
+    # the same number the committed full-run baseline pins
+    # (scripts/check_f1.py compares them exactly).  --quick trims the
+    # family set and the timing repeats only.
+    n_frames = 32
+    repeats = 5 if args.quick else 8
+    tp_frames = 8 if args.quick else 12
+
+    rows = [
+        bench_family_quality(f, args.height, args.width, n_frames)
+        for f in families
+    ]
+    print_table(
+        f"drive-cycle quality ({args.height}x{args.width}, "
+        f"{n_frames} frames)",
+        ["family", "noisy", "F1/frame", "F1 tracked", ">=", "dropouts",
+         "drop FN@2x", "gated", "full"],
+        [[r["family"], "*" if r["noisy"] else "",
+          f"{r['f1_per_frame']:.3f}", f"{r['f1_tracked']:.3f}",
+          "ok" if r["tracked_ge_per_frame"] else "WORSE",
+          r["dropout_frames"], r["dropout_fn_tracked_2x_tol"],
+          r["gated_frames"], r["full_frames"]]
+         for r in rows],
+    )
+
+    thr = bench_gated_throughput(
+        args.height, args.width, n_frames=tp_frames, repeats=repeats,
+        theta_band=args.theta_band,
+    )
+    print_table(
+        f"prediction-gated Hough, steady state "
+        f"({args.height}x{args.width}, min-wall over {repeats} passes)",
+        ["sweep", "theta bins", "ms/frame", "frames/s"],
+        [["full", thr["n_theta_full"], f"{thr['ms_per_frame_full']:.1f}",
+          f"{thr['fps_full']:.2f}"],
+         ["gated", thr["theta_band"], f"{thr['ms_per_frame_gated']:.1f}",
+          f"{thr['fps_gated']:.2f}"]],
+    )
+    print(f"gated speedup: {thr['speedup']:.2f}x (gate: >= 1.5x)")
+
+    noisy_ok = all(r["tracked_ge_per_frame"] for r in rows if r["noisy"])
+    speedup_ok = thr["speedup"] >= 1.5
+    out = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "height": args.height, "width": args.width,
+            "n_frames": n_frames, "quick": args.quick,
+        },
+        "rows": rows,
+        "throughput": thr,
+        "tracked_ge_per_frame_on_noisy": noisy_ok,
+        "gated_speedup": thr["speedup"],
+        "gated_speedup_ok": speedup_ok,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, default=float)
+    print(f"wrote {args.out}")
+    if not (noisy_ok and speedup_ok):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,20 +1,26 @@
 #!/usr/bin/env python
 """CI detection-quality gate: per-family F1 must not regress.
 
-Compares the per-family F1 of a fresh ``BENCH_scenarios.json`` (written by
-``benchmarks/scenario_suite.py``) against the committed baseline
-``benchmarks/baselines/f1_baseline.json`` and exits nonzero on any
-regression, so a perf PR that trades accuracy for speed fails CI instead of
-landing silently.  The scenario generators and the detector are
-deterministic, so a genuine improvement shows up as an exact F1 increase —
-record it with ``--update`` (review the diff like any other baseline bump).
+Two sections, each compared against the committed baseline
+``benchmarks/baselines/f1_baseline.json`` and failing CI (nonzero exit) on
+any regression, so a perf PR that trades accuracy for speed fails loudly
+instead of landing silently:
 
-Checked per family (batch-8 ``auto`` rows — the deployment configuration):
-  * F1 >= baseline F1 - tolerance (default 0.0: bit-deterministic suite),
-  * F1 >= the family's registered floor (double-checks the suite's own bar).
+  * ``scenarios`` — static per-family F1 from ``BENCH_scenarios.json``
+    (batch-8 ``auto`` rows, the deployment configuration): F1 >= baseline
+    F1 - tolerance and >= the family's registered floor.
+  * ``drive_cycles`` — the temporal path, from ``BENCH_tracking.json``:
+    tracked F1 over each gated family's standard drive cycle >= baseline
+    - tolerance, and on the noisy families tracked F1 >= the same run's
+    per-frame F1 (the temporal layer must keep paying for itself).
+
+The generators, the detector, and the tracker are deterministic, so a
+genuine improvement shows up as an exact F1 increase — record it with
+``--update`` (review the diff like any other baseline bump).
 
 Usage:
   PYTHONPATH=src python scripts/check_f1.py [--bench BENCH_scenarios.json]
+      [--tracking-bench BENCH_tracking.json]
       [--baseline benchmarks/baselines/f1_baseline.json]
       [--tolerance 0.0] [--update]
 """
@@ -28,7 +34,7 @@ import sys
 
 
 def batch8_auto_f1(bench: dict) -> dict[str, dict]:
-    """{family: {"f1": ..., "f1_floor": ...}} from the suite's rows."""
+    """{family: {"f1": ..., "f1_floor": ...}} from the scenario rows."""
     out = {}
     for r in bench["rows"]:
         if r["mode"] == "auto" and r["batch"] == 8:
@@ -38,41 +44,79 @@ def batch8_auto_f1(bench: dict) -> dict[str, dict]:
     return out
 
 
+def drive_cycle_f1(bench: dict) -> dict[str, dict]:
+    """{family: {"f1_tracked", "f1_per_frame", "noisy"}} from the
+    tracking-suite rows (full and --quick runs both cover the gated
+    families the baseline pins)."""
+    return {
+        r["family"]: {
+            "f1_tracked": float(r["f1_tracked"]),
+            "f1_per_frame": float(r["f1_per_frame"]),
+            "noisy": bool(r["noisy"]),
+        }
+        for r in bench["rows"]
+    }
+
+
+def _load(path: str, what: str) -> dict | None:
+    if not os.path.exists(path):
+        print(f"check_f1: {path} not found — run {what} first",
+              file=sys.stderr)
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default="BENCH_scenarios.json")
+    ap.add_argument("--tracking-bench", default="BENCH_tracking.json")
     ap.add_argument("--baseline",
                     default="benchmarks/baselines/f1_baseline.json")
     ap.add_argument("--tolerance", type=float, default=0.0,
                     help="allowed F1 drop before failing (default: none)")
     ap.add_argument("--update", action="store_true",
-                    help="rewrite the baseline from the current bench run")
+                    help="rewrite the baseline from the current bench runs")
     args = ap.parse_args()
 
-    if not os.path.exists(args.bench):
-        print(f"check_f1: {args.bench} not found — run "
-              f"`python -m benchmarks.scenario_suite` first", file=sys.stderr)
+    sc_bench = _load(args.bench, "`python -m benchmarks.scenario_suite`")
+    if sc_bench is None:
         return 2
-    with open(args.bench) as f:
-        current = batch8_auto_f1(json.load(f))
+    current = batch8_auto_f1(sc_bench)
+    tr_bench = _load(args.tracking_bench,
+                     "`python -m benchmarks.tracking_suite`")
+    if tr_bench is None:
+        return 2
+    cycles = drive_cycle_f1(tr_bench)
 
     if args.update:
+        if tr_bench.get("meta", {}).get("quick"):
+            print("check_f1: refusing --update from a --quick tracking "
+                  "run — it covers only the gated subset and would drop "
+                  "the other families' drive-cycle pins; rerun "
+                  "`python -m benchmarks.tracking_suite` (full)",
+                  file=sys.stderr)
+            return 2
         os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        payload = {
+            "scenarios": current,
+            "drive_cycles": {
+                name: {"f1_tracked": v["f1_tracked"]}
+                for name, v in sorted(cycles.items())
+            },
+        }
         with open(args.baseline, "w") as f:
-            json.dump(current, f, indent=2, sort_keys=True)
-        print(f"check_f1: wrote baseline for {len(current)} families "
-              f"-> {args.baseline}")
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"check_f1: wrote baseline for {len(current)} families + "
+              f"{len(cycles)} drive cycles -> {args.baseline}")
         return 0
 
-    if not os.path.exists(args.baseline):
-        print(f"check_f1: no baseline at {args.baseline}; create one with "
-              f"--update", file=sys.stderr)
+    baseline = _load(args.baseline, "`scripts/check_f1.py --update`")
+    if baseline is None:
         return 2
-    with open(args.baseline) as f:
-        baseline = json.load(f)
 
     failures, new_families = [], []
-    for name, base in sorted(baseline.items()):
+    for name, base in sorted(baseline["scenarios"].items()):
         if name not in current:
             failures.append(f"{name}: family missing from bench run")
             continue
@@ -86,7 +130,36 @@ def main() -> int:
                 f"{name}: F1 {cur['f1']:.4f} below registered floor "
                 f"{cur['f1_floor']:.2f}"
             )
-    new_families = sorted(set(current) - set(baseline))
+    # drive cycles: a --quick run covers only the gated subset, so absent
+    # families are skipped there — but a FULL run must cover every pinned
+    # family (a silently vanished family is a vanished regression gate)
+    tracking_quick = bool(tr_bench.get("meta", {}).get("quick"))
+    checked_cycles = 0
+    for name, base in sorted(baseline.get("drive_cycles", {}).items()):
+        if name not in cycles:
+            if not tracking_quick:
+                failures.append(
+                    f"{name} [cycle]: family missing from full tracking "
+                    f"bench run"
+                )
+            continue
+        cur = cycles[name]
+        checked_cycles += 1
+        if cur["f1_tracked"] < base["f1_tracked"] - args.tolerance:
+            failures.append(
+                f"{name} [cycle]: tracked F1 {cur['f1_tracked']:.4f} < "
+                f"baseline {base['f1_tracked']:.4f}"
+            )
+        if cur["noisy"] and cur["f1_tracked"] < cur["f1_per_frame"]:
+            failures.append(
+                f"{name} [cycle]: tracked F1 {cur['f1_tracked']:.4f} "
+                f"below per-frame {cur['f1_per_frame']:.4f} on a noisy "
+                f"family"
+            )
+    if checked_cycles == 0:
+        failures.append("no drive-cycle family overlaps the baseline — "
+                        "tracking bench and baseline disagree on families")
+    new_families = sorted(set(current) - set(baseline["scenarios"]))
     if new_families:
         print(f"check_f1: families without baseline (add with --update): "
               f"{', '.join(new_families)}")
@@ -96,7 +169,8 @@ def main() -> int:
         for f_ in failures:
             print(f"  {f_}")
         return 1
-    print(f"check_f1: OK — {len(baseline)} families at or above baseline"
+    print(f"check_f1: OK — {len(baseline['scenarios'])} families and "
+          f"{checked_cycles} drive cycles at or above baseline"
           + (f" (tolerance {args.tolerance})" if args.tolerance else ""))
     return 0
 

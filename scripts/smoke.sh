@@ -17,8 +17,13 @@ python -m pytest -q -m "serve and not slow" -x
 # deadline/QoS layer: virtual-clock tests, fully deterministic (marker
 # `deadline`) — backpressure, EDF + early close, prefetch staging, render
 python -m pytest -q -m "deadline and not slow" -x
-python -m pytest -q -m "not slow and not scenarios and not serve and not deadline"
-# CI F1 gate: regenerate the scenario suite and compare per-family F1
-# against the committed baseline (benchmarks/baselines/f1_baseline.json)
+# temporal layer: drive cycles, LaneTracker lifecycle, prediction-gated
+# Hough bit-exactness, tracked-vs-per-frame quality (marker `tracking`)
+python -m pytest -q -m "tracking and not slow" -x
+python -m pytest -q -m "not slow and not scenarios and not serve and not deadline and not tracking"
+# CI F1 gate: regenerate the scenario + drive-cycle suites and compare
+# per-family (static and tracked) F1 against the committed baseline
+# (benchmarks/baselines/f1_baseline.json)
 python -m benchmarks.scenario_suite --quick
+python -m benchmarks.tracking_suite --quick
 python scripts/check_f1.py

@@ -14,7 +14,9 @@ from .hough import (  # noqa: F401
     HoughConfig, auto_max_edges, hough_paper_loop, hough_transform,
     hough_transform_tiered, max_edge_tiers, resolve_max_edges, rho_bins,
 )
-from .lines import LinesConfig, get_lines, render_lines  # noqa: F401
+from .lines import (  # noqa: F401
+    LinesConfig, get_lines, peak_segments, render_lines,
+)
 from .plan import (  # noqa: F401
     DetectionPlan, PlanCache, batch_bucket, load_frame, resolve_static,
 )
@@ -22,6 +24,10 @@ from .metrics import (  # noqa: F401
     DetectionScore, aggregate_scores, match_peaks, score_batch, score_frame,
 )
 from .offload import Placement, place, plan, plan_line_detection  # noqa: F401
+from .tracking import (  # noqa: F401
+    LaneTracker, Track, TrackedFrame, TrackerConfig, TrackingPipeline,
+    merge_peaks, signed_residual, tracks_as_peaks, wrap_canonical,
+)
 from .pipeline import DetectionResult, LineDetector, PipelineConfig  # noqa: F401
 from .profiling import PhaseProfiler, StageCost, line_detection_costs  # noqa: F401
 from .quantize import Quantized, dequantize, quantize, quantized_matmul  # noqa: F401

@@ -52,6 +52,16 @@ class HoughConfig:
     # ``auto_max_edges`` that never exceeds the dense default.
     compact: bool = False
     max_edges: int | str | None = None
+    # Prediction-gated voting (core/tracking.py): when set, the vote stage
+    # sweeps only ``theta_band`` theta bins — a runtime int32 vector of bin
+    # indices (the tracker's union of windows around predicted lanes,
+    # padded to this static length) gathers the trig columns, and the band
+    # scatters back into the full-width accumulator (zeros outside the
+    # gate) so get_lines and every consumer keep full-sweep indexing.  The
+    # *length* is static (a plan attribute — one compiled program per
+    # band), the bin values are data (the gate slides every frame without
+    # recompiling).  None = full sweep.
+    theta_band: int | None = None
 
 
 def rho_bins(height: int, width: int, cfg: HoughConfig) -> int:
@@ -133,21 +143,28 @@ def resolve_max_edges(edges, cfg: HoughConfig) -> HoughConfig:
     return resolved_auto_config(cfg, n, H, W)
 
 
-def hough_transform(edges: jax.Array, cfg: HoughConfig = HoughConfig()
-                    ) -> jax.Array:
+def hough_transform(edges: jax.Array, cfg: HoughConfig = HoughConfig(),
+                    theta_bins: jax.Array | None = None, *,
+                    scatter: bool = True) -> jax.Array:
     """Vote accumulator (..., n_rho, n_theta) from an edge map (..., H, W).
 
     Thin wrapper resolving ``max_edges="auto"`` (a data-dependent static
-    shape) before entering the jitted body below.
+    shape) before entering the jitted body below.  ``theta_bins`` carries
+    the prediction gate when ``cfg.theta_band`` is set (see
+    :class:`HoughConfig`); ``scatter=False`` then keeps the accumulator in
+    band space, (..., n_rho, theta_band) — the plan path feeds that
+    straight into ``get_lines(theta_bins=...)`` so the whole peak stage
+    scales with the band.
     """
     if cfg.max_edges == "auto":
         cfg = resolve_max_edges(edges, cfg)
-    return _hough_transform(edges, cfg)
+    return _hough_transform(edges, cfg, theta_bins, scatter=scatter)
 
 
 def hough_transform_tiered(edges: jax.Array, cfg: HoughConfig,
-                           tiers: tuple[int, ...] | None = None
-                           ) -> jax.Array:
+                           tiers: tuple[int, ...] | None = None,
+                           theta_bins: jax.Array | None = None, *,
+                           scatter: bool = True) -> jax.Array:
     """Device-side ``max_edges`` autotune: trace-safe tiered dispatch.
 
     The compaction buffer is a static shape, so a *traced* edge map cannot
@@ -166,7 +183,8 @@ def hough_transform_tiered(edges: jax.Array, cfg: HoughConfig,
     """
     if not cfg.compact:
         return _hough_transform(
-            edges, dataclasses.replace(cfg, max_edges=None)
+            edges, dataclasses.replace(cfg, max_edges=None), theta_bins,
+            scatter=scatter,
         )
     H, W = edges.shape[-2:]
     if tiers is None:
@@ -177,21 +195,29 @@ def hough_transform_tiered(edges: jax.Array, cfg: HoughConfig,
         sum((worst > t).astype(jnp.int32) for t in tiers),
         len(tiers) - 1,
     )
+    cfgs = [dataclasses.replace(cfg, max_edges=int(t)) for t in tiers]
+    if theta_bins is None:
+        branches = [
+            functools.partial(_hough_transform, cfg=c) for c in cfgs
+        ]
+        return jax.lax.switch(idx, branches, edges)
     branches = [
         functools.partial(
-            _hough_transform,
-            cfg=dataclasses.replace(cfg, max_edges=int(t)),
+            lambda e, tb, cfg: _hough_transform(e, cfg, tb,
+                                                scatter=scatter),
+            cfg=c,
         )
-        for t in tiers
+        for c in cfgs
     ]
-    return jax.lax.switch(idx, branches, edges)
+    return jax.lax.switch(idx, branches, edges, theta_bins)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("cfg",)
+    jax.jit, static_argnames=("cfg", "scatter")
 )
-def _hough_transform(edges: jax.Array, cfg: HoughConfig = HoughConfig()
-                     ) -> jax.Array:
+def _hough_transform(edges: jax.Array, cfg: HoughConfig = HoughConfig(),
+                     theta_bins: jax.Array | None = None, *,
+                     scatter: bool = True) -> jax.Array:
     """Vote accumulator (..., n_rho, n_theta) from an edge map (..., H, W).
 
     rho = j*cos(theta) + i*sin(theta)  (paper's convention: x=col, y=row),
@@ -199,8 +225,21 @@ def _hough_transform(edges: jax.Array, cfg: HoughConfig = HoughConfig()
     resolution are folded into a homogeneous third coordinate so the whole
     stage is literally one GEMM + histogram.  A batch of edge maps
     (N, H, W) shares one raster coordinate table and lowers as one batched
-    vote; ``cfg.compact`` routes through the edge-compaction pre-pass.
+    vote; ``cfg.compact`` routes through the edge-compaction pre-pass;
+    ``cfg.theta_band``/``theta_bins`` restrict the sweep to the prediction
+    gate (the accumulator stays full width, zero outside the gate).
     """
+    if (theta_bins is None) != (cfg.theta_band is None):
+        raise ValueError(
+            "HoughConfig.theta_band and the theta_bins argument come as a "
+            f"pair (got theta_band={cfg.theta_band!r}, "
+            f"theta_bins={'set' if theta_bins is not None else None!r})."
+        )
+    if theta_bins is not None and theta_bins.shape != (cfg.theta_band,):
+        raise ValueError(
+            f"theta_bins must have the plan's static band shape "
+            f"({cfg.theta_band},); got {theta_bins.shape}."
+        )
     H, W = edges.shape[-2:]
     n_rho = rho_bins(H, W, cfg)
     diag = math.hypot(H, W)
@@ -226,6 +265,7 @@ def _hough_transform(edges: jax.Array, cfg: HoughConfig = HoughConfig()
     return ops.hough_vote(
         xy, weights, jnp.asarray(trig), n_rho=n_rho, impl=cfg.impl,
         compact=cfg.compact, max_edges=cfg.max_edges,
+        theta_bins=theta_bins, scatter_back=scatter,
     )
 
 

@@ -23,6 +23,14 @@ explicit ``jax.device_put`` per batch, and the hot loop runs under
 bucket instead of recompiling.  ``benchmarks/lines_throughput.py`` measures
 the batch path; ``serve/detection.py`` builds a request-level service on
 the same plans.
+
+Temporal layer (``core/tracking.py``): a camera stream carries frame-to-
+frame continuity this per-frame facade ignores — ``TrackingPipeline``
+wraps the same plans with a ``LaneTracker`` whose confirmed tracks gate
+the next frame's Hough sweep to predicted theta windows
+(``DetectionPlan.with_theta_band`` / ``run(theta_bins=...)``), falling
+back to the full sweep on track loss; ``data/scenarios.py`` drive cycles
+are the matching workload.
 """
 
 from __future__ import annotations

@@ -83,7 +83,8 @@ def load_frame(raw) -> np.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "tiers"))
-def _detect(cfg: PipelineConfig, image: jax.Array, *,
+def _detect(cfg: PipelineConfig, image: jax.Array,
+            theta_bins: jax.Array | None = None, *,
             tiers: tuple[int, ...] | None = None) -> DetectionResult:
     """The one jitted detection body, shared across detector instances.
 
@@ -92,15 +93,23 @@ def _detect(cfg: PipelineConfig, image: jax.Array, *,
     counts the Canny edge pixels (max over a batch: the compaction buffer
     is shared) and ``lax.switch``-es the vote stage to the tier that holds
     them all; one compiled program per (shape, cfg), zero host
-    round-trips."""
+    round-trips.  ``theta_bins`` (required iff ``cfg.hough.theta_band`` is
+    set) carries the prediction gate: the vote sweeps only those theta
+    bins (``core/tracking.py`` slides the gate frame to frame; the band
+    length is the static part, so the program never recompiles)."""
     H, W = image.shape[-2:]
     edges = canny(image, cfg.canny)
+    # gated frames stay in band space end to end: the vote emits the
+    # (n_rho, theta_band) accumulator and get_lines searches exactly those
+    # columns, so the whole post-Canny stack scales with the band
     if tiers is None:
-        votes = hough_transform(edges, cfg.hough)
+        votes = hough_transform(edges, cfg.hough, theta_bins,
+                                scatter=False)
     else:
-        votes = hough_transform_tiered(edges, cfg.hough, tiers)
+        votes = hough_transform_tiered(edges, cfg.hough, tiers, theta_bins,
+                                       scatter=False)
     lines, valid, peaks = get_lines(
-        votes, height=H, width=W, cfg=cfg.lines
+        votes, height=H, width=W, cfg=cfg.lines, theta_bins=theta_bins
     )
     rendered = None
     if cfg.render_output:
@@ -180,21 +189,46 @@ class DetectionPlan:
             self, cfg=dataclasses.replace(self.cfg, render_output=render)
         )
 
-    # --- execution ----------------------------------------------------
-    def _dispatch(self, images: jax.Array) -> DetectionResult:
-        return _detect(self.cfg, images, tiers=self.tiers)
+    def with_theta_band(self, band: int | None) -> "DetectionPlan":
+        """The same plan with the prediction-gated vote bound to a static
+        band width (``None`` = full sweep).
 
-    def run(self, images) -> DetectionResult:
+        Like ``with_render``, the band width is a config-static knob of the
+        jitted body — the tracking loop (``core/tracking.py``) holds the
+        full plan and its gated twin and flips between them on track
+        loss/recovery instead of re-resolving; the gate's *bin values* are
+        runtime data passed to ``run``.
+        """
+        if self.cfg.hough.theta_band == band:
+            return self
+        return dataclasses.replace(
+            self, cfg=dataclasses.replace(
+                self.cfg,
+                hough=dataclasses.replace(self.cfg.hough, theta_band=band),
+            )
+        )
+
+    # --- execution ----------------------------------------------------
+    def _dispatch(self, images: jax.Array,
+                  theta_bins: jax.Array | None = None) -> DetectionResult:
+        return _detect(self.cfg, images, theta_bins, tiers=self.tiers)
+
+    def run(self, images, theta_bins=None) -> DetectionResult:
         """Detect on a frame (H, W) or batch (N <= bucket, H, W).
 
         Batches shorter than the bucket are padded with zero frames (every
         stage is frame-independent, so pad rows never leak into real
         results) and the result is sliced back to the true length.
+        ``theta_bins`` — required exactly when the plan's config sets
+        ``theta_band`` — is the (theta_band,) int32 prediction gate, shared
+        across the batch.
         """
+        if theta_bins is not None:
+            theta_bins = jnp.asarray(theta_bins, jnp.int32)
         if self.batch is None:
             assert images.shape[-2:] == (self.height, self.width), (
                 images.shape, self)
-            return self._dispatch(images)
+            return self._dispatch(images, theta_bins)
         n = images.shape[0]
         assert (images.ndim == 3 and n <= self.batch
                 and images.shape[-2:] == (self.height, self.width)), (
@@ -205,7 +239,7 @@ class DetectionPlan:
                 jnp.zeros((self.batch - n, self.height, self.width),
                           images.dtype),
             ])
-        res = self._dispatch(images)
+        res = self._dispatch(images, theta_bins)
         if n == self.batch:
             return res
         return DetectionResult(

@@ -4,13 +4,19 @@ and a deterministic, resumable, shard-aware token pipeline for the LM archs."""
 
 from .images import RoadScene, frame_stream, synthetic_road  # noqa: F401
 from .scenarios import (  # noqa: F401
+    NOISY_FAMILIES,
+    DriveCycle,
+    DriveCycleFrame,
     ScenarioFamily,
     get_family,
+    make_drive_cycle,
     make_scenario,
     scenario_batch,
     scenario_names,
     scenario_stream,
     segment_rho_theta,
+    standard_drive_cycle,
+    transform_rho_theta,
 )
 from .tokens import (  # noqa: F401
     TokenPipelineConfig,

@@ -97,14 +97,32 @@ def grad_hits(image, *, stride, thresh, impl=None):
 
 
 def hough_vote(xy, weights, trig, *, n_rho, impl=None, compact=False,
-               max_edges=None, **kw):
-    """Hough voting with optional edge compaction.
+               max_edges=None, theta_bins=None, scatter_back=True, **kw):
+    """Hough voting with optional edge compaction and theta gating.
 
     ``compact=True`` runs the prefix-sum edge-compaction pre-pass first so
     the vote stage iterates at most ``max_edges`` pixels (default: 1/16 of
     the pixel count) instead of the full raster — the streaming fast path
     for sparse edge maps.  Both the compacted and dense variants dispatch to
     the same pallas/interpret/xla backends.
+
+    ``theta_bins`` (a traced int32 vector of theta-bin indices, shared
+    across any weight batch) is the prediction-gated fast path: the gated
+    trig columns are gathered and the backend votes over only that band.
+    With ``scatter_back=True`` the band scatters back into a full-width
+    accumulator (zeros outside the gate) so every downstream consumer
+    keeps full-sweep indexing; ``scatter_back=False`` returns the raw
+    (..., n_rho, band) accumulator for consumers that stay in band space
+    (``core.lines.get_lines(theta_bins=...)`` — the whole peak stage then
+    scales with the band, not n_theta).  The band *length* is a static
+    shape — ``core.hough.HoughConfig.theta_band`` pins it at the plan
+    layer — while the bin values stay runtime data, so a tracker can
+    slide the gate every frame without recompiling.  With ``theta_bins ==
+    arange(n_theta)`` the gather and scatter are both identities and the
+    result is bit-exact with the ungated call; the oracle is
+    ``ref.hough_vote_gated``.  Duplicate bins are allowed (static
+    padding): duplicate columns compute identical values and the scatter
+    writes them idempotently.
     """
     impl = resolve_impl(impl)
     if compact:
@@ -117,11 +135,23 @@ def hough_vote(xy, weights, trig, *, n_rho, impl=None, compact=False,
         if max_edges is None:
             max_edges = default_max_edges(weights.shape[-1])
         xy, weights = _compact_edges(xy, weights, max_edges=max_edges)
+    n_theta_full = trig.shape[1]
+    if theta_bins is not None:
+        trig = jnp.asarray(trig)[:, theta_bins]
     if impl == "xla":
-        return ref.hough_vote(xy, weights, trig, n_rho=n_rho)
-    return _hough_pallas(
-        xy, weights, trig, n_rho=n_rho, interpret=(impl == "interpret"), **kw
-    )
+        votes = ref.hough_vote(xy, weights, trig, n_rho=n_rho)
+    else:
+        votes = _hough_pallas(
+            xy, weights, trig, n_rho=n_rho, interpret=(impl == "interpret"),
+            **kw,
+        )
+    if theta_bins is not None and scatter_back:
+        votes = (
+            jnp.zeros(votes.shape[:-1] + (n_theta_full,), votes.dtype)
+            .at[..., theta_bins]
+            .set(votes)
+        )
+    return votes
 
 
 # Above this kv length the xla path switches from dense scores to the

@@ -157,6 +157,24 @@ def hough_vote_compact(xy: jax.Array, weights: jax.Array, trig: jax.Array,
     return hough_vote(cxy, cw, trig, n_rho=n_rho)
 
 
+def hough_vote_gated(xy: jax.Array, weights: jax.Array, trig: jax.Array,
+                     theta_bins: jax.Array, *, n_rho: int) -> jax.Array:
+    """Theta-gated vote oracle: the full sweep with every column outside
+    the gate zeroed.
+
+    The semantics of record for ``ops.hough_vote(theta_bins=...)`` — which
+    gathers the gated trig columns, votes over the narrow band, and
+    scatters back — formulated independently (full vote + mask) so the two
+    implementations share no code path.  Duplicate gate bins are
+    idempotent in both forms.
+    """
+    full = hough_vote(xy, weights, trig, n_rho=n_rho)
+    mask = (
+        jnp.zeros((trig.shape[1],), bool).at[theta_bins].set(True)
+    )
+    return jnp.where(mask, full, jnp.zeros_like(full))
+
+
 def attention(q, k, v, *, causal=True, window=None, q_offset=0):
     """Dense softmax attention oracle (GQA via head repeat)."""
     B, Hq, Lq, D = q.shape

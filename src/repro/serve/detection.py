@@ -17,9 +17,11 @@ top of the PR-3 throughput machinery:
   * **Backpressure** — the admission queue is bounded (``max_queue``):
     submits beyond the bound are *rejected* with
     ``RequestStatus.QUEUE_FULL`` instead of silently stretching the tail,
-    and queued requests that are expired — or whose remaining budget is
-    below one dispatch's estimated service time (hopeless) — are *shed*
-    with ``RequestStatus.DEADLINE_EXCEEDED`` before they waste a slot.
+    and queued requests that are expired — or *hopeless*, their remaining
+    budget below a queue-depth-aware completion horizon (everything ahead
+    of them in EDF order dispatches first, ``batch_size`` per wave) —
+    are *shed* with ``RequestStatus.DEADLINE_EXCEEDED`` before they waste
+    a slot.
     Every request terminates with an explicit status; nothing blows up
     latency silently, and doomed work never dominoes feasible work.
   * **QoS scheduling** — requests may carry a ``deadline_s`` budget and a
@@ -36,6 +38,14 @@ top of the PR-3 throughput machinery:
     numpy; the single explicit ``jax.device_put`` per dispatch stays on
     the scheduler thread, so the post-warmup hot loop still runs under
     ``jax.transfer_guard("disallow")``.
+  * **Session-stateful streaming** — requests sharing a ``session_id``
+    are frames of one camera stream: the service keeps a per-session
+    :class:`~repro.core.tracking.LaneTracker`, advances it as each
+    frame's result completes (slot order == admission order and one batch
+    is in flight per grid, so a session's frames arrive at its tracker in
+    stream order), and attaches the smoothed reported tracks to the
+    request — temporal continuity across the batching machinery, per
+    stream, without giving up cross-stream batching.
   * **Per-request rendering** — ``DetectionRequest(render_output=True)``
     returns the paper's phase-3 overlay for that request only, cropped
     back to the native resolution bit-exact; the grid flips to the plan's
@@ -71,6 +81,7 @@ import numpy as np
 from repro.core.plan import (
     DetectionPlan, DetectionResult, PipelineConfig, load_frame,
 )
+from repro.core.tracking import LaneTracker, Track, TrackerConfig
 
 # Default resolution ladder: QQVGA-ish up to the paper's camera frame.
 DEFAULT_BUCKETS: tuple[tuple[int, int], ...] = (
@@ -141,8 +152,17 @@ class DetectionRequest:
     deadline_s: Optional[float] = None      # latency budget from submit
     priority: int = 0                       # deadline tiebreak: lower first
     render_output: bool = False             # per-request phase-3 overlay
+    # Session-stateful streaming: requests sharing a ``session_id`` are
+    # frames of one camera stream.  The service keeps a LaneTracker per
+    # session, advances it as each frame's result lands, and attaches the
+    # smoothed reported tracks to the request (``tracks``).  Frames of a
+    # session must be submitted in stream order and share one resolution
+    # bucket — within a bucket, completion follows dispatch order (one
+    # batch in flight per grid), so the tracker sees the stream in order.
+    session_id: Optional[str] = None
     # filled by the service
     result: Optional[DetectionResult] = None
+    tracks: Optional[list[Track]] = None    # smoothed tracks (sessions only)
     status: RequestStatus = RequestStatus.PENDING
     bucket: Optional[tuple[int, int]] = None
     done: bool = False                      # terminal (any status)
@@ -312,9 +332,12 @@ class DetectionService:
                  est_dispatch_s: float = 0.05,
                  est_smoothing: float = 0.3,
                  clock: Callable[[], float] = time.perf_counter,
-                 prefetch: bool = True):
+                 prefetch: bool = True,
+                 tracker: TrackerConfig = TrackerConfig()):
         self.cfg = cfg
         self.batch_size = batch_size
+        self.tracker_cfg = tracker
+        self.sessions: dict[str, LaneTracker] = {}
         self.buckets = tuple(sorted(buckets))
         self.max_queue = max_queue
         self.est_smoothing = est_smoothing
@@ -355,6 +378,16 @@ class DetectionService:
         if self._loader is not None:
             self._loader.close()
             self._loader = None
+
+    # --- sessions -------------------------------------------------------
+    def session_tracks(self, session_id: str) -> list[Track]:
+        """Current live tracks of a streaming session ([] if unknown)."""
+        tracker = self.sessions.get(session_id)
+        return tracker.tracks if tracker is not None else []
+
+    def end_session(self, session_id: str) -> None:
+        """Drop a session's tracker state (idempotent)."""
+        self.sessions.pop(session_id, None)
 
     def __enter__(self) -> "DetectionService":
         return self
@@ -417,29 +450,48 @@ class DetectionService:
 
     def _shed_expired(self) -> None:
         """Shed queued requests that are expired — or *hopeless*: a queued
-        request whose remaining budget is below one dispatch's estimated
-        service time cannot finish in time even if it is admitted right
-        now, and running it anyway is the EDF overload pathology (doomed
+        request that cannot finish in time even if everything goes well,
+        because running it anyway is the EDF overload pathology (doomed
         work dominoes feasible work into lateness).  Either way the
         explicit ``DEADLINE_EXCEEDED`` is the honest answer the admission
         contract promises — instead of a result that arrives too late to
         steer with.
 
+        Feasibility is *queue-depth-aware*: a request at EDF position k in
+        its bucket queues behind ``active`` slotted requests and the k
+        tighter-deadline entries kept ahead of it, all of which dispatch
+        first, ``batch_size`` per wave — so its completion horizon is
+        ``now + waves * est_s`` with ``waves = ahead // batch_size + 1``,
+        not the single-dispatch optimism of one ``est_s``.  A deep queue
+        therefore sheds a mid-pack budget that a shallow queue would keep
+        (covered in ``tests/test_service_deadlines.py``); for the shallow
+        case (``ahead < batch_size``) the horizon reduces to exactly the
+        old one-dispatch rule.  Shed entries do not count toward ``ahead``
+        — shedding frees their wave for the survivors.
+
         The hopeless test only engages once the grid's estimate is
         *measured* (a real dispatch fed the EMA): shedding against an
         unvalidated prior could latch into refusing an entirely feasible
         workload forever, since the estimate only corrects on completions.
+        No-deadline entries sort last in EDF order (``inf`` keys), so they
+        never inflate a deadlined request's horizon and are themselves
+        never shed.
         """
         now = self.clock()
         for shape, q in self.queues.items():
             grid = self.grids[shape]
             est = grid.est_s if grid.est_measured else 0.0
-            if not q or q[0][0] > now + est:  # heap min: tightest deadline
+            if not q:
+                continue
+            worst_waves = (grid.active + len(q) - 1) // len(grid.slots) + 1
+            if q[0][0] > now + worst_waves * est:  # heap min: tightest
                 continue
             keep = []
-            for entry in q:
+            ahead = grid.active          # slotted work dispatches first
+            for entry in sorted(q):      # EDF pop order: (key, prio, seq)
                 key, _, _, req = entry
-                if key <= now or key < now + est:
+                waves = ahead // len(grid.slots) + 1
+                if key <= now or (est > 0.0 and key < now + waves * est):
                     req.status = RequestStatus.DEADLINE_EXCEEDED
                     req.done = True
                     req.finished_at = now
@@ -447,6 +499,7 @@ class DetectionService:
                     self.shed_deadline += 1
                 else:
                     keep.append(entry)
+                    ahead += 1
             q[:] = keep
             heapq.heapify(q)
 
@@ -553,6 +606,18 @@ class DetectionService:
                 ),
                 H, W,
             )
+            if req.session_id is not None:
+                tracker = self.sessions.get(req.session_id)
+                if tracker is None:
+                    tracker = LaneTracker(self.tracker_cfg)
+                    self.sessions[req.session_id] = tracker
+                # slot order == admission order, and one batch is in
+                # flight per grid, so a session's frames advance its
+                # tracker in stream order (see DetectionRequest docstring)
+                req.tracks = tracker.step(
+                    np.asarray(req.result.peaks),
+                    np.asarray(req.result.valid),
+                )
             req.status = RequestStatus.DONE
             req.done = True
             req.finished_at = now

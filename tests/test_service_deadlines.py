@@ -259,6 +259,169 @@ def test_hopeless_requests_are_shed_at_admission():
     assert ok.ok and not ok.missed_deadline
 
 
+def _ground_estimate(svc, clock, shape=(96, 128), dt=0.05):
+    """Feed three warm dispatches at a fixed virtual cost so the bucket's
+    service-time EMA is *measured* at ``dt`` (same recipe as above: the
+    compiling dispatch never samples; the later completions do)."""
+    warms = [DetectionRequest(uid=900 + u, frame=_frame(*shape, seed=u))
+             for u in range(3)]
+    for w in warms:
+        svc.submit(w)
+        svc.step()
+        clock.advance(dt)
+    svc.drain()
+    assert all(w.ok for w in warms)
+    assert svc.grids[shape].est_measured
+
+
+def test_queue_depth_aware_shed_deep_queue():
+    """The PR-4 follow-up closed: feasibility counts everything AHEAD in
+    EDF order (batch_size per wave), not one optimistic dispatch.  Three
+    equal budgets of 2.4x the measured per-dispatch cost on a 1-slot
+    grid: positions 0 and 1 can finish inside budget (1 and 2 waves),
+    position 2 needs 3 waves -> hopeless, shed immediately."""
+    clock = VirtualClock()
+    svc = make_svc(buckets=((96, 128),), batch_size=1, clock=clock,
+                   est_dispatch_s=0.05)
+    _ground_estimate(svc, clock)
+    reqs = [DetectionRequest(uid=i, frame=_frame(96, 128, seed=i),
+                             deadline_s=0.12)
+            for i in range(3)]
+    for r in reqs:
+        svc.submit(r)
+    svc.run()
+    assert reqs[0].ok and reqs[1].ok
+    assert reqs[2].status is RequestStatus.DEADLINE_EXCEEDED
+    assert svc.shed_deadline == 1
+
+
+def test_queue_depth_shed_shallow_queue_unchanged():
+    """A shallow queue reduces to the old single-dispatch rule: the same
+    0.12 budget that a deep queue sheds survives alone, and a budget
+    below one dispatch is still shed."""
+    clock = VirtualClock()
+    svc = make_svc(buckets=((96, 128),), batch_size=1, clock=clock,
+                   est_dispatch_s=0.05)
+    _ground_estimate(svc, clock)
+    lone = DetectionRequest(uid=0, frame=_frame(96, 128), deadline_s=0.12)
+    svc.submit(lone)
+    svc.run()
+    assert lone.ok and svc.shed_deadline == 0
+    doomed = DetectionRequest(uid=1, frame=_frame(96, 128),
+                              deadline_s=0.03)   # < one dispatch
+    svc.submit(doomed)
+    svc.run()
+    assert doomed.status is RequestStatus.DEADLINE_EXCEEDED
+    assert svc.shed_deadline == 1
+
+
+def test_queue_depth_shed_counts_occupied_slots():
+    """Slotted-but-undispatched work occupies the first wave: with one
+    slot already taken on a 2-slot grid, the 2nd queued deadline needs a
+    2nd wave and sheds — the identical queue on an empty grid survives."""
+    def drive(pre_occupy: bool):
+        clock = VirtualClock()
+        svc = make_svc(buckets=((96, 128),), batch_size=2, clock=clock,
+                       est_dispatch_s=0.05)
+        # ground the EMA with two full grids (batch_size=2)
+        w = [DetectionRequest(uid=900 + u, frame=_frame(96, 128, seed=u))
+             for u in range(4)]
+        for a, b in ((w[0], w[1]), (w[2], w[3])):
+            svc.submit(a)
+            svc.submit(b)
+            svc.step()
+            clock.advance(0.05)
+        svc.drain()
+        assert svc.grids[(96, 128)].est_measured
+        if pre_occupy:
+            svc.submit(DetectionRequest(uid=50, frame=_frame(96, 128)))
+            svc.step()                      # slots it; partial grid waits
+            assert svc.grids[(96, 128)].active == 1
+        d = [DetectionRequest(uid=i, frame=_frame(96, 128, seed=i),
+                              deadline_s=0.08)
+             for i in range(2)]
+        for r in d:
+            svc.submit(r)
+        svc.run()
+        return d, svc
+    d, svc = drive(pre_occupy=True)
+    assert d[0].ok
+    assert d[1].status is RequestStatus.DEADLINE_EXCEEDED
+    assert svc.shed_deadline == 1
+    d, svc = drive(pre_occupy=False)
+    assert d[0].ok and d[1].ok and svc.shed_deadline == 0
+
+
+def test_no_deadline_requests_never_shed_and_do_not_inflate():
+    """inf-keyed entries sort last in EDF order: they cannot push a
+    deadlined request into an extra wave, and are never shed no matter
+    how deep the queue."""
+    clock = VirtualClock()
+    svc = make_svc(buckets=((96, 128),), batch_size=1, clock=clock,
+                   est_dispatch_s=0.05)
+    _ground_estimate(svc, clock)
+    plain = [DetectionRequest(uid=10 + i, frame=_frame(96, 128, seed=i))
+             for i in range(4)]
+    tight = DetectionRequest(uid=0, frame=_frame(96, 128), deadline_s=0.06)
+    for r in plain[:2]:
+        svc.submit(r)
+    svc.submit(tight)       # EDF puts it ahead of every no-deadline entry
+    for r in plain[2:]:
+        svc.submit(r)
+    svc.run()
+    assert tight.ok and all(r.ok for r in plain)
+    assert svc.shed_deadline == 0
+
+
+# --- session-stateful streaming ---------------------------------------------
+
+
+def test_session_tracker_advances_in_stream_order():
+    """Frames sharing a session_id advance one LaneTracker in submit
+    order across dispatches: hits grow monotonically, the lane confirms,
+    and the smoothed tracks ride on each request; sessionless requests
+    get none."""
+    svc = make_svc(buckets=((96, 128),), batch_size=2)
+    frame = _frame(96, 128, seed=0)
+    reqs = [DetectionRequest(uid=i, frame=frame, session_id="cam0")
+            for i in range(6)]
+    loner = DetectionRequest(uid=99, frame=frame)
+    for r in reqs:
+        svc.submit(r)
+    svc.submit(loner)
+    svc.run()
+    assert all(r.ok for r in reqs) and loner.ok
+    assert loner.tracks is None
+    hits = [max(t.hits for t in r.tracks) for r in reqs]
+    assert hits == [1, 2, 3, 4, 5, 6]      # stream order, no reordering
+    assert not reqs[0].tracks[0].confirmed
+    assert all(t.confirmed for t in reqs[-1].tracks)
+    # the static scene's doublets merge: one track per planted lane
+    assert len(reqs[-1].tracks) == 2
+    assert len(svc.session_tracks("cam0")) == 2
+    svc.end_session("cam0")
+    assert svc.session_tracks("cam0") == []
+
+
+def test_sessions_are_isolated():
+    svc = make_svc(buckets=((96, 128),), batch_size=2)
+    fa, fb = _frame(96, 128, seed=0), _frame(96, 128, seed=3)
+    reqs = []
+    for i in range(4):
+        reqs.append(DetectionRequest(uid=2 * i, frame=fa, session_id="a"))
+        reqs.append(DetectionRequest(uid=2 * i + 1, frame=fb,
+                                     session_id="b"))
+    for r in reqs:
+        svc.submit(r)
+    svc.run()
+    assert all(r.ok for r in reqs)
+    ta = {t.track_id for t in svc.session_tracks("a")}
+    tb = {t.track_id for t in svc.session_tracks("b")}
+    assert len(ta) == 2 and len(tb) == 2   # independent id spaces
+    a_last = [r for r in reqs if r.session_id == "a"][-1]
+    assert max(t.hits for t in a_last.tracks) == 4
+
+
 def test_unmeasured_estimate_never_latches_into_shedding():
     """Before any dispatch has grounded the estimate, a sub-estimate
     budget is NOT shed: an inflated prior must not lock the service into

@@ -1,0 +1,542 @@
+"""Temporal tracking layer: deterministic drive-cycle harness.
+
+Everything here runs on fixed seeds and analytic trajectories — the drive
+cycles are bit-reproducible, the tracker consults no clock and no RNG, and
+the detector is deterministic, so every assertion is exact-replayable (the
+acceptance bar: 3 identical runs in a row).
+
+Covered:
+  * drive-cycle geometry: exact (rho, theta) trajectory transforms,
+    determinism, dropout/burst bookkeeping;
+  * LaneTracker lifecycle: birth -> confirm -> coast -> kill, coasting
+    through dropout frames, zero ID switches on clean cycles;
+  * prediction-gated Hough: bit-exactness with the full sweep when the
+    gate covers every theta bin, full-sweep fallback on gate overflow;
+  * the temporal win: tracked F1 >= per-frame F1 on the noisy families
+    (rain / night / glare) of the standard drive cycle;
+  * hypothesis properties: association is one-to-one and gate-respecting
+    for arbitrary detection sets; filter state is invariant under theta
+    wrap ((rho, theta) vs (-rho, theta +- pi)).
+"""
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    HoughConfig, LaneTracker, LineDetector, PipelineConfig, Track,
+    TrackerConfig, TrackingPipeline, aggregate_scores, merge_peaks,
+    score_frame, signed_residual, tracks_as_peaks, wrap_canonical,
+)
+from repro.core.metrics import rho_theta_residual
+from repro.core.plan import DetectionPlan
+from repro.data import (
+    NOISY_FAMILIES, make_drive_cycle, make_scenario, scenario_names,
+    standard_drive_cycle, transform_rho_theta,
+)
+
+pytestmark = pytest.mark.tracking
+
+#: Harness resolution: small enough to keep the suite quick, large enough
+#: that every family's per-frame detection is healthy (glare/night need
+#: more pixels than the 120x160 static-recovery tests use).
+HW = (168, 224)
+
+#: Families whose drive-cycle detection is clean enough for *strict*
+#: settled recovery (every truth line matched on every settled, non-
+#: dropout frame).  The rest are held to a small miss budget instead:
+#: curved's polyline approximation and multilane's four near-parallel
+#: strokes legitimately drop below strict recovery on single frames.
+STRICT_FAMILIES = ("straight", "converging", "dashed", "glare",
+                   "occlusion", "fog", "lens_distortion", "empty")
+
+
+def _cfg() -> PipelineConfig:
+    return PipelineConfig(hough=HoughConfig(compact=True, max_edges="auto"))
+
+
+# --- geometry: drive cycles -------------------------------------------------
+
+
+def test_transform_rho_theta_is_exact():
+    """The analytic line transform agrees with transforming two points of
+    the line through the same rigid motion."""
+    rng = np.random.default_rng(0)
+    cx, cy = 111.5, 83.5
+    for _ in range(50):
+        rho = rng.uniform(-200, 200)
+        theta = rng.uniform(0, math.pi)
+        yaw = rng.uniform(-0.2, 0.2)
+        dx, dy = rng.uniform(-30, 30, 2)
+        rp, tp = transform_rho_theta(rho, theta, yaw_rad=yaw, dx=dx, dy=dy,
+                                     cx=cx, cy=cy)
+        assert 0.0 <= tp < math.pi
+        # two points on the original line, pushed through q = R(p-c)+c+t
+        n = np.array([math.cos(theta), math.sin(theta)])
+        d = np.array([-n[1], n[0]])
+        c, s = math.cos(yaw), math.sin(yaw)
+        R = np.array([[c, -s], [s, c]])
+        for u in (-50.0, 120.0):
+            p = rho * n + u * d
+            q = R @ (p - (cx, cy)) + (cx, cy) + (dx, dy)
+            assert abs(q[0] * math.cos(tp) + q[1] * math.sin(tp) - rp) < 1e-6
+
+
+def test_drive_cycle_deterministic_and_flagged():
+    a = standard_drive_cycle("rain", 12, 96, 128, seed=3)
+    b = standard_drive_cycle("rain", 12, 96, 128, seed=3)
+    for fa, fb in zip(a, b):
+        np.testing.assert_array_equal(fa.scene.image, fb.scene.image)
+        np.testing.assert_array_equal(fa.scene.lines_rho_theta,
+                                      fb.scene.lines_rho_theta)
+        assert (fa.dropout, fa.noise_burst) == (fb.dropout, fb.noise_burst)
+    assert [f.t for f in a if f.dropout] == [4, 5, 6]
+    assert [f.t for f in a if f.noise_burst] == [8, 9, 10, 11]
+    # dropout frames keep their trajectory truth but carry no lane signal
+    for f in a:
+        assert f.scene.lines_rho_theta.shape == (2, 2)
+        if f.dropout:
+            assert f.scene.image.max() < 30
+
+
+def test_drive_cycle_frames_move_and_truth_follows():
+    """The warped lane pixels lie on the transformed analytic lines: the
+    image motion and the truth trajectory are the same rigid transform."""
+    cyc = make_drive_cycle("straight", 8, 120, 160, seed=1,
+                           sway_px=8.0, sway_period=10.0, yaw_amp_deg=2.0)
+    assert len({f.scene.image.tobytes() for f in cyc}) == len(cyc)
+    for f in cyc:
+        ys, xs = np.nonzero(f.scene.image >= 230)  # planted stroke pixels
+        assert len(xs) > 50
+        dists = []
+        for rho, theta in f.scene.lines_rho_theta:
+            d = np.abs(xs * math.cos(theta) + ys * math.sin(theta) - rho)
+            dists.append(d)
+        # every bright pixel near one of the lines (stroke half-width 1.6
+        # + nearest-neighbour warp rounding)
+        assert np.min(dists, axis=0).max() <= 3.0
+
+
+def test_every_family_makes_drive_cycles():
+    for fam in scenario_names():
+        cyc = make_drive_cycle(fam, 3, 96, 128, seed=0)
+        assert len(cyc) == 3
+        for f in cyc:
+            assert f.scene.image.shape == (96, 128)
+            assert f.scene.image.dtype == np.uint8
+
+
+# --- tracker unit tests (no detector) ---------------------------------------
+
+
+def test_wrap_canonical_folds_with_sign():
+    assert wrap_canonical(50.0, math.pi + 0.1) == pytest.approx(
+        (-50.0, 0.1)
+    )
+    rho, theta = wrap_canonical(-30.0, -0.2)
+    assert (rho, theta) == pytest.approx((30.0, math.pi - 0.2))
+    assert wrap_canonical(10.0, 0.5) == (10.0, 0.5)
+
+
+def test_signed_residual_matches_metrics_magnitudes():
+    rng = np.random.default_rng(7)
+    for _ in range(100):
+        det = (rng.uniform(-200, 200), rng.uniform(-1, math.pi + 1))
+        ref = (rng.uniform(-200, 200), rng.uniform(0, math.pi))
+        drho, dth = signed_residual(det, ref)
+        mrho, mth = rho_theta_residual(det, ref)
+        assert abs(drho) == pytest.approx(mrho)
+        assert abs(dth) == pytest.approx(mth)
+
+
+def test_merge_peaks_collapses_doublets():
+    """A stroke's two raster side-peaks merge to the centerline; distinct
+    lanes stay distinct; a doublet straddling the theta seam merges too."""
+    doublet = np.array([[100.0, 0.5], [104.0, 0.5],
+                        [-210.0, 1.4]])
+    merged = merge_peaks(doublet, tol_rho=6.0, tol_theta_deg=2.5)
+    assert merged.shape == (2, 2)
+    assert merged[0] == pytest.approx((102.0, 0.5))
+    seam = np.array([[60.0, 0.01], [-62.0, math.pi - 0.01]])
+    merged = merge_peaks(seam, tol_rho=6.0, tol_theta_deg=2.5)
+    assert merged.shape == (1, 2)
+    drho, dth = rho_theta_residual(tuple(merged[0]), (61.0, 0.0))
+    assert drho < 1.1 and dth < 0.02
+
+
+def _feed(tracker: LaneTracker, dets) -> list[Track]:
+    return tracker.step(np.asarray(dets, np.float64).reshape(-1, 2))
+
+
+def test_lifecycle_birth_confirm_coast_kill():
+    cfg = TrackerConfig(confirm_hits=2, max_misses=3, coast_hits=4)
+    trk = LaneTracker(cfg)
+    det = [(80.0, 0.6)]
+    rep = _feed(trk, det)
+    assert len(rep) == 1 and not rep[0].confirmed     # tentative birth
+    rep = _feed(trk, det)
+    assert rep[0].confirmed and rep[0].hits == 2      # confirmed
+    for _ in range(2):
+        rep = _feed(trk, det)
+    assert rep[0].hits == 4
+    # coast: reported (hits >= coast_hits) through max_misses frames
+    for k in range(cfg.max_misses):
+        rep = _feed(trk, np.empty((0, 2)))
+        assert len(rep) == 1 and rep[0].misses == k + 1, (k, rep)
+        assert rep[0].peak == pytest.approx((80.0, 0.6), abs=1e-6)
+    # one miss past max_misses kills it
+    rep = _feed(trk, np.empty((0, 2)))
+    assert rep == [] and trk.tracks == []
+
+
+def test_tentative_track_dies_on_first_miss():
+    trk = LaneTracker(TrackerConfig(confirm_hits=3))
+    _feed(trk, [(10.0, 1.0)])
+    _feed(trk, np.empty((0, 2)))
+    assert trk.tracks == []
+
+
+def test_barely_confirmed_track_is_not_reported_while_coasting():
+    cfg = TrackerConfig(confirm_hits=2, coast_hits=6, max_misses=4)
+    trk = LaneTracker(cfg)
+    for _ in range(3):
+        _feed(trk, [(50.0, 1.0)])
+    rep = _feed(trk, np.empty((0, 2)))   # hits=3 < coast_hits
+    assert rep == []
+    assert len(trk.tracks) == 1          # but it coasts internally
+
+
+def test_zero_id_switches_on_clean_truth_cycle():
+    """Drive the tracker on the analytic trajectories themselves (perfect
+    detections): each lane keeps one track id for the whole cycle."""
+    cyc = make_drive_cycle("straight", 40, 240, 320, seed=0,
+                           lane_change_at=20)
+    trk = LaneTracker()
+    owner: dict[int, set[int]] = {}
+    for f in cyc:
+        rep = trk.step(f.scene.lines_rho_theta)
+        assert len(rep) == 2
+        for j, (rho, theta) in enumerate(f.scene.lines_rho_theta):
+            best = min(
+                rep, key=lambda t: rho_theta_residual(
+                    t.peak, (float(rho), float(theta)))[1]
+            )
+            owner.setdefault(j, set()).add(best.track_id)
+    assert all(len(ids) == 1 for ids in owner.values()), owner
+
+
+def test_coasting_covers_dropouts_and_reacquires_same_id():
+    cyc = make_drive_cycle("straight", 20, 240, 320, seed=0,
+                           sway_px=3.0, sway_period=48.0,
+                           dropout_frames=(10, 11, 12))
+    trk = LaneTracker()
+    ids_before, ids_after = set(), set()
+    for f in cyc:
+        dets = (np.empty((0, 2)) if f.dropout
+                else f.scene.lines_rho_theta)
+        rep = trk.step(dets)
+        # settled frames AND dropout frames both report both lanes,
+        # within the harness tolerance of the moving truth
+        if f.t >= 2:
+            s = score_frame(*tracks_as_peaks(rep),
+                            f.scene.lines_rho_theta)
+            assert s.fn == 0, (f.t, rep)
+            if f.dropout:
+                assert all(t.coasting for t in rep)
+        if f.t == 9:
+            ids_before = {t.track_id for t in rep}
+        if f.t == 13:
+            ids_after = {t.track_id for t in rep}
+    assert ids_before == ids_after != set()
+
+
+# --- association / wrap properties ------------------------------------------
+
+# hypothesis-driven where available (the toolchain image may lack it — the
+# same scoped importorskip discipline as tests/test_detection_service.py);
+# deterministic rng sweeps keep both properties covered either way.
+
+
+def _check_one_to_one_gate_respecting(dets0: np.ndarray, dets1: np.ndarray
+                                      ) -> None:
+    """With alpha=1 a matched track lands exactly on its detection: after
+    two arbitrary frames, updated tracks sit on *distinct* detections of
+    frame 1 (one-to-one), and each was within the gate of the frame-0
+    detection that birthed it (gate-respecting: the filter never
+    teleports)."""
+    cfg = TrackerConfig(alpha=1.0, beta=0.0, merge_rho=0.0,
+                        gate_rho=12.0, gate_theta_deg=6.0)
+    trk = LaneTracker(cfg)
+    trk.step(dets0)
+    born = {t.track_id: t.peak for t in trk.tracks}
+    rep = trk.step(dets1)
+    matched = [t for t in rep if t.age == 2 and t.misses == 0]
+    claimed: list[int] = []
+    for t in matched:
+        # lands exactly on one frame-1 detection
+        res = [rho_theta_residual(t.peak, tuple(d)) for d in dets1]
+        hits = [i for i, (dr, dt) in enumerate(res)
+                if dr < 1e-6 and dt < 1e-6]
+        assert hits, (t, dets1)
+        claimed.append(hits[0])
+        # and its birth position was inside the gate of that detection
+        dr, dt = rho_theta_residual(born[t.track_id],
+                                    tuple(dets1[hits[0]]))
+        assert dr <= cfg.gate_rho + 1e-6
+        assert dt <= math.radians(cfg.gate_theta_deg) + 1e-6
+    assert len(claimed) == len(set(claimed))   # one-to-one
+
+
+def _check_wrap_invariance(frames: list[np.ndarray], seed: int) -> None:
+    """Feeding (rho, theta) vs the equivalent (-rho, theta +- pi) — per
+    detection, chosen at random — yields identical canonical filter
+    states, ids, and lifecycle counters."""
+    rng = np.random.default_rng(seed)
+    a, b = LaneTracker(), LaneTracker()
+    for dets in frames:
+        flips = rng.random(dets.shape[0]) < 0.5
+        sign = np.where(rng.random(dets.shape[0]) < 0.5, 1.0, -1.0)
+        wrapped = dets.copy()
+        wrapped[flips, 0] = -wrapped[flips, 0]
+        wrapped[flips, 1] = wrapped[flips, 1] + sign[flips] * math.pi
+        a.step(dets)
+        b.step(wrapped)
+    sa, sb = a.tracks, b.tracks
+    assert len(sa) == len(sb)
+    for ta, tb in zip(sa, sb):
+        assert ta.track_id == tb.track_id
+        assert (ta.hits, ta.misses, ta.age, ta.confirmed) == (
+            tb.hits, tb.misses, tb.age, tb.confirmed)
+        assert ta.rho == pytest.approx(tb.rho, abs=1e-9)
+        assert ta.theta == pytest.approx(tb.theta, abs=1e-12)
+        assert ta.drho == pytest.approx(tb.drho, abs=1e-9)
+        assert ta.dtheta == pytest.approx(tb.dtheta, abs=1e-12)
+
+
+def _rng_peaks(rng: np.random.Generator, n: int) -> np.ndarray:
+    return np.column_stack([
+        rng.uniform(-250.0, 250.0, n),
+        rng.uniform(-0.5, math.pi + 0.5, n),
+    ]) if n else np.empty((0, 2))
+
+
+def test_association_one_to_one_gate_respecting_sweep():
+    rng = np.random.default_rng(42)
+    for _ in range(60):
+        _check_one_to_one_gate_respecting(
+            _rng_peaks(rng, int(rng.integers(0, 8))),
+            _rng_peaks(rng, int(rng.integers(0, 8))),
+        )
+
+
+def test_wrap_invariance_sweep():
+    rng = np.random.default_rng(43)
+    for case in range(40):
+        frames = [_rng_peaks(rng, int(rng.integers(0, 6)))
+                  for _ in range(int(rng.integers(1, 5)))]
+        _check_wrap_invariance(frames, seed=case)
+
+
+def test_association_property_hypothesis():
+    """Property form over arbitrary detection sets (skips w/o hypothesis)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    peaks = st.lists(
+        st.tuples(st.floats(-250.0, 250.0),
+                  st.floats(-0.5, math.pi + 0.5)),
+        min_size=0, max_size=8,
+    ).map(lambda rows: np.asarray(rows, np.float64).reshape(-1, 2))
+
+    @settings(max_examples=30, deadline=None)
+    @given(peaks, peaks)
+    def prop(dets0, dets1):
+        _check_one_to_one_gate_respecting(dets0, dets1)
+
+    prop()
+
+
+def test_wrap_invariance_property_hypothesis():
+    """Property form of the theta-wrap invariance (skips w/o hypothesis)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    peaks = st.lists(
+        st.tuples(st.floats(-250.0, 250.0),
+                  st.floats(-0.5, math.pi + 0.5)),
+        min_size=0, max_size=6,
+    ).map(lambda rows: np.asarray(rows, np.float64).reshape(-1, 2))
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(peaks, min_size=1, max_size=5),
+           st.integers(0, 2 ** 31 - 1))
+    def prop(frames, seed):
+        _check_wrap_invariance(frames, seed)
+
+    prop()
+
+
+# --- prediction-gated Hough -------------------------------------------------
+
+
+def test_gated_full_cover_is_bit_exact():
+    """A gate covering every theta bin is the full sweep, bit for bit —
+    gather and scatter are both identities."""
+    cfg = _cfg()
+    img = jnp.asarray(make_scenario("converging", 96, 128).image,
+                      jnp.float32)
+    full = DetectionPlan.build(cfg, 96, 128)
+    n_theta = cfg.hough.n_theta
+    gated = full.with_theta_band(n_theta)
+    res_f = full.run(img)
+    res_g = gated.run(img, np.arange(n_theta, dtype=np.int32))
+    for a, b in ((res_f.peaks, res_g.peaks), (res_f.valid, res_g.valid),
+                 (res_f.lines, res_g.lines), (res_f.edges, res_g.edges)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_gated_narrow_band_matches_full_when_peaks_inside():
+    """When every true peak lies inside the gate, the gated detections
+    equal the full sweep's (same max -> same relative threshold)."""
+    cfg = _cfg()
+    sc = make_scenario("straight", 96, 128)
+    img = jnp.asarray(sc.image, jnp.float32)
+    full = DetectionPlan.build(cfg, 96, 128)
+    res_f = full.run(img)
+    band = 48
+    bins = sorted({
+        (int(round(math.degrees(t))) + d) % 180
+        for _, t in sc.lines_rho_theta for d in range(-10, 11)
+    })
+    bins = (bins + [bins[0]] * band)[:band]
+    res_g = full.with_theta_band(band).run(
+        img, np.asarray(bins, np.int32))
+    np.testing.assert_array_equal(np.asarray(res_f.peaks),
+                                  np.asarray(res_g.peaks))
+    np.testing.assert_array_equal(np.asarray(res_f.valid),
+                                  np.asarray(res_g.valid))
+
+
+def test_gate_overflow_falls_back_to_full_sweep():
+    """A theta band too small for the confirmed tracks' union must fall
+    back to the full sweep (gating is a perf hook, never a correctness
+    dependence)."""
+    cfg = _cfg()
+    tp = TrackingPipeline(cfg, height=96, width=128, theta_band=4)
+    sc = make_scenario("straight", 96, 128)
+    for _ in range(5):
+        tp.process(sc.image)
+    assert tp.full_frames == 5 and tp.gated_frames == 0
+    assert len(tp.tracker.confirmed_tracks) >= 1   # tracking still works
+
+
+def test_tracking_pipeline_engages_gate_and_recovers_after_loss():
+    cfg = _cfg()
+    tp = TrackingPipeline(cfg, height=96, width=128, theta_band=48)
+    sc = make_scenario("straight", 96, 128)
+    for _ in range(4):
+        fr = tp.process(sc.image)
+    assert fr.gated and tp.gated_frames == 2 and tp.full_frames == 2
+    # dropout long enough to kill every track -> full sweep again
+    dark = np.full((96, 128), 12, np.uint8)
+    for _ in range(TrackerConfig().max_misses + 2):
+        fr = tp.process(dark)
+    assert not fr.gated and tp.tracker.tracks == []
+    # reacquire: the rescan window keeps the sweep ungated while the
+    # replacement tracks rebirth + confirm, then the gate re-engages
+    for _ in range(TrackerConfig().rescan_frames + 3):
+        fr = tp.process(sc.image)
+    assert fr.gated
+
+
+# --- the drive-cycle harness (detector in the loop) -------------------------
+
+
+@pytest.fixture(scope="module")
+def harness_cfg():
+    return _cfg()
+
+
+@pytest.mark.parametrize("family", scenario_names())
+def test_trajectory_recovery_on_drive_cycle(family, harness_cfg):
+    """Tracked recovery within the (4 px, 3 deg) harness tolerance on the
+    standard drive cycle: strict families miss zero truth lines on every
+    settled non-dropout frame; the rest stay within a small miss budget.
+    Dropout frames are covered by coasting (scored too, except for the
+    families whose coasts are not yet mature at the dropout window)."""
+    cyc = standard_drive_cycle(family, 18, *HW, seed=0)
+    tp = TrackingPipeline(harness_cfg, height=HW[0], width=HW[1])
+    missed = 0
+    scored = 0
+    for f in cyc:
+        rep = tp.process(f.scene.image).tracks
+        if f.t < 4:
+            continue
+        # dropout frames judge the coasting *extrapolation*: double the
+        # harness tolerance (a lane change continues under the blackout;
+        # per-frame detection recovers nothing at any tolerance there)
+        tol = dict(tol_rho=8.0, tol_theta_deg=6.0) if f.dropout else {}
+        s = score_frame(*tracks_as_peaks(rep), f.scene.lines_rho_theta,
+                        **tol)
+        scored += 1
+        missed += s.fn
+        if family in STRICT_FAMILIES:
+            assert s.fn == 0, (family, f.t, s)
+    if family not in STRICT_FAMILIES:
+        assert scored == 14
+        assert missed <= 8, (family, missed)
+
+
+@pytest.mark.parametrize("family", NOISY_FAMILIES)
+def test_tracked_f1_beats_per_frame_on_noisy_cycles(family, harness_cfg):
+    """The temporal claim, quantified: on the noisy drive cycles (dropout
+    + noise bursts), tracked F1 >= per-frame F1 — coasting covers the
+    blackout and the maturity bar suppresses burst flicker."""
+    cyc = standard_drive_cycle(family, 24, *HW, seed=0)
+    det = LineDetector(harness_cfg)
+    tp = TrackingPipeline(harness_cfg, height=HW[0], width=HW[1])
+    per, trk, trk_reports = [], [], []
+    for f in cyc:
+        res = det.detect(jnp.asarray(f.scene.image, jnp.float32))
+        per.append(score_frame(np.asarray(res.peaks),
+                               np.asarray(res.valid),
+                               f.scene.lines_rho_theta))
+        rep = tp.process(f.scene.image).tracks
+        trk_reports.append(rep)
+        trk.append(score_frame(*tracks_as_peaks(rep),
+                               f.scene.lines_rho_theta))
+    per_f1 = aggregate_scores(per)["f1"]
+    trk_f1 = aggregate_scores(trk)["f1"]
+    assert trk_f1 >= per_f1, (family, trk_f1, per_f1)
+    # and the dropout window specifically is covered by coasting, judged
+    # at the extrapolation tolerance (2x harness: the lane change keeps
+    # moving under the blackout) — per-frame detection has NOTHING there
+    for f in cyc:
+        if not f.dropout:
+            continue
+        rep = trk_reports[f.t]
+        s = score_frame(*tracks_as_peaks(rep), f.scene.lines_rho_theta,
+                        tol_rho=8.0, tol_theta_deg=6.0)
+        assert s.fn == 0, (family, f.t, s)
+        assert per[f.t].tp == 0
+    # steady state runs gated (2 cold-start full sweeps + the re-
+    # acquisition sweeps after the blackout window)
+    assert tp.gated_frames >= len(cyc) - 8, (tp.gated_frames,
+                                             tp.full_frames)
+
+
+def test_tracking_is_deterministic_across_reruns():
+    """Same cycle, twice: identical reported states, ids, and gate path."""
+    def run():
+        cyc = standard_drive_cycle("rain", 12, 96, 128, seed=5)
+        tp = TrackingPipeline(_cfg(), height=96, width=128)
+        out = []
+        for f in cyc:
+            fr = tp.process(f.scene.image)
+            out.append((fr.gated, [dataclasses.astuple(t)
+                                   for t in fr.tracks]))
+        return out
+    assert run() == run()
