@@ -13,8 +13,13 @@ With ``--tracking`` the temporal drive-cycle suite runs and emits
 ``BENCH_tracking.json`` (see ``benchmarks/tracking_suite.py``): tracked vs
 per-frame F1 and the prediction-gated Hough steady-state speedup.
 
+With ``--fleet`` the overload + fault-injection suite runs and emits
+``BENCH_fleet.json`` (see ``benchmarks/fleet_suite.py``): degradation
+ladder on/off at equal offered load, coast-only F1 floors, and the fault
+matrix's all-terminal contract.
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--scenarios]
-    [--service] [--tracking]
+    [--service] [--tracking] [--fleet]
 """
 
 from __future__ import annotations
@@ -145,6 +150,53 @@ def main() -> None:
             and summary["tracking_gated_speedup_ok"]
         )
 
+    if "--fleet" in sys.argv:
+        import os
+
+        from . import fleet_suite
+        if os.path.exists("BENCH_fleet.json"):
+            os.remove("BENCH_fleet.json")  # never score a stale run
+        saved_argv = sys.argv
+        sys.argv = [saved_argv[0]] + (["--quick"] if quick else [])
+        fleet_ok = True
+        try:
+            fleet_suite.main()
+        except SystemExit:
+            # the suite writes its JSON before exiting (same contract as
+            # the other suites): read the real gates below
+            fleet_ok = False
+        finally:
+            sys.argv = saved_argv
+        if os.path.exists("BENCH_fleet.json"):
+            with open("BENCH_fleet.json") as f:
+                fl = json.load(f)
+            summary["fleet_high_pri_miss_improves"] = (
+                fl["gates"]["high_pri_miss_improves"]
+            )
+            summary["fleet_coast_zero_dispatch"] = (
+                fl["gates"]["coast_zero_dispatch"]
+            )
+            summary["fleet_faults_all_terminal"] = (
+                fl["gates"]["faults_all_terminal"]
+            )
+            summary["fleet_tier0_miss_ladder_on"] = (
+                fl["overload"]["ladder_on"]["tier0"]["miss_rate"]
+            )
+            summary["fleet_tier0_miss_ladder_off"] = (
+                fl["overload"]["ladder_off"]["tier0"]["miss_rate"]
+            )
+        else:  # suite aborted before writing
+            summary["fleet_high_pri_miss_improves"] = False
+            summary["fleet_coast_zero_dispatch"] = False
+            summary["fleet_faults_all_terminal"] = False
+            summary["fleet_tier0_miss_ladder_on"] = None
+            summary["fleet_tier0_miss_ladder_off"] = None
+        summary["fleet_contract_ok"] = fleet_ok and (
+            summary["fleet_high_pri_miss_improves"]
+            and summary["fleet_coast_zero_dispatch"]
+            and summary["fleet_faults_all_terminal"]
+        )
+
     t1 = table1_full_pipeline()
     t2 = table2_elided()
     summary["elision_speedup"] = t1["total_us"] / t2["total_us"]
@@ -209,6 +261,15 @@ def main() -> None:
         print(f"  temporal tracking: gated-Hough steady state {sp_txt} "
               f"(gate >= 1.5x), tracked>=per-frame on noisy cycles "
               f"{'ok' if ok else 'VIOLATED'}")
+    if "fleet_contract_ok" in summary:
+        on = summary.get("fleet_tier0_miss_ladder_on")
+        off = summary.get("fleet_tier0_miss_ladder_off")
+        miss_txt = (f"tier-0 miss {on:.1%} (ladder) vs {off:.1%} (off)"
+                    if on is not None and off is not None
+                    else "overload arms missing")
+        ok = summary["fleet_contract_ok"]
+        print(f"  fleet overload: {miss_txt}, coast/fault gates "
+              f"{'ok' if ok else 'VIOLATED'}")
 
     path = "BENCH_paper_tables.json"
     with open(path, "w") as f:
@@ -216,7 +277,8 @@ def main() -> None:
     print(f"\nwrote {path}")
     if not (summary.get("scenario_autotune_contract_ok", True)
             and summary.get("service_contract_ok", True)
-            and summary.get("tracking_contract_ok", True)):
+            and summary.get("tracking_contract_ok", True)
+            and summary.get("fleet_contract_ok", True)):
         raise SystemExit(1)  # CI gates on the exit code, not the JSON
 
 

@@ -144,6 +144,9 @@ def run_deadline_sim(frames: list[np.ndarray], deadlines: list[float], *,
     svc = DetectionService(
         _cfg(), buckets=BUCKETS, batch_size=batch_size, clock=clock,
         max_queue=max_queue,   # same backpressure bound for EDF and FIFO
+        ladder=False,          # this sim scores pure EDF-vs-FIFO
+        # scheduling; the degradation ladder has its own benchmark
+        # (fleet_suite.py) with ladder-on/off arms
     )
     for shape, grid in svc.grids.items():
         grid.est_s = MODEL_COST[shape]   # the sim's own cost model

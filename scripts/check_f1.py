@@ -13,6 +13,11 @@ instead of landing silently:
     tracked F1 over each gated family's standard drive cycle >= baseline
     - tolerance, and on the noisy families tracked F1 >= the same run's
     per-frame F1 (the temporal layer must keep paying for itself).
+  * ``coast`` — the degradation-ladder floor, from ``BENCH_fleet.json``:
+    coast-only F1 (answers from ``LaneTracker.predict_tracks``, the
+    detector never sees the frame) on each gated family's drive cycle
+    >= baseline - tolerance, so overload answers stay above a committed
+    quality floor instead of quietly rotting.
 
 The generators, the detector, and the tracker are deterministic, so a
 genuine improvement shows up as an exact F1 increase — record it with
@@ -21,6 +26,7 @@ genuine improvement shows up as an exact F1 increase — record it with
 Usage:
   PYTHONPATH=src python scripts/check_f1.py [--bench BENCH_scenarios.json]
       [--tracking-bench BENCH_tracking.json]
+      [--fleet-bench BENCH_fleet.json]
       [--baseline benchmarks/baselines/f1_baseline.json]
       [--tolerance 0.0] [--update]
 """
@@ -58,6 +64,18 @@ def drive_cycle_f1(bench: dict) -> dict[str, dict]:
     }
 
 
+def coast_f1(bench: dict) -> dict[str, dict]:
+    """{family: {"f1_coast", "n_scored"}} from the fleet-suite coast
+    section (coast-only answers scored against drive-cycle truth; the
+    cycle length is fixed across --quick and full runs, so the value is
+    one deterministic number per family)."""
+    return {
+        name: {"f1_coast": float(v["f1_coast"]),
+               "n_scored": int(v["n_scored"])}
+        for name, v in bench.get("coast_quality", {}).items()
+    }
+
+
 def _load(path: str, what: str) -> dict | None:
     if not os.path.exists(path):
         print(f"check_f1: {path} not found — run {what} first",
@@ -71,6 +89,7 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default="BENCH_scenarios.json")
     ap.add_argument("--tracking-bench", default="BENCH_tracking.json")
+    ap.add_argument("--fleet-bench", default="BENCH_fleet.json")
     ap.add_argument("--baseline",
                     default="benchmarks/baselines/f1_baseline.json")
     ap.add_argument("--tolerance", type=float, default=0.0,
@@ -88,6 +107,10 @@ def main() -> int:
     if tr_bench is None:
         return 2
     cycles = drive_cycle_f1(tr_bench)
+    fl_bench = _load(args.fleet_bench, "`python -m benchmarks.fleet_suite`")
+    if fl_bench is None:
+        return 2
+    coasts = coast_f1(fl_bench)
 
     if args.update:
         if tr_bench.get("meta", {}).get("quick"):
@@ -104,11 +127,16 @@ def main() -> int:
                 name: {"f1_tracked": v["f1_tracked"]}
                 for name, v in sorted(cycles.items())
             },
+            "coast": {
+                name: {"f1_coast": v["f1_coast"]}
+                for name, v in sorted(coasts.items())
+            },
         }
         with open(args.baseline, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"check_f1: wrote baseline for {len(current)} families + "
-              f"{len(cycles)} drive cycles -> {args.baseline}")
+              f"{len(cycles)} drive cycles + {len(coasts)} coast floors "
+              f"-> {args.baseline}")
         return 0
 
     baseline = _load(args.baseline, "`scripts/check_f1.py --update`")
@@ -159,6 +187,22 @@ def main() -> int:
     if checked_cycles == 0:
         failures.append("no drive-cycle family overlaps the baseline — "
                         "tracking bench and baseline disagree on families")
+    # coast floors: the fleet suite runs every gated family at the same
+    # cycle length in quick and full mode, so absence is always a failure
+    checked_coast = 0
+    for name, base in sorted(baseline.get("coast", {}).items()):
+        if name not in coasts:
+            failures.append(
+                f"{name} [coast]: family missing from fleet bench run"
+            )
+            continue
+        cur = coasts[name]
+        checked_coast += 1
+        if cur["f1_coast"] < base["f1_coast"] - args.tolerance:
+            failures.append(
+                f"{name} [coast]: coast F1 {cur['f1_coast']:.4f} < "
+                f"baseline {base['f1_coast']:.4f}"
+            )
     new_families = sorted(set(current) - set(baseline["scenarios"]))
     if new_families:
         print(f"check_f1: families without baseline (add with --update): "
@@ -169,8 +213,9 @@ def main() -> int:
         for f_ in failures:
             print(f"  {f_}")
         return 1
-    print(f"check_f1: OK — {len(baseline['scenarios'])} families and "
-          f"{checked_cycles} drive cycles at or above baseline"
+    print(f"check_f1: OK — {len(baseline['scenarios'])} families, "
+          f"{checked_cycles} drive cycles, and {checked_coast} coast "
+          f"floors at or above baseline"
           + (f" (tolerance {args.tolerance})" if args.tolerance else ""))
     return 0
 

@@ -20,10 +20,15 @@ python -m pytest -q -m "deadline and not slow" -x
 # temporal layer: drive cycles, LaneTracker lifecycle, prediction-gated
 # Hough bit-exactness, tracked-vs-per-frame quality (marker `tracking`)
 python -m pytest -q -m "tracking and not slow" -x
-python -m pytest -q -m "not slow and not scenarios and not serve and not deadline and not tracking"
-# CI F1 gate: regenerate the scenario + drive-cycle suites and compare
-# per-family (static and tracked) F1 against the committed baseline
-# (benchmarks/baselines/f1_baseline.json)
+# robustness layer: degradation ladder, fault injection, overload
+# shedding, coast semantics (marker `fleet`)
+python -m pytest -q -m "fleet and not slow" -x
+python -m pytest -q -m "not slow and not scenarios and not serve and not deadline and not tracking and not fleet"
+# CI F1 gate: regenerate the scenario + drive-cycle + fleet suites and
+# compare per-family (static, tracked, and coast-only) F1 against the
+# committed baseline (benchmarks/baselines/f1_baseline.json); the fleet
+# suite also self-gates its overload/coast/fault contracts via exit code
 python -m benchmarks.scenario_suite --quick
 python -m benchmarks.tracking_suite --quick
+python -m benchmarks.fleet_suite --quick
 python scripts/check_f1.py

@@ -82,6 +82,48 @@ def load_frame(raw) -> np.ndarray:
     return np.asarray(img, np.float32)
 
 
+def downsample2x(img: np.ndarray) -> np.ndarray:
+    """Host-side 2x2 mean-pool of a grayscale f32 frame (edge-replicated
+    to even dimensions first, so the last row/column is never dropped).
+
+    Pure numpy on purpose: the degradation ladder downshifts frames on
+    the scheduler/staging path, where everything stays host-side until
+    the single ``jax.device_put`` per dispatch.  Mean pooling (not
+    striding) keeps a 1-px lane stroke visible after the shift — a
+    stride-2 subsample could step over the stroke entirely, which would
+    turn "degraded answer" into "no answer".
+    """
+    img = np.asarray(img, np.float32)
+    H, W = img.shape
+    if H % 2:
+        img = np.concatenate([img, img[-1:, :]], axis=0)
+    if W % 2:
+        img = np.concatenate([img, img[:, -1:]], axis=1)
+    return (0.25 * (img[0::2, 0::2] + img[1::2, 0::2]
+                    + img[0::2, 1::2] + img[1::2, 1::2])
+            ).astype(np.float32)
+
+
+def downshift_frame(raw, shape: tuple[int, int]
+                    ) -> tuple[np.ndarray, int]:
+    """Grayscale-load ``raw`` and halve its resolution until it fits the
+    ``shape`` bucket; returns ``(image, factor)`` with ``factor`` the
+    power-of-two divisor applied (1 = it already fit).
+
+    Power-of-two factors keep the coordinate mapping exact: a native
+    pixel center x maps to downshifted center ``(x - c) / factor`` with
+    ``c = (factor - 1) / 2`` (the mean-pool's phase offset), so results
+    computed at the low resolution scale back to native (rho, theta)
+    coordinates in closed form (``serve.detection.upscale_result``).
+    """
+    img = load_frame(raw)
+    factor = 1
+    while img.shape[0] > shape[0] or img.shape[1] > shape[1]:
+        img = downsample2x(img)
+        factor *= 2
+    return img, factor
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "tiers"))
 def _detect(cfg: PipelineConfig, image: jax.Array,
             theta_bins: jax.Array | None = None, *,

@@ -321,6 +321,61 @@ class LaneTracker:
             or (t.confirmed and t.hits >= cfg.coast_hits)
         ]
 
+    # --- coast-only prediction (degraded serving) -----------------------
+    def coastable_tracks(self, steps: int = 1) -> list[Track]:
+        """Tracks *eligible* to answer a frame from prediction alone.
+
+        The degradation ladder's coast rung (``serve/detection.py``)
+        answers an overloaded frame from the session tracker without
+        running detection at all — but only a track that has EARNED the
+        coast may back such an answer, by the same rules ``step`` applies
+        to real missed frames: confirmed, mature (``hits >= coast_hits``),
+        and still inside its miss budget after ``steps`` more unobserved
+        frames (``misses + steps <= max_misses``).  A service can
+        therefore never coast a session further than the tracker itself
+        would have survived a real dropout — the coast budget and the
+        blackout budget are one number.
+        """
+        cfg = self.cfg
+        return [
+            t for t in self._tracks
+            if t.confirmed and t.hits >= cfg.coast_hits
+            and t.misses + steps <= cfg.max_misses
+        ]
+
+    def can_coast(self, steps: int = 1) -> bool:
+        """True iff at least one track may answer ``steps`` frames ahead."""
+        return bool(self.coastable_tracks(steps))
+
+    def predict_tracks(self, steps: int = 1) -> list[Track]:
+        """``steps``-ahead predicted state of the coast-eligible tracks,
+        WITHOUT mutating the tracker.
+
+        Applies exactly the per-frame coast update ``step`` would: state
+        advances by the (decaying) velocity and the velocity damps by
+        ``coast_damping`` each unobserved frame — so a coast-only answer
+        for frame t+k is bit-identical to what the tracker would have
+        reported had it actually coasted through k missed frames.  The
+        tracker itself does NOT advance: the real frame may still arrive
+        (late, after the deadline) or the next frame may be served for
+        real, and session stream-order must survive either outcome.
+        Returns [] when nothing is eligible (see ``coastable_tracks``).
+        """
+        cfg = self.cfg
+        out = []
+        for t in self.coastable_tracks(steps):
+            p = dataclasses.replace(t)
+            for _ in range(max(1, int(steps))):
+                p.rho += p.drho
+                p.theta += p.dtheta
+                p.drho *= cfg.coast_damping
+                p.dtheta *= cfg.coast_damping
+                p.misses += 1
+                p.age += 1
+            self._canonicalize(p)
+            out.append(p)
+        return out
+
     # --- the prediction gate --------------------------------------------
     def gate_bins(self, n_theta: int = 180, *,
                   band: Optional[int] = None) -> Optional[np.ndarray]:

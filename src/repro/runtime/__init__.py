@@ -1,5 +1,6 @@
 """Fault-tolerant runtime: heartbeats, restart supervision, fault injection."""
 
+from .faults import ServiceFaultInjector  # noqa: F401
 from .heartbeat import Heartbeat, HeartbeatMonitor  # noqa: F401
 from .supervisor import (  # noqa: F401
     WorkerFailure,

@@ -13,13 +13,21 @@ from typing import Callable, Optional
 
 
 class Heartbeat:
-    """Worker side: beat() regularly (or let the auto-thread do it)."""
+    """Worker side: beat() regularly (or let the auto-thread do it).
+
+    ``clock`` is injectable (default ``time.monotonic``) so the serving
+    path can beat on the same :class:`~repro.serve.detection.VirtualClock`
+    the scheduler runs on — liveness decisions then become deterministic
+    functions of the driven schedule, not of wall time.
+    """
 
     def __init__(self, worker_id: str, registry: dict, *,
-                 interval_s: float = 0.05, auto: bool = False):
+                 interval_s: float = 0.05, auto: bool = False,
+                 clock: Callable[[], float] = time.monotonic):
         self.worker_id = worker_id
         self.registry = registry
         self.interval_s = interval_s
+        self.clock = clock
         self._stop = threading.Event()
         self.beat()
         self._thread = None
@@ -28,7 +36,7 @@ class Heartbeat:
             self._thread.start()
 
     def beat(self):
-        self.registry[self.worker_id] = time.monotonic()
+        self.registry[self.worker_id] = self.clock()
 
     def _loop(self):
         while not self._stop.is_set():
@@ -45,13 +53,15 @@ class HeartbeatMonitor:
     """Controller side: which workers missed their deadline?"""
 
     def __init__(self, registry: dict, *, timeout_s: float = 0.25,
-                 on_dead: Optional[Callable[[str], None]] = None):
+                 on_dead: Optional[Callable[[str], None]] = None,
+                 clock: Callable[[], float] = time.monotonic):
         self.registry = registry
         self.timeout_s = timeout_s
         self.on_dead = on_dead
+        self.clock = clock
 
     def dead_workers(self) -> list[str]:
-        now = time.monotonic()
+        now = self.clock()
         dead = [
             w for w, t in self.registry.items()
             if now - t > self.timeout_s

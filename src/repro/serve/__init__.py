@@ -20,16 +20,30 @@ injectable clock (``VirtualClock`` makes the whole policy deterministic
 under test).  Results drain double-buffered through resolve-once
 ``DetectionPlan``s (``core/plan.py``), cropped back bit-exact — including
 the per-request ``render_output`` overlay.
+
+Under overload the service walks a *degradation ladder* instead of
+shedding outright (resolution downshift -> tracker-coast answers ->
+priority-tiered shed; see the ``serve/detection.py`` docstring), driven
+by a ``LoadController`` and per-request ``DegradationPolicy``, with
+per-session ``SessionSLO`` accounting; a deterministic
+``runtime.faults.ServiceFaultInjector`` exercises the failure paths.
 """
 
 from .detection import (  # noqa: F401
+    DEFAULT_POLICY,
+    SHED_ONLY,
+    BucketLoad,
+    DegradationPolicy,
     DetectionRequest,
     DetectionService,
+    LoadController,
     PrefetchStager,
     RequestStatus,
+    SessionSLO,
     VirtualClock,
     crop_result,
     pad_to_bucket,
+    upscale_result,
 )
 from .engine import Engine, Request  # noqa: F401
 from .sampling import sample  # noqa: F401

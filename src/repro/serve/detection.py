@@ -25,8 +25,10 @@ top of the PR-3 throughput machinery:
     Every request terminates with an explicit status; nothing blows up
     latency silently, and doomed work never dominoes feasible work.
   * **QoS scheduling** — requests may carry a ``deadline_s`` budget and a
-    ``priority`` tiebreak.  Admission within a bucket is earliest-deadline-
-    first; dispatch picks the occupied grid with the tightest deadline and
+    ``priority`` class.  Admission within a bucket is strict-priority,
+    earliest-deadline-first within a class (uniform-priority traffic is
+    therefore pure EDF); dispatch ranks occupied grids the same way —
+    highest class aboard, then tightest deadline — and
     *closes a batch early* (dispatches a partial grid) when waiting for
     more traffic would bust that deadline, given a per-bucket service-time
     estimate (EMA of measured dispatch times).  With no deadlines anywhere
@@ -58,10 +60,61 @@ top of the PR-3 throughput machinery:
     ``benchmarks/service_suite.py`` drive traffic on virtual time, so no
     assertion ever races the noisy 2-core bench host.
 
+  * **Degradation ladder** — under overload the service *downgrades*
+    requests instead of shedding them, one rung at a time, driven by a
+    :class:`LoadController` that reads queue depth, the per-bucket
+    service-time EMA, and deadline slack.  Rung order (a request falls
+    only as far as it must, and per-request :class:`DegradationPolicy`
+    can forbid each rung):
+
+      1. **Resolution downshift** (``DEGRADED_DOWNSHIFT``) — a hopeless
+         request re-stages into a smaller registered bucket (2x mean-pool
+         per halving, ``core.plan.downshift_frame``) where its deadline is
+         feasible; the low-res result scales back to native coordinates
+         in closed form (``upscale_result``), never below the policy's
+         ``floor`` resolution.
+      2. **Tracking coast** (``DEGRADED_COAST``) — a session request
+         answers from its ``LaneTracker``'s k-step prediction
+         (``predict_tracks``) with ZERO Hough dispatches; eligibility and
+         budget are the tracker's own coast rules, so a session can never
+         coast longer than it would survive a real camera blackout.
+      3. **Priority-tiered shed** — the last rung: expired/unsalvageable
+         work sheds with ``DEADLINE_EXCEEDED``, and a full queue evicts
+         the worst strictly-lower-tier entry (largest ``priority`` value)
+         before rejecting a higher-tier newcomer.
+
+    Per-session SLO accounting (:class:`SessionSLO`) tracks
+    full/downshift/coast/refused/late per stream.
+  * **Fault injection** — every ladder rung is exercisable
+    deterministically: a ``runtime.faults.ServiceFaultInjector`` can kill
+    the prefetch worker mid-stream (the stager surfaces
+    ``WorkerFailure`` to callers — never a silent hang — and the service
+    restarts it up to ``max_stager_restarts`` before falling back to
+    synchronous staging, with per-incarnation ``Heartbeat`` liveness on
+    the service clock), fail or stall dispatches (``FAILED`` /
+    late-complete with the EMA protected), jump the ``VirtualClock``
+    forward (whole EDF waves expire in one step), and NaN-poison frames
+    (``INVALID_FRAME``, or a coast answer when the session can back one).
+    Every injected fault resolves to an explicit terminal status.
+
 Plans come from ``core/plan.py``: one frozen ``DetectionPlan`` per bucket
 (plus its render-bound twin on demand).  ``benchmarks/service_suite.py``
 measures throughput/latency and the deadline-regime miss rates and writes
-``BENCH_service.json``.
+``BENCH_service.json``; ``benchmarks/fleet_suite.py`` runs the
+heavy-tailed fleet overload + fault matrix on the virtual clock and
+writes ``BENCH_fleet.json``::
+
+    {"meta": {...traffic/model parameters...},
+     "overload": {"ladder_on":  {per-tier {offered, served_full,
+                                 served_downshift, served_coast, refused,
+                                 late, miss_rate, degraded_rate}},
+                  "ladder_off": {same tiers, shed-only}},
+     "coast_quality": {family: {"f1_coast": ..., "n_scored": ...}},
+     "faults": {fault_class: {"all_terminal": bool, "hung": int,
+                              counters...}},
+     "gates": {"high_pri_miss_improves": bool,
+               "coast_zero_dispatch": bool,
+               "faults_all_terminal": bool}}
 """
 
 from __future__ import annotations
@@ -70,18 +123,23 @@ import dataclasses
 import enum
 import heapq
 import math
+import queue
+import threading
 import time
 from collections import deque
-from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Callable, Iterable, Optional, Sequence
+from concurrent.futures import Future, InvalidStateError
+from typing import Callable, Iterable, NamedTuple, Optional, Sequence, Union
 
 import jax
 import numpy as np
 
 from repro.core.plan import (
-    DetectionPlan, DetectionResult, PipelineConfig, load_frame,
+    DetectionPlan, DetectionResult, PipelineConfig, downshift_frame,
+    load_frame,
 )
 from repro.core.tracking import LaneTracker, Track, TrackerConfig
+from repro.runtime.heartbeat import Heartbeat
+from repro.runtime.supervisor import WorkerFailure
 
 # Default resolution ladder: QQVGA-ish up to the paper's camera frame.
 DEFAULT_BUCKETS: tuple[tuple[int, int], ...] = (
@@ -90,11 +148,46 @@ DEFAULT_BUCKETS: tuple[tuple[int, int], ...] = (
 
 
 class RequestStatus(enum.Enum):
-    """Terminal disposition of a request (plus the initial PENDING)."""
+    """Terminal disposition of a request (plus the initial PENDING).
+
+    Classification goes through the properties below (and through
+    ``DetectionRequest.is_terminal`` / ``.served`` / ``.degraded``), never
+    through hand-enumerated status tuples: a new status added here is
+    classified in exactly one place instead of silently falling through
+    every call site's private list.
+    """
     PENDING = "pending"
-    DONE = "done"                          # result delivered
-    QUEUE_FULL = "queue_full"              # rejected at submit (backpressure)
+    DONE = "done"                          # full-fidelity result delivered
+    # degradation ladder: served, but not at full fidelity
+    DEGRADED_DOWNSHIFT = "degraded_downshift"  # served from a smaller bucket
+    DEGRADED_COAST = "degraded_coast"      # served from tracker prediction
+    # refusals: explicit terminal answers with no result
+    QUEUE_FULL = "queue_full"              # rejected/evicted (backpressure)
     DEADLINE_EXCEEDED = "deadline_exceeded"  # shed before dispatch
+    INVALID_FRAME = "invalid_frame"        # NaN/corrupt frame at admission
+    FAILED = "failed"                      # dispatch fault (injected/real)
+
+    @property
+    def terminal(self) -> bool:
+        """The request has its final answer (anything but PENDING)."""
+        return self is not RequestStatus.PENDING
+
+    @property
+    def served(self) -> bool:
+        """An answer was delivered (full fidelity or degraded)."""
+        return self in (RequestStatus.DONE,
+                        RequestStatus.DEGRADED_DOWNSHIFT,
+                        RequestStatus.DEGRADED_COAST)
+
+    @property
+    def degraded(self) -> bool:
+        return self in (RequestStatus.DEGRADED_DOWNSHIFT,
+                        RequestStatus.DEGRADED_COAST)
+
+    @property
+    def refused(self) -> bool:
+        """Terminal without an answer (shed/rejected/failed/invalid)."""
+        return self.terminal and not self.served
 
 
 class VirtualClock:
@@ -103,7 +196,13 @@ class VirtualClock:
     Inject as ``DetectionService(..., clock=VirtualClock())`` to make every
     deadline/backpressure/early-close decision — and every latency stamp —
     a pure function of the driven schedule.  The unit for ``advance`` is
-    seconds, same as ``time.perf_counter``.
+    seconds, same as ``time.perf_counter``.  Monotonicity is a hard
+    contract (the EDF heaps, the EMA, and every ``latency_s`` depend on
+    it): backward motion raises instead of corrupting the schedule, which
+    is also what makes the fault harness's *forward* clock jumps
+    (``ServiceFaultInjector.clock_jump_at_step``) safe to inject —
+    a jump is indistinguishable from a long stall, expiring whole EDF
+    waves in one step, never un-expiring anything.
     """
 
     def __init__(self, start: float = 0.0):
@@ -113,14 +212,22 @@ class VirtualClock:
         return self.t
 
     def advance(self, dt: float) -> float:
-        assert dt >= 0.0, dt
+        assert dt >= 0.0, f"clock cannot run backward (dt={dt})"
         self.t += float(dt)
+        return self.t
+
+    def jump_to(self, t: float) -> float:
+        """Jump to absolute time ``t`` (>= now); backward jumps raise."""
+        if t < self.t:
+            raise ValueError(
+                f"backward clock jump rejected: {t} < {self.t}"
+            )
+        self.t = float(t)
         return self.t
 
 
 class PrefetchStager:
-    """Single worker thread staging host-side work ahead of the device
-    (a one-worker ``ThreadPoolExecutor`` under a staging-shaped API).
+    """Single worker thread staging host-side work ahead of the device.
 
     ``stage(fn, *args)`` enqueues ``fn(*args)`` and returns a
     ``concurrent.futures.Future``; the service resolves it at admission
@@ -130,18 +237,160 @@ class PrefetchStager:
     scheduler thread so ``transfer_guard("disallow")`` still polices the
     hot loop.  Staging is deterministic, so the threaded stream is
     bit-for-bit the synchronous one (property-tested).
+
+    **Worker death is loud.**  A task exception resolves its future and
+    the worker lives on (same contract as an executor).  A
+    ``WorkerFailure`` — raised by the optional ``fault_hook`` (the fault
+    harness's injected thread death) or by the task itself — kills the
+    worker: the fatal task's future carries the exception, every queued
+    future is failed with it, and subsequent ``stage`` calls raise
+    ``WorkerFailure`` immediately.  No caller can ever block on a future
+    the dead worker will never run (the submit/death race is closed by
+    re-draining after enqueue).  With a ``heartbeat_registry`` the worker
+    beats once per task on the injected clock, so a
+    ``HeartbeatMonitor`` detects the death deterministically.
     """
 
-    def __init__(self):
-        self._pool = ThreadPoolExecutor(
-            max_workers=1, thread_name_prefix="detection-prefetch"
+    def __init__(self, *, fault_hook: Optional[Callable[[], None]] = None,
+                 heartbeat_registry: Optional[dict] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 worker_id: str = "detection-prefetch"):
+        self.worker_id = worker_id
+        self._tasks: "queue.SimpleQueue[Optional[tuple]]" = (
+            queue.SimpleQueue()
         )
+        self._dead = threading.Event()
+        self._fault_hook = fault_hook
+        self.heartbeat = (
+            Heartbeat(worker_id, heartbeat_registry, clock=clock)
+            if heartbeat_registry is not None else None
+        )
+        self._thread = threading.Thread(
+            target=self._worker, name=worker_id, daemon=True
+        )
+        self._thread.start()
+
+    @property
+    def alive(self) -> bool:
+        return not self._dead.is_set()
 
     def stage(self, fn, *args) -> Future:
-        return self._pool.submit(fn, *args)
+        """Enqueue ``fn(*args)``; raises ``WorkerFailure`` if the worker
+        is dead (an explicit error at the submit site, not a future that
+        silently never resolves)."""
+        if self._dead.is_set():
+            raise WorkerFailure(
+                f"prefetch worker {self.worker_id!r} is dead"
+            )
+        fut: Future = Future()
+        self._tasks.put((fut, fn, args))
+        if self._dead.is_set():
+            # the worker died while we enqueued: its drain may have run
+            # before our put landed, so drain again — both drains are
+            # idempotent, and the future is guaranteed resolved either way
+            self._fail_pending()
+        return fut
+
+    def _fail_pending(self) -> None:
+        """Fail every queued future with ``WorkerFailure`` (idempotent —
+        callable from the dying worker AND from a racing ``stage``)."""
+        while True:
+            try:
+                item = self._tasks.get_nowait()
+            except queue.Empty:
+                return
+            if item is None:
+                continue
+            fut = item[0]
+            try:
+                fut.set_exception(
+                    WorkerFailure("prefetch worker died before this task")
+                )
+            except InvalidStateError:
+                pass   # the other drainer (or the worker) got there first
+
+    def _worker(self) -> None:
+        while True:
+            item = self._tasks.get()
+            if item is None:
+                return                     # orderly close()
+            fut, fn, args = item
+            if self.heartbeat is not None:
+                self.heartbeat.beat()
+            if not fut.set_running_or_notify_cancel():
+                continue
+            try:
+                if self._fault_hook is not None:
+                    self._fault_hook()     # injected thread death
+                fut.set_result(fn(*args))
+            except WorkerFailure as e:     # fatal: the thread dies
+                self._dead.set()
+                try:
+                    fut.set_exception(e)
+                except InvalidStateError:
+                    pass
+                self._fail_pending()
+                return
+            except BaseException as e:     # task error: worker survives
+                fut.set_exception(e)
 
     def close(self) -> None:
-        self._pool.shutdown(wait=True)
+        if not self._dead.is_set():
+            self._tasks.put(None)
+        self._thread.join(timeout=5.0)
+        self._dead.set()
+        if self.heartbeat is not None:
+            self.heartbeat.stop()
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradationPolicy:
+    """Per-request contract with the degradation ladder.
+
+    The default allows every rung — the service degrades rather than
+    sheds whenever it can.  A safety-critical caller that would rather
+    get an explicit refusal than a low-res or predicted answer forbids
+    the rungs it cannot act on; ``floor`` bounds how far the resolution
+    may fall (the smallest bucket the downshift rung may target).
+    """
+    allow_downshift: bool = True
+    allow_coast: bool = True
+    floor: Optional[tuple[int, int]] = None  # min (H, W) bucket allowed
+
+
+DEFAULT_POLICY = DegradationPolicy()
+SHED_ONLY = DegradationPolicy(allow_downshift=False, allow_coast=False)
+
+
+@dataclasses.dataclass
+class SessionSLO:
+    """Per-session service-level accounting (one per ``session_id``).
+
+    ``miss_rate`` counts explicit refusals plus late full answers —
+    the fraction of the stream's frames the vehicle could not steer by.
+    ``degraded_rate`` is the fidelity cost the ladder paid to keep the
+    miss rate down; the fleet benchmark reports both per priority tier.
+    """
+    submitted: int = 0
+    served_full: int = 0
+    served_downshift: int = 0
+    served_coast: int = 0
+    refused: int = 0        # shed / rejected / failed / invalid
+    late: int = 0           # served, but after the deadline
+
+    @property
+    def served(self) -> int:
+        return self.served_full + self.served_downshift + self.served_coast
+
+    @property
+    def degraded_rate(self) -> float:
+        s = self.served
+        return (self.served_downshift + self.served_coast) / s if s else 0.0
+
+    @property
+    def miss_rate(self) -> float:
+        n = self.submitted
+        return (self.refused + self.late) / n if n else 0.0
 
 
 @dataclasses.dataclass
@@ -150,7 +399,7 @@ class DetectionRequest:
     uid: int
     frame: np.ndarray                       # (H, W) or (H, W, 3)
     deadline_s: Optional[float] = None      # latency budget from submit
-    priority: int = 0                       # deadline tiebreak: lower first
+    priority: int = 0                       # strict class: lower admits first
     render_output: bool = False             # per-request phase-3 overlay
     # Session-stateful streaming: requests sharing a ``session_id`` are
     # frames of one camera stream.  The service keeps a LaneTracker per
@@ -160,36 +409,63 @@ class DetectionRequest:
     # bucket — within a bucket, completion follows dispatch order (one
     # batch in flight per grid), so the tracker sees the stream in order.
     session_id: Optional[str] = None
+    policy: DegradationPolicy = DEFAULT_POLICY
     # filled by the service
     result: Optional[DetectionResult] = None
     tracks: Optional[list[Track]] = None    # smoothed tracks (sessions only)
     status: RequestStatus = RequestStatus.PENDING
     bucket: Optional[tuple[int, int]] = None
-    done: bool = False                      # terminal (any status)
+    downshift: int = 1                      # resolution divisor served at
     submitted_at: float = 0.0
     finished_at: float = 0.0
     deadline_at: Optional[float] = None     # absolute, on the service clock
-    _staged: Optional[Future] = dataclasses.field(
+    _staged: Optional[Union[Future, np.ndarray]] = dataclasses.field(
         default=None, repr=False, compare=False
     )
+    _ds_shape: Optional[tuple[int, int]] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )   # downshifted content shape inside the target bucket
 
     @property
     def latency_s(self) -> float:
         return self.finished_at - self.submitted_at
 
     @property
+    def is_terminal(self) -> bool:
+        """The request has its final answer — THE status check every
+        other predicate routes through (new statuses classify once, in
+        ``RequestStatus``, instead of falling through call-site lists)."""
+        return self.status.terminal
+
+    @property
+    def done(self) -> bool:
+        """Alias of ``is_terminal`` (pre-ladder name, kept for callers)."""
+        return self.is_terminal
+
+    @property
     def ok(self) -> bool:
+        """Full-fidelity result delivered (degraded answers are *served*
+        but not ``ok`` — callers gate fidelity-sensitive paths on this)."""
         return self.status is RequestStatus.DONE
 
     @property
+    def served(self) -> bool:
+        """An answer usable for steering was delivered (full or degraded:
+        a downshifted result or a coast prediction)."""
+        return self.status.served
+
+    @property
+    def degraded(self) -> bool:
+        return self.status.degraded
+
+    @property
     def missed_deadline(self) -> bool:
-        """Shed, rejected, or completed after its deadline."""
+        """Refused (shed/rejected/failed/invalid), or served late."""
         if self.deadline_at is None:
             return False
-        if self.status in (RequestStatus.QUEUE_FULL,
-                           RequestStatus.DEADLINE_EXCEEDED):
+        if self.status.refused:
             return True
-        return self.done and self.finished_at > self.deadline_at
+        return self.is_terminal and self.finished_at > self.deadline_at
 
 
 class _BucketGrid:
@@ -203,12 +479,13 @@ class _BucketGrid:
         self.est_measured = False   # True once a real dispatch fed the EMA
         self.slots: list[Optional[DetectionRequest]] = [None] * batch_size
         self.staged = np.zeros((batch_size, *shape), np.float32)
-        # (requests snapshot, async result, dispatch time, warm?) awaiting
-        # completion; warm=False marks a compiling dispatch whose wall time
-        # must not feed the service-time EMA
+        # (requests snapshot, async result, dispatch time, warm?, stall_s)
+        # awaiting completion; warm=False marks a compiling dispatch whose
+        # wall time must not feed the service-time EMA; stall_s > 0 marks
+        # an injected dispatch stall (completion lands late, EMA untouched)
         self.in_flight: Optional[
             tuple[list[Optional[DetectionRequest]], DetectionResult,
-                  float, bool]
+                  float, bool, float]
         ] = None
 
     @property
@@ -302,6 +579,142 @@ def crop_result(res: DetectionResult, height: int, width: int
     )
 
 
+def upscale_result(res: DetectionResult, factor: int,
+                   height: int, width: int) -> DetectionResult:
+    """Map a downshifted frame's (already cropped) result back to native
+    coordinates.
+
+    The 2x mean-pool chain maps native pixel centers ``x`` to downshifted
+    centers ``(x - c) / factor`` with ``c = (factor - 1) / 2`` (the
+    pool's phase offset), so the inverse is exact on line parameters:
+    endpoints scale as ``p_native = factor * p + c`` and a (rho, theta)
+    peak — theta is scale-invariant — as
+    ``rho_native = factor * rho + c * (cos theta + sin theta)``.
+    Raster fields (edges, the overlay) nearest-neighbour upsample and
+    crop to the native (H, W): blocky, but honest about the fidelity the
+    answer was computed at — this is a *degraded* response, flagged
+    ``DEGRADED_DOWNSHIFT``, not a reconstruction.
+    """
+    c = (factor - 1) / 2.0
+    peaks = np.array(res.peaks, np.float32).reshape(-1, 2).copy()
+    th = peaks[:, 1]
+    peaks[:, 0] = factor * peaks[:, 0] + c * (np.cos(th) + np.sin(th))
+    lines = factor * np.array(res.lines, np.float32) + c
+    valid = np.asarray(res.valid)
+    edges = np.asarray(res.edges)
+    edges = edges.repeat(factor, axis=-2).repeat(factor, axis=-1)
+    edges = edges[..., :height, :width]
+    rendered = None
+    if res.rendered is not None:
+        rendered = np.asarray(res.rendered)
+        rendered = rendered.repeat(factor, axis=-3).repeat(factor, axis=-2)
+        rendered = rendered[..., :height, :width, :]
+    return DetectionResult(lines, valid, peaks, edges, rendered)
+
+
+def _nan_poison(frame: np.ndarray) -> np.ndarray:
+    """Corrupt a frame the way a DMA tear or truncated capture does:
+    load it to the service's canonical f32 grayscale and stamp a NaN
+    block over the top-left tile.  Used by the fault injector at submit
+    so the admission finiteness check (not downstream kernel math) is
+    what fields the corruption."""
+    img = np.array(load_frame(frame), np.float32, copy=True)
+    img[:8, :8] = np.nan
+    return img
+
+
+class BucketLoad(NamedTuple):
+    """One bucket's load snapshot (see :class:`LoadController`)."""
+    shape: tuple[int, int]
+    queued: int                 # EDF queue depth
+    active: int                 # occupied slots
+    est_s: float                # service-time EMA (one dispatch)
+    est_measured: bool          # a real warm dispatch grounded the EMA
+    horizon_s: float            # time to drain slotted + queued work
+    tightest_slack_s: float     # min(deadline - now) over queued+slotted
+
+    @property
+    def overloaded(self) -> bool:
+        """The tightest deadline cannot survive the drain horizon."""
+        return (math.isfinite(self.tightest_slack_s)
+                and self.horizon_s > self.tightest_slack_s)
+
+
+class LoadController:
+    """The ladder's sensor + decision helper: reads queue depth, the
+    per-bucket service-time EMA, and deadline slack; answers "can this
+    deadline still be met here?" and "which smaller bucket should this
+    request fall to?".
+
+    Feasibility is the same queue-depth-aware horizon the shed rule uses
+    (``waves * est_s`` with ``waves = ahead // batch_size + 1``), and it
+    only *engages* once the bucket's estimate is measured — the ladder
+    inherits the shed rule's no-latch discipline: an unvalidated prior
+    must not downshift (or refuse) an entirely feasible workload.
+    """
+
+    def __init__(self, service: "DetectionService"):
+        self._svc = service
+
+    def est_s(self, shape: tuple[int, int]) -> float:
+        """The bucket's EMA, or 0.0 while unmeasured (optimism by
+        design: see the no-latch note in the class docstring)."""
+        g = self._svc.grids[shape]
+        return g.est_s if g.est_measured else 0.0
+
+    def waves(self, shape: tuple[int, int], ahead: int) -> int:
+        return ahead // len(self._svc.grids[shape].slots) + 1
+
+    def horizon_s(self, shape: tuple[int, int], ahead: int) -> float:
+        """Completion horizon for a request queued behind ``ahead``
+        entries in ``shape``'s bucket."""
+        return self.waves(shape, ahead) * self.est_s(shape)
+
+    def feasible(self, shape: tuple[int, int],
+                 deadline_at: Optional[float], now: float,
+                 ahead: int) -> bool:
+        """Can a request with this absolute deadline still make it?"""
+        if deadline_at is None:
+            return True
+        est = self.est_s(shape)
+        if est <= 0.0:              # unmeasured: only expiry is certain
+            return deadline_at > now
+        return deadline_at >= now + self.horizon_s(shape, ahead)
+
+    def load(self, shape: tuple[int, int], now: float) -> BucketLoad:
+        """Introspection snapshot of one bucket (benchmarks/operators)."""
+        svc = self._svc
+        g = svc.grids[shape]
+        q = svc.queues[shape]
+        slacks = [k - now for (_, k, _, _) in q if math.isfinite(k)]
+        slacks += [
+            r.deadline_at - now for r in g.slots
+            if r is not None and r.deadline_at is not None
+        ]
+        return BucketLoad(
+            shape, len(q), g.active, g.est_s, g.est_measured,
+            self.horizon_s(shape, g.active + len(q)),
+            min(slacks) if slacks else math.inf,
+        )
+
+    def downshift_target(self, req: DetectionRequest, now: float
+                         ) -> Optional[tuple[int, int]]:
+        """Largest registered bucket below the request's current one, at
+        or above its policy ``floor``, where its deadline is feasible
+        given that bucket's current depth — or None (rung exhausted)."""
+        svc = self._svc
+        idx = svc.buckets.index(req.bucket)
+        floor = req.policy.floor
+        for target in reversed(svc.buckets[:idx]):
+            if floor is not None and (target[0] < floor[0]
+                                      or target[1] < floor[1]):
+                continue
+            ahead = svc.grids[target].active + len(svc.queues[target])
+            if self.feasible(target, req.deadline_at, now, ahead):
+                return target
+        return None
+
+
 class DetectionService:
     """Request-level line detection with backpressure + QoS over fixed
     per-bucket batch slots.
@@ -315,7 +728,8 @@ class DetectionService:
 
     QoS knobs:
       * ``max_queue`` — bound on the admission queue (None = unbounded);
-        submits beyond it return ``RequestStatus.QUEUE_FULL``.
+        submits beyond it return ``RequestStatus.QUEUE_FULL`` (with the
+        ladder on, a strictly-lower-tier queued request is evicted first).
       * ``est_dispatch_s`` / ``est_smoothing`` — initial per-bucket
         service-time estimate and its EMA factor; the early-close rule
         dispatches a partial grid when ``deadline - now <= est``.
@@ -323,6 +737,22 @@ class DetectionService:
       * ``prefetch`` — stage frames on a :class:`PrefetchStager` worker
         thread (True, default) or synchronously at admission (False);
         results are bit-identical either way.
+
+    Robustness knobs (the degradation ladder + fault harness):
+      * ``ladder`` — enable the degradation ladder (default True; False
+        is the pre-ladder shed-only service, the fleet benchmark's
+        baseline arm).
+      * ``validate_frames`` — finiteness-check staged frames at admission
+        (a NaN frame would silently poison its whole batch's reduction
+        stages); invalid frames coast if their session can back it, else
+        refuse with ``INVALID_FRAME``.
+      * ``faults`` — a ``runtime.faults.ServiceFaultInjector`` wired into
+        the stager / dispatch / clock / frame paths (None in production).
+      * ``max_stager_restarts`` — supervision budget for prefetch-worker
+        deaths: each death restarts a fresh worker (new ``Heartbeat``
+        incarnation in ``self.heartbeats``) until the budget is spent,
+        then staging falls back to synchronous (prefetch off) — degraded
+        throughput, never a wrong answer.
     """
 
     def __init__(self, cfg: PipelineConfig = PipelineConfig(), *,
@@ -333,7 +763,11 @@ class DetectionService:
                  est_smoothing: float = 0.3,
                  clock: Callable[[], float] = time.perf_counter,
                  prefetch: bool = True,
-                 tracker: TrackerConfig = TrackerConfig()):
+                 tracker: TrackerConfig = TrackerConfig(),
+                 ladder: bool = True,
+                 validate_frames: bool = True,
+                 faults: Optional[object] = None,
+                 max_stager_restarts: int = 3):
         self.cfg = cfg
         self.batch_size = batch_size
         self.tracker_cfg = tracker
@@ -343,6 +777,11 @@ class DetectionService:
         self.est_smoothing = est_smoothing
         self.clock = clock
         self.prefetch = prefetch
+        self.ladder = ladder
+        self.validate_frames = validate_frames
+        self.faults = faults
+        self.max_stager_restarts = max_stager_restarts
+        self.load_controller = LoadController(self)
         self.grids = {
             shape: _BucketGrid(
                 shape, batch_size,
@@ -351,20 +790,35 @@ class DetectionService:
             )
             for shape in self.buckets
         }
-        # EDF admission queues: heap of (deadline, priority, seq, request)
+        # Admission queues: heap of (priority, deadline, seq, request) —
+        # strict priority classes, earliest-deadline-first within a class
+        # (all-equal-priority traffic is therefore pure EDF, the pre-tier
+        # behavior; a safety tier is never queued behind bulk work)
         self.queues: dict[
             tuple[int, int],
-            list[tuple[float, int, int, DetectionRequest]],
+            list[tuple[int, float, int, DetectionRequest]],
         ] = {shape: [] for shape in self.buckets}
         self._seq = 0
         self._rr = 0            # round-robin cursor (throughput mode)
+        self._steps = 0
         self._warmed: set[tuple[tuple[int, int], bool]] = set()
         self._loader: Optional[PrefetchStager] = None
+        self.heartbeats: dict[str, float] = {}   # stager liveness registry
+        self.slo: dict[str, SessionSLO] = {}     # per-session accounting
+        self._session_coasts: dict[str, int] = {}  # consecutive coasts
         self.dispatches = 0
         self.completed = 0
         self.rejected_queue_full = 0
         self.shed_deadline = 0
         self.completed_late = 0
+        # ladder + fault counters
+        self.downshifted = 0          # requests moved to a smaller bucket
+        self.served_downshift = 0     # completed at reduced resolution
+        self.served_coast = 0         # answered from tracker prediction
+        self.evicted = 0              # lower-tier evictions (in rejected_*)
+        self.rejected_invalid = 0     # NaN/corrupt frames refused
+        self.dispatch_faults = 0      # requests failed by dispatch faults
+        self.stager_deaths = 0        # prefetch-worker deaths observed
         # (shape, active slots, render) per dispatch — introspection for
         # tests/benchmarks; bounded so a long-running service cannot
         # accrete it without limit
@@ -386,8 +840,26 @@ class DetectionService:
         return tracker.tracks if tracker is not None else []
 
     def end_session(self, session_id: str) -> None:
-        """Drop a session's tracker state (idempotent)."""
+        """Drop a session's tracker state (idempotent; SLO stats are kept
+        — accounting outlives the stream it measured)."""
         self.sessions.pop(session_id, None)
+        self._session_coasts.pop(session_id, None)
+
+    def session_slo(self, session_id: str) -> SessionSLO:
+        """The session's SLO accounting (zeros if never seen)."""
+        return self.slo.get(session_id, SessionSLO())
+
+    def _slo(self, session_id: str) -> SessionSLO:
+        s = self.slo.get(session_id)
+        if s is None:
+            s = self.slo[session_id] = SessionSLO()
+        return s
+
+    @property
+    def stager_alive(self) -> bool:
+        """Is the current prefetch worker live (True when prefetch is
+        synchronous — there is no worker to die)."""
+        return self._loader is None or self._loader.alive
 
     def __enter__(self) -> "DetectionService":
         return self
@@ -414,18 +886,24 @@ class DetectionService:
     def submit(self, req: DetectionRequest) -> RequestStatus:
         """Enqueue ``req`` — or reject it with ``QUEUE_FULL`` when the
         bounded admission queue is at capacity (backpressure: the caller
-        learns *now*, instead of every queued request learning late)."""
+        learns *now*, instead of every queued request learning late).
+        With the ladder on, a full queue first tries to evict the worst
+        strictly-lower-tier queued request (priority-tiered shedding:
+        tier-0 traffic displaces tier-2, never a peer)."""
         req.bucket = self.bucket_for(req.frame)
         now = self.clock()
         req.submitted_at = now
         if req.deadline_s is not None:
             req.deadline_at = now + req.deadline_s
+        if req.session_id is not None:
+            self._slo(req.session_id).submitted += 1
+        if self.faults is not None and self.faults.corrupts(req.uid):
+            req.frame = _nan_poison(req.frame)
         if self.max_queue is not None and self.queued >= self.max_queue:
-            req.status = RequestStatus.QUEUE_FULL
-            req.done = True
-            req.finished_at = now
-            self.rejected_queue_full += 1
-            return req.status
+            if not (self.ladder and self._evict_for(req, now)):
+                self._refuse(req, RequestStatus.QUEUE_FULL, now)
+                self.rejected_queue_full += 1
+                return req.status
         # Prefetch pays only when staging does real work (luma conversion
         # or taper padding).  A grayscale frame already at bucket shape is
         # a pass-through: shipping it to the worker would add one thread
@@ -436,26 +914,117 @@ class DetectionService:
             or req.frame.dtype != np.float32
         )
         if self.prefetch and needs_staging:
-            if self._loader is None:
-                self._loader = PrefetchStager()
-            req._staged = self._loader.stage(
-                pad_to_bucket, req.frame, req.bucket
-            )
+            self._stage_supervised(req)
         self._seq += 1
         key = req.deadline_at if req.deadline_at is not None else math.inf
         heapq.heappush(
-            self.queues[req.bucket], (key, req.priority, self._seq, req)
+            self.queues[req.bucket], (req.priority, key, self._seq, req)
         )
         return RequestStatus.PENDING
 
-    def _shed_expired(self) -> None:
-        """Shed queued requests that are expired — or *hopeless*: a queued
-        request that cannot finish in time even if everything goes well,
-        because running it anyway is the EDF overload pathology (doomed
-        work dominoes feasible work into lateness).  Either way the
-        explicit ``DEADLINE_EXCEEDED`` is the honest answer the admission
-        contract promises — instead of a result that arrives too late to
-        steer with.
+    # --- refusals + SLO --------------------------------------------------
+    def _refuse(self, req: DetectionRequest, status: RequestStatus,
+                now: float) -> None:
+        """Terminate ``req`` without an answer (explicit refusal)."""
+        req.status = status
+        req.finished_at = now
+        req._staged = None
+        if req.session_id is not None:
+            self._slo(req.session_id).refused += 1
+
+    def _evict_for(self, req: DetectionRequest, now: float) -> bool:
+        """Priority-tiered backpressure: free one queue slot for ``req``
+        by shedding the worst queued request of a STRICTLY lower tier
+        (larger ``priority`` value; ties broken latest-deadline, then
+        latest-arrival).  Equal-tier traffic is never displaced — within
+        a tier the original reject-the-newcomer contract stands, so a
+        tier cannot starve itself by churning."""
+        worst_rank: Optional[tuple[int, float, int]] = None
+        worst: Optional[tuple[tuple[int, int], tuple]] = None
+        for shape, q in self.queues.items():
+            for entry in q:
+                prio, key, seq, _ = entry
+                if prio <= req.priority:
+                    continue
+                rank = (prio, key, seq)
+                if worst_rank is None or rank > worst_rank:
+                    worst_rank, worst = rank, (shape, entry)
+        if worst is None:
+            return False
+        shape, entry = worst
+        q = self.queues[shape]
+        q.remove(entry)
+        heapq.heapify(q)
+        victim = entry[3]
+        self._refuse(victim, RequestStatus.QUEUE_FULL, now)
+        self.rejected_queue_full += 1   # still a backpressure refusal
+        self.evicted += 1
+        return True
+
+    # --- prefetch supervision -------------------------------------------
+    def _make_stager(self) -> PrefetchStager:
+        hook = (self.faults.check_stage
+                if self.faults is not None else None)
+        return PrefetchStager(
+            fault_hook=hook, heartbeat_registry=self.heartbeats,
+            clock=self.clock,
+            worker_id=f"detection-prefetch-{self.stager_deaths}",
+        )
+
+    def _note_stager_death(self) -> None:
+        """Account a dead prefetch worker and decide restart vs fallback:
+        within the ``max_stager_restarts`` budget the next staging call
+        starts a fresh worker (a new heartbeat incarnation); past it,
+        prefetch turns off and staging runs synchronously at admission —
+        results are bit-identical either way, only overlap is lost.
+
+        One real death can surface more than once (the fatal task's
+        future AND every queued future carry ``WorkerFailure``), so the
+        death is only charged while the dead worker is still the current
+        one — a stale failure from an already-replaced worker is not a
+        second death."""
+        if self._loader is None or self._loader.alive:
+            return
+        self.stager_deaths += 1
+        self._loader = None
+        if self.stager_deaths > self.max_stager_restarts:
+            self.prefetch = False
+
+    def _stage_supervised(self, req: DetectionRequest) -> None:
+        """Stage on the prefetch worker; on ``WorkerFailure`` (the death
+        the stager surfaces *explicitly* at the submit site) restart once
+        within budget, else leave ``req`` unstaged — admission stages it
+        synchronously.  Either way the request is answered; a dead thread
+        costs overlap, never correctness."""
+        for _ in range(2):
+            if not self.prefetch:
+                return
+            if self._loader is None:
+                self._loader = self._make_stager()
+            try:
+                req._staged = self._loader.stage(
+                    pad_to_bucket, req.frame, req.bucket
+                )
+                return
+            except WorkerFailure:
+                self._note_stager_death()
+
+    def _shed_or_degrade(self) -> None:
+        """Police every queue: expired or *hopeless* entries leave it —
+        but with the ladder on, a hopeless (not yet expired) request is
+        walked DOWN the degradation ladder before the shed rung fires:
+
+          1. downshift into a smaller bucket where its deadline is
+             feasible (policy + ``LoadController.downshift_target``),
+          2. else answer from the session tracker's coast prediction,
+          3. else shed with the explicit ``DEADLINE_EXCEEDED`` the
+             admission contract promises.
+
+        Hopeless means: cannot finish in time even if everything goes
+        well — running it anyway is the EDF overload pathology (doomed
+        work dominoes feasible work into lateness).  An already *expired*
+        entry goes straight to the shed rung: any answer, degraded or
+        not, would land after the deadline it exists to meet.
 
         Feasibility is *queue-depth-aware*: a request at EDF position k in
         its bucket queues behind ``active`` slotted requests and the k
@@ -466,49 +1035,153 @@ class DetectionService:
         therefore sheds a mid-pack budget that a shallow queue would keep
         (covered in ``tests/test_service_deadlines.py``); for the shallow
         case (``ahead < batch_size``) the horizon reduces to exactly the
-        old one-dispatch rule.  Shed entries do not count toward ``ahead``
-        — shedding frees their wave for the survivors.
+        old one-dispatch rule.  Entries that shed OR degrade out of the
+        queue do not count toward ``ahead`` — leaving frees their wave
+        for the survivors.
 
         The hopeless test only engages once the grid's estimate is
-        *measured* (a real dispatch fed the EMA): shedding against an
-        unvalidated prior could latch into refusing an entirely feasible
-        workload forever, since the estimate only corrects on completions.
-        No-deadline entries sort last in EDF order (``inf`` keys), so they
-        never inflate a deadlined request's horizon and are themselves
+        *measured* (a real dispatch fed the EMA): acting on an
+        unvalidated prior could latch into degrading/refusing an entirely
+        feasible workload forever, since the estimate only corrects on
+        completions.  Pop order is the admission order — priority class
+        first, EDF within a class — so ``ahead`` counts exactly what
+        really dispatches first, including no-deadline entries of a
+        higher class; no-deadline entries themselves (``inf`` keys) are
         never shed.
+
+        Buckets are policed largest-first: a request downshifted out of a
+        large bucket lands in a smaller queue that is policed later in
+        the SAME pass, so a downshift that turns out hopeless at the
+        target too (the target saturated this step) still coasts or
+        sheds this step — it cannot hide for a step in a doomed queue.
         """
         now = self.clock()
-        for shape, q in self.queues.items():
-            grid = self.grids[shape]
-            est = grid.est_s if grid.est_measured else 0.0
+        for shape in reversed(self.buckets):
+            q = self.queues[shape]
             if not q:
                 continue
+            grid = self.grids[shape]
+            est = grid.est_s if grid.est_measured else 0.0
             worst_waves = (grid.active + len(q) - 1) // len(grid.slots) + 1
-            if q[0][0] > now + worst_waves * est:  # heap min: tightest
+            tightest = min(e[1] for e in q)
+            if tightest > now + worst_waves * est:
                 continue
             keep = []
             ahead = grid.active          # slotted work dispatches first
-            for entry in sorted(q):      # EDF pop order: (key, prio, seq)
-                key, _, _, req = entry
+            for entry in sorted(q):      # pop order: (prio, key, seq)
+                _, key, _, req = entry
                 waves = ahead // len(grid.slots) + 1
-                if key <= now or (est > 0.0 and key < now + waves * est):
-                    req.status = RequestStatus.DEADLINE_EXCEEDED
-                    req.done = True
-                    req.finished_at = now
-                    req._staged = None
-                    self.shed_deadline += 1
-                else:
+                doomed = (key <= now
+                          or (est > 0.0 and key < now + waves * est))
+                if not doomed:
                     keep.append(entry)
                     ahead += 1
+                    continue
+                expired = key <= now
+                if not expired and self._try_downshift(req, now):
+                    continue
+                if not expired and self._try_coast(req, now):
+                    continue
+                self._refuse(req, RequestStatus.DEADLINE_EXCEEDED, now)
+                self.shed_deadline += 1
             q[:] = keep
             heapq.heapify(q)
 
+    # --- the ladder rungs -----------------------------------------------
+    def _try_downshift(self, req: DetectionRequest, now: float) -> bool:
+        """Rung 1: re-stage ``req`` into a smaller bucket where its
+        deadline is feasible.  The frame mean-pools by 2x per halving
+        (host-side, ``core.plan.downshift_frame``) and the result scales
+        back to native coordinates at completion (``upscale_result``) —
+        a lower-fidelity answer in time beats a perfect answer late."""
+        if not self.ladder or not req.policy.allow_downshift:
+            return False
+        target = self.load_controller.downshift_target(req, now)
+        if target is None:
+            return False
+        img, factor = downshift_frame(req.frame, target)
+        if factor <= req.downshift:
+            return False   # no actual resolution drop: nothing gained
+        # stage synchronously, now: the downshift exists to make an
+        # imminent deadline, so the pooled pad must be slot-ready the
+        # moment the target grid admits (host work, same cost class as
+        # the synchronous staging path)
+        req._staged = pad_to_bucket(img, target)
+        req._ds_shape = img.shape
+        req.downshift = factor
+        req.bucket = target
+        self.downshifted += 1
+        self._seq += 1
+        key = req.deadline_at if req.deadline_at is not None else math.inf
+        heapq.heappush(
+            self.queues[target], (req.priority, key, self._seq, req)
+        )
+        return True
+
+    def _try_coast(self, req: DetectionRequest, now: float) -> bool:
+        """Rung 2: answer a session request from its tracker's k-step
+        coast prediction — ZERO detection dispatches, the near-free local
+        answer that always meets the deadline.  Eligibility and budget
+        are the tracker's own coast rules (``LaneTracker.predict_tracks``
+        with ``steps`` = consecutive coasts served + 1): a session that
+        coasted its way past ``max_misses`` gets no further coasts until
+        a real frame completes and re-grounds the tracker, exactly like a
+        camera blackout of the same length."""
+        if not self.ladder or not req.policy.allow_coast:
+            return False
+        if req.session_id is None:
+            return False
+        tracker = self.sessions.get(req.session_id)
+        if tracker is None:
+            return False
+        steps = self._session_coasts.get(req.session_id, 0) + 1
+        tracks = tracker.predict_tracks(steps)
+        if not tracks:
+            return False
+        req.tracks = tracks
+        req.status = RequestStatus.DEGRADED_COAST
+        req.finished_at = now
+        req._staged = None
+        self._session_coasts[req.session_id] = steps
+        self.served_coast += 1
+        self._slo(req.session_id).served_coast += 1
+        return True
+
+    def _resolve_staged(self, req: DetectionRequest,
+                        shape: tuple[int, int]) -> np.ndarray:
+        """Produce the slot-ready padded frame for ``req``.
+
+        Downshifted requests carry their pooled pad as a plain array
+        (staged synchronously by the ladder).  Prefetched requests carry
+        a ``Future``; if the worker died mid-task the ``WorkerFailure``
+        surfaces here — the service notes the death (restart budget) and
+        falls back to staging synchronously, so an injected stager death
+        degrades prefetch, never correctness."""
+        staged = req._staged
+        req._staged = None
+        if isinstance(staged, np.ndarray):
+            return staged
+        if staged is not None:            # a prefetch Future
+            try:
+                return staged.result()
+            except WorkerFailure:
+                self._note_stager_death()
+        return pad_to_bucket(req.frame, shape)
+
     def _admit(self) -> None:
-        """Fill free slots earliest-deadline-first within each bucket
-        (no-deadline requests order FIFO after all deadlined ones; equal
-        deadlines tiebreak on ``priority`` then arrival).  Staged frames
+        """Fill free slots in strict priority classes within each bucket,
+        earliest-deadline-first within a class (no-deadline requests
+        order FIFO after their class's deadlined ones).  Staged frames
         come from the prefetch worker when enabled — admission only copies
-        the finished pad into the slot buffer."""
+        the finished pad into the slot buffer.
+
+        Admission is also the frame-validity gate: a non-finite pad (NaN
+        Inf — sensor corruption, injected or real) must never reach the
+        device, where it would poison the whole batch's reduction math.
+        A corrupt session frame falls to the coast rung (the tracker's
+        prediction is exactly the right answer to one bad capture);
+        otherwise the request refuses with ``INVALID_FRAME``.  Either
+        way the slot stays free for the next queue entry."""
         for shape in self.buckets:
             grid = self.grids[shape]
             q = self.queues[shape]
@@ -521,11 +1194,13 @@ class DetectionService:
                 # worker raised, the exception surfaces here with the
                 # request un-slotted (still PENDING) — never a DONE result
                 # silently computed from the slot's zeroed frame
-                if req._staged is not None:
-                    staged = req._staged.result()
-                    req._staged = None
-                else:
-                    staged = pad_to_bucket(req.frame, grid.shape)
+                staged = self._resolve_staged(req, grid.shape)
+                if self.validate_frames and not np.isfinite(staged).all():
+                    if not self._try_coast(req, self.clock()):
+                        self._refuse(req, RequestStatus.INVALID_FRAME,
+                                     self.clock())
+                        self.rejected_invalid += 1
+                    continue
                 grid.slots[slot] = req
                 grid.staged[slot] = staged
 
@@ -580,9 +1255,16 @@ class DetectionService:
         every sub-second budget."""
         if grid.in_flight is None:
             return
-        reqs, res, t_disp, was_warm = grid.in_flight
+        reqs, res, t_disp, was_warm, stall_s = grid.in_flight
         grid.in_flight = None
         jax.block_until_ready(res.lines)
+        if stall_s > 0.0 and hasattr(self.clock, "advance"):
+            # an injected dispatch stall: the device "took" stall_s extra
+            # seconds — model it on the virtual clock so the batch lands
+            # late, but keep the sample out of the EMA (a one-off stall is
+            # not evidence about steady-state service time)
+            self.clock.advance(stall_s)
+            was_warm = False
         now = self.clock()
         dt = now - t_disp
         if was_warm and dt > 0.0 and (update_est or dt <= grid.est_s):
@@ -592,20 +1274,29 @@ class DetectionService:
         for i, req in enumerate(reqs):
             if req is None:
                 continue
-            assert not req.done, f"request {req.uid} answered twice"
+            assert not req.is_terminal, f"request {req.uid} answered twice"
             H, W = req.frame.shape[:2]
             want = req.render_output or self.cfg.render_output
             rendered = (
                 res.rendered[i]
                 if want and res.rendered is not None else None
             )
-            req.result = crop_result(
-                DetectionResult(
-                    res.lines[i], res.valid[i], res.peaks[i], res.edges[i],
-                    rendered,
-                ),
-                H, W,
+            per = DetectionResult(
+                res.lines[i], res.valid[i], res.peaks[i], res.edges[i],
+                rendered,
             )
+            if req.downshift > 1:
+                # the batch ran at the downshifted bucket: crop to the
+                # pooled content shape, then map back to native coords
+                dh, dw = req._ds_shape
+                req.result = upscale_result(
+                    crop_result(per, dh, dw), req.downshift, H, W,
+                )
+                req.status = RequestStatus.DEGRADED_DOWNSHIFT
+                self.served_downshift += 1
+            else:
+                req.result = crop_result(per, H, W)
+                req.status = RequestStatus.DONE
             if req.session_id is not None:
                 tracker = self.sessions.get(req.session_id)
                 if tracker is None:
@@ -618,11 +1309,19 @@ class DetectionService:
                     np.asarray(req.result.peaks),
                     np.asarray(req.result.valid),
                 )
-            req.status = RequestStatus.DONE
-            req.done = True
+                # a real frame re-grounds the tracker: the coast budget
+                # resets (see _try_coast)
+                self._session_coasts.pop(req.session_id, None)
+                slo = self._slo(req.session_id)
+                if req.downshift > 1:
+                    slo.served_downshift += 1
+                else:
+                    slo.served_full += 1
             req.finished_at = now
             if req.deadline_at is not None and now > req.deadline_at:
                 self.completed_late += 1
+                if req.session_id is not None:
+                    self._slo(req.session_id).late += 1
             self.completed += 1
 
     # --- scheduling -----------------------------------------------------
@@ -653,18 +1352,27 @@ class DetectionService:
 
     def _next_grid_deadline(self, flush: bool, now: float
                             ) -> Optional[_BucketGrid]:
-        """Earliest-deadline-first over occupied grids.
+        """Priority-major, earliest-deadline-first over occupied grids.
 
-        A grid dispatches when it is full, when it must close early
-        (``tightest deadline - now <= est_s``: one more wait would bust
-        it), or when flushing.  A less urgent grid may only jump ahead of
-        the tightest waiting one if its own dispatch fits inside that
-        grid's slack — EDF with admission control, not strict EDF, so
-        throughput traffic still flows around a slack deadline."""
+        Grids rank by the highest priority class aboard, then tightest
+        deadline (uniform-priority traffic is therefore pure EDF over
+        grids, the pre-tier behavior bit-exact).  When total queued work
+        exceeds the slack — someone must be late — this is what makes
+        the lateness land on the lowest class instead of whichever
+        bucket sorted first.  A grid dispatches when it is full, when it
+        must close early (``tightest deadline - now <= est_s``: one more
+        wait would bust it), or when flushing.  A lower-ranked grid may
+        only jump ahead of the first waiting one if its own dispatch
+        fits inside that grid's slack — EDF with admission control, not
+        strict EDF, so throughput traffic still flows around a slack
+        deadline."""
         order = sorted(
             (g for g in self.grids.values() if g.active),
-            key=lambda g: (g.tightest_deadline(),
-                           self.buckets.index(g.shape)),
+            key=lambda g: (
+                min(r.priority for r in g.slots if r is not None),
+                g.tightest_deadline(),
+                self.buckets.index(g.shape),
+            ),
         )
         guard: Optional[tuple[float, float]] = None  # (deadline, est) held
         for g in order:
@@ -682,14 +1390,23 @@ class DetectionService:
         return None
 
     def step(self, *, flush: bool = False) -> bool:
-        """Shed -> admit (EDF) -> dispatch one bucket grid -> free its
-        slots for the next admission wave; completion of the *previous*
-        dispatch on that grid happens just before the new one lands (one
-        batch in flight per bucket).  Without deadlines only full grids
-        dispatch unless ``flush``; with deadlines the tightest grid may
-        close early.  Returns True if any work remains."""
+        """Shed/degrade -> admit (EDF) -> dispatch one bucket grid ->
+        free its slots for the next admission wave; completion of the
+        *previous* dispatch on that grid happens just before the new one
+        lands (one batch in flight per bucket).  Without deadlines only
+        full grids dispatch unless ``flush``; with deadlines the tightest
+        grid may close early.  Returns True if any work remains."""
+        k_step = self._steps
+        self._steps += 1
+        if self.faults is not None and hasattr(self.clock, "advance"):
+            jump = self.faults.clock_jump_for_step(k_step)
+            if jump > 0.0:
+                # an injected clock jump: time lurches forward before the
+                # scheduler looks at anything — every queued deadline the
+                # jump crossed expires in this one step's shed pass
+                self.clock.advance(jump)
         self._reap()
-        self._shed_expired()
+        self._shed_or_degrade()
         self._admit()
         if self._deadline_mode():
             grid = self._next_grid_deadline(flush, self.clock())
@@ -706,6 +1423,23 @@ class DetectionService:
         )
         plan = grid.plan.with_render(True) if want_render else grid.plan
         reqs = list(grid.slots)
+        if self.faults is not None and self.faults.fails_dispatch(
+                self.dispatches):
+            # injected dispatch failure: the batch never reaches the
+            # device.  Retire the grid's previous batch first (its result
+            # is real), then fail THIS batch's requests explicitly —
+            # FAILED, never a hang, never a silent retry-with-zeros.  The
+            # failed dispatch gets no log entry and does not advance the
+            # dispatch counter: it never happened, device-wise.
+            self._complete(grid)
+            now = self.clock()
+            for req in reqs:
+                if req is not None:
+                    self._refuse(req, RequestStatus.FAILED, now)
+            self.dispatch_faults += 1
+            grid.slots = [None] * self.batch_size
+            grid.staged = np.zeros_like(grid.staged)
+            return True
         imgs = jax.device_put(grid.staged)
         warm_key = (grid.shape, plan.cfg.render_output)
         was_warm = warm_key in self._warmed
@@ -730,7 +1464,9 @@ class DetectionService:
         # batch k-1 retires while k computes; if the dispatch above raised,
         # it is still in_flight and a later step/run() drains it
         self._complete(grid)
-        grid.in_flight = (reqs, res, self.clock(), was_warm)
+        stall = (self.faults.stall_for_dispatch(self.dispatches)
+                 if self.faults is not None else 0.0)
+        grid.in_flight = (reqs, res, self.clock(), was_warm, stall)
         self.dispatches += 1
         self.dispatch_log.append((grid.shape, grid.active, want_render))
         grid.slots = [None] * self.batch_size   # slots free immediately
