@@ -1,0 +1,360 @@
+"""Sharded-fleet scaling + affinity + offload benchmark -> ``BENCH_mesh.json``.
+
+Same discipline as ``fleet_suite.py``: everything runs on ONE shared
+:class:`VirtualClock` with modeled per-dispatch service times
+(``MODEL_COST``), so every number is a deterministic function of the
+trace and the policy — replica parallelism is modeled as overlapping
+per-replica busy windows on that clock, which is why the scaling curve
+is meaningful on a 1-core bench host (and why it would be meaningless
+as wall time there).  Three sections:
+
+  * **scaling** — the fleet_suite Zipf session trace replayed at EQUAL
+    offered load through 1, 2, 4, and 8 replicas
+    (:class:`ShardedDetectionService`).  One replica is offered ~2.5x
+    its modeled capacity (the fleet_suite overload point); each doubling
+    adds capacity, so served throughput (served requests per second of
+    makespan) must rise.  GATE: throughput at 8 replicas is *strictly*
+    above 1 replica.
+  * **affinity** — the same trace through a mid-size fleet twice:
+    session-affinity routing ON (a session pins to the replica holding
+    its tracker) vs OFF (pure load routing — the ablation: trackers
+    fragment across replicas, so coast answers and union-gated
+    dispatches evaporate).  GATE: tier-0 miss rate with affinity on is
+    no worse than off.
+  * **offload** — the speculative local/remote race
+    (``core.offload.decide_race``; Schafhalter et al., PAPERS.md) on a
+    scripted schedule: the low-res local pass lands at a fixed virtual
+    time, the full-res remote pass at another, and the modeled network
+    (``rtt_s``) decides the winner.  GATES: the local answer meets the
+    deadline in EVERY arm (the guarantee the local tier exists for),
+    and the remote answer upgrades exactly in the arms where
+    ``remote_done + rtt <= deadline`` — including never from a dead
+    remote replica.
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for
+real replica placement (smoke.sh does; the committed BENCH_mesh.json is
+generated that way); without the flag every replica shares the one host
+device.  Either configuration is bit-reproducible run to run, but the
+two differ in the last ulp of the detector's outputs (the flag splits
+the host threadpool, changing XLA reduction order), which can nudge
+tracker-fed decisions — compare numbers only within one configuration.
+
+Usage: PYTHONPATH=src python -m benchmarks.mesh_suite [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core.offload import SpeculativeConfig
+from repro.data import make_scenario
+from repro.runtime import ServiceFaultInjector
+from repro.serve.detection import (
+    DetectionRequest, RequestStatus, VirtualClock,
+)
+from repro.serve.fleet import ShardedDetectionService
+
+from .common import print_table
+from .fleet_suite import (
+    ARRIVAL_GAP_S, BATCH_SIZE, BUCKETS, MAX_QUEUE, MODEL_COST,
+    TIER_DEADLINE, _cfg, _trace_frame, fleet_trace,
+)
+
+#: The race's scripted virtual-time schedule (seconds): local low-res
+#: answer in hand, remote full-res computed, the caller's deadline.
+RACE_LOCAL_DONE = 0.02
+RACE_REMOTE_DONE = 0.07
+RACE_DEADLINE = 0.10
+
+
+# --- shared-clock fleet driver ----------------------------------------------
+
+def drive_fleet(svc: ShardedDetectionService, clock: VirtualClock,
+                reqs: list[DetectionRequest],
+                arrivals: list[float]) -> float:
+    """Replay scripted arrivals through a replica fleet on one clock.
+
+    Each replica owns a busy window: a dispatch at ``t`` occupies it
+    until ``t + MODEL_COST[shape]``, and its completion is stepped
+    exactly when the window closes — so R replicas overlap R windows on
+    the shared clock and the makespan shrinks with R (the quantity the
+    scaling gate measures).  Compute is real; time is modeled — the
+    ``run_deadline_sim`` recipe, one busy window per replica instead of
+    one global one.  Returns the makespan (virtual seconds).
+    """
+    busy = {rep.index: clock() for rep in svc.replicas}
+    i = 0
+    for _ in range(500_000):
+        while i < len(reqs) and arrivals[i] <= clock() + 1e-12:
+            svc.submit(reqs[i])
+            i += 1
+        arrived_all = i == len(reqs)
+        if svc.faults is not None:
+            k = svc._steps
+            svc._steps += 1
+            for victim in svc.faults.replicas_to_kill(k):
+                svc.kill_replica(victim)
+        pending = False
+        for rep in svc.replicas:
+            if not rep.alive:
+                continue
+            s = rep.service
+            if busy[rep.index] <= clock() + 1e-12:
+                d0 = s.dispatches
+                s.step(flush=arrived_all)
+                if s.dispatches > d0:
+                    shape, _, _ = s.dispatch_log[-1]
+                    busy[rep.index] = clock() + MODEL_COST[shape]
+            if (s.queued or any(g.active or g.in_flight is not None
+                                for g in s.grids.values())):
+                pending = True
+        if arrived_all and not pending:
+            break
+        horizon = [busy[rep.index] for rep in svc.replicas
+                   if rep.alive and busy[rep.index] > clock() + 1e-12]
+        if not arrived_all:
+            horizon.append(arrivals[i])
+        if horizon:
+            clock.advance(max(min(horizon) - clock(), 0.0) or 1e-4)
+        else:
+            clock.advance(1e-4)   # free replicas still draining queues
+    makespan = clock()
+    svc.close()
+    return makespan
+
+
+def _tier_stats(reqs: list[DetectionRequest], trace: list[dict]) -> dict:
+    tiers: dict[str, dict] = {}
+    for tier in (0, 1, 2):
+        rs = [r for r, it in zip(reqs, trace) if it["tier"] == tier]
+        refused = sum(r.status.refused for r in rs)
+        late = sum(r.served and r.finished_at > r.deadline_at for r in rs)
+        n = len(rs)
+        tiers[f"tier{tier}"] = {
+            "offered": n,
+            "served_full": sum(r.ok for r in rs),
+            "served_downshift": sum(
+                r.status is RequestStatus.DEGRADED_DOWNSHIFT for r in rs),
+            "served_coast": sum(
+                r.status is RequestStatus.DEGRADED_COAST for r in rs),
+            "refused": refused,
+            "late": late,
+            "miss_rate": (refused + late) / n if n else 0.0,
+        }
+    return tiers
+
+
+def run_fleet_arm(trace: list[dict], *, n_replicas: int,
+                  affinity: bool = True,
+                  faults: ServiceFaultInjector | None = None) -> dict:
+    clock = VirtualClock()
+    svc = ShardedDetectionService(
+        _cfg(), n_replicas=n_replicas, clock=clock, buckets=BUCKETS,
+        batch_size=BATCH_SIZE, max_queue=MAX_QUEUE, prefetch=False,
+        affinity=affinity, faults=None,
+    )
+    svc.faults = faults
+    for rep in svc.replicas:
+        for shape, grid in rep.service.grids.items():
+            grid.est_s = MODEL_COST[shape]
+            grid.est_measured = True
+    reqs = [
+        DetectionRequest(
+            uid=i, frame=_trace_frame(it), session_id=it["session"],
+            priority=it["tier"], deadline_s=TIER_DEADLINE[it["tier"]],
+        )
+        for i, it in enumerate(trace)
+    ]
+    makespan = drive_fleet(svc, clock, reqs,
+                           [it["arrival_s"] for it in trace])
+    served = sum(r.served for r in reqs)
+    out = _tier_stats(reqs, trace)
+    out.update({
+        "n_replicas": n_replicas,
+        "affinity": affinity,
+        "served": served,
+        "offered": len(reqs),
+        "makespan_s": makespan,
+        "throughput_rps": served / makespan if makespan else 0.0,
+        "all_terminal": all(r.is_terminal for r in reqs),
+        "dispatches": svc.dispatches,
+        "gated_dispatches": svc.gated_dispatches,
+        "gated_share": (svc.gated_dispatches / svc.dispatches
+                        if svc.dispatches else 0.0),
+        "served_coast": sum(rep.service.served_coast
+                            for rep in svc.replicas),
+        "failed_on_death": svc.failed_on_death,
+        "requeued": svc.requeued,
+    })
+    return out
+
+
+# --- speculative offload race ------------------------------------------------
+
+def run_offload_race(rtt_s: float, *, kill_remote: bool = False) -> dict:
+    """One scripted local/remote race on the shared clock.
+
+    The local low-res pass is driven to completion at
+    ``RACE_LOCAL_DONE``; the remote full-res pass computes at
+    ``RACE_REMOTE_DONE``; ``decide_race`` then charges ``rtt_s`` on the
+    downlink.  Every quantity below is exact virtual time — reruns are
+    bit-identical.
+    """
+    clock = VirtualClock()
+    svc = ShardedDetectionService(
+        _cfg(), n_replicas=2, clock=clock, buckets=BUCKETS,
+        batch_size=1, prefetch=False, remote_replica=1,
+        speculative=SpeculativeConfig(rtt_s=rtt_s,
+                                      local_shape=BUCKETS[0]),
+    )
+    for rep in svc.replicas:
+        for shape, grid in rep.service.grids.items():
+            grid.est_s = MODEL_COST[shape]
+            grid.est_measured = True
+    if kill_remote:
+        svc.kill_replica(1)
+    frame = make_scenario("straight", *BUCKETS[1], seed=0).image
+    req = DetectionRequest(uid=0, frame=frame, deadline_s=RACE_DEADLINE)
+    ticket = svc.submit_speculative(req)
+    local_svc = svc.replicas[0].service
+    local_svc.step()                                  # dispatch at t=0
+    clock.jump_to(RACE_LOCAL_DONE)
+    local_svc.step(flush=True)                        # local in hand
+    if not kill_remote:
+        remote_svc = svc.replicas[1].service
+        remote_svc.step(flush=True)
+        clock.jump_to(RACE_REMOTE_DONE)
+        remote_svc.step(flush=True)                   # remote computed
+    decision = svc.resolve_speculative(ticket)
+    assert decision is not None
+    expected_upgrade = (not kill_remote
+                        and RACE_REMOTE_DONE + rtt_s <= RACE_DEADLINE)
+    out = {
+        "rtt_s": rtt_s,
+        "remote_alive": not kill_remote,
+        "local_done_at": decision.local_done_at,
+        "remote_ready_at": (None if decision.remote_ready_at == float("inf")
+                            else decision.remote_ready_at),
+        "deadline_at": decision.deadline_at,
+        "winner": decision.winner,
+        "upgraded": decision.upgraded,
+        "expected_upgrade": expected_upgrade,
+        "upgrade_as_expected": decision.upgraded == expected_upgrade,
+        "local_met_deadline": decision.local_met_deadline,
+        "served_bucket": list(req.bucket),
+        "served_in_time": bool(req.served
+                               and req.finished_at <= req.deadline_at),
+    }
+    svc.close()
+    return out
+
+
+# --- main -------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter trace, fewer fleet sizes")
+    ap.add_argument("--out", default="BENCH_mesh.json")
+    args = ap.parse_args()
+
+    n_trace = 120 if args.quick else 400
+    sizes = (1, 2, 8) if args.quick else (1, 2, 4, 8)
+    trace = fleet_trace(n_trace, seed=0)
+
+    scaling = [run_fleet_arm(trace, n_replicas=r) for r in sizes]
+    print_table(
+        f"scaling @ equal offered load ({n_trace} reqs, ~2.5x one "
+        f"replica's capacity, virtual clock)",
+        ["replicas", "served", "makespan_s", "thr_rps", "tier0_miss",
+         "coast", "gated_share"],
+        [[a["n_replicas"], f"{a['served']}/{a['offered']}",
+          f"{a['makespan_s']:.3f}", f"{a['throughput_rps']:.1f}",
+          f"{a['tier0']['miss_rate']:.3f}", a["served_coast"],
+          f"{a['gated_share']:.2f}"] for a in scaling],
+    )
+
+    aff_n = 2 if args.quick else 4
+    aff_on = run_fleet_arm(trace, n_replicas=aff_n, affinity=True)
+    aff_off = run_fleet_arm(trace, n_replicas=aff_n, affinity=False)
+    print_table(
+        f"session affinity ablation ({aff_n} replicas, same trace)",
+        ["affinity", "served", "tier0_miss", "coast", "gated_share"],
+        [[name, f"{a['served']}/{a['offered']}",
+          f"{a['tier0']['miss_rate']:.3f}", a["served_coast"],
+          f"{a['gated_share']:.2f}"]
+         for name, a in (("on", aff_on), ("off", aff_off))],
+    )
+
+    races = [
+        run_offload_race(0.01),                     # network fast: upgrade
+        run_offload_race(0.05),                     # rtt blows the budget
+        run_offload_race(0.01, kill_remote=True),   # dead remote replica
+    ]
+    print_table(
+        f"speculative offload race (local@{RACE_LOCAL_DONE}s, "
+        f"remote@{RACE_REMOTE_DONE}s, deadline {RACE_DEADLINE}s)",
+        ["rtt_s", "remote", "winner", "upgraded", "as_expected",
+         "local_met_deadline"],
+        [[r["rtt_s"], "alive" if r["remote_alive"] else "DEAD",
+          r["winner"], r["upgraded"], r["upgrade_as_expected"],
+          r["local_met_deadline"]] for r in races],
+    )
+
+    thr = {a["n_replicas"]: a["throughput_rps"] for a in scaling}
+    gates = {
+        "throughput_scales": thr[8] > thr[1],
+        "affinity_tier0_no_worse": (
+            aff_on["tier0"]["miss_rate"] <= aff_off["tier0"]["miss_rate"]
+        ),
+        "speculative_local_guarantee": all(
+            r["local_met_deadline"] and r["served_in_time"]
+            for r in races
+        ),
+        "speculative_upgrade_iff_wins": all(
+            r["upgrade_as_expected"] for r in races
+        ),
+        "all_terminal": all(a["all_terminal"] for a in scaling)
+        and aff_on["all_terminal"] and aff_off["all_terminal"],
+    }
+    print(f"\n  throughput: {thr[1]:.1f} rps @1 -> {thr[8]:.1f} rps @8 "
+          f"-> {'ok' if gates['throughput_scales'] else 'VIOLATED'}")
+    print(f"  affinity tier-0 miss {aff_on['tier0']['miss_rate']:.3f} "
+          f"(on) vs {aff_off['tier0']['miss_rate']:.3f} (off) -> "
+          f"{'ok' if gates['affinity_tier0_no_worse'] else 'VIOLATED'}")
+    print(f"  speculative local guarantee: "
+          f"{'ok' if gates['speculative_local_guarantee'] else 'VIOLATED'}")
+    print(f"  speculative upgrade iff wins: "
+          f"{'ok' if gates['speculative_upgrade_iff_wins'] else 'VIOLATED'}")
+    print(f"  all requests terminal: "
+          f"{'ok' if gates['all_terminal'] else 'VIOLATED'}")
+
+    payload = {
+        "meta": {
+            "quick": args.quick,
+            "n_trace": n_trace,
+            "sizes": list(sizes),
+            "affinity_replicas": aff_n,
+            "arrival_gap_s": ARRIVAL_GAP_S,
+            "model_cost": {f"{k[0]}x{k[1]}": v
+                           for k, v in MODEL_COST.items()},
+            "tier_deadline_s": TIER_DEADLINE,
+            "race": {"local_done_s": RACE_LOCAL_DONE,
+                     "remote_done_s": RACE_REMOTE_DONE,
+                     "deadline_s": RACE_DEADLINE},
+        },
+        "scaling": {str(a["n_replicas"]): a for a in scaling},
+        "affinity": {"on": aff_on, "off": aff_off},
+        "offload": races,
+        "gates": gates,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    print(f"\nwrote {args.out}")
+    if not all(gates.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

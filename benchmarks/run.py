@@ -18,8 +18,14 @@ With ``--fleet`` the overload + fault-injection suite runs and emits
 ladder on/off at equal offered load, coast-only F1 floors, and the fault
 matrix's all-terminal contract.
 
+With ``--mesh`` the sharded-fleet suite runs and emits
+``BENCH_mesh.json`` (see ``benchmarks/mesh_suite.py``): the 1 -> 8
+replica scaling curve at equal offered load (8-replica throughput must
+strictly exceed 1-replica), the session-affinity ablation, and the
+speculative local/remote offload race.
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--scenarios]
-    [--service] [--tracking] [--fleet]
+    [--service] [--tracking] [--fleet] [--mesh]
 """
 
 from __future__ import annotations
@@ -197,6 +203,56 @@ def main() -> None:
             and summary["fleet_faults_all_terminal"]
         )
 
+    if "--mesh" in sys.argv:
+        import os
+
+        from . import mesh_suite
+        if os.path.exists("BENCH_mesh.json"):
+            os.remove("BENCH_mesh.json")  # never score a stale run
+        saved_argv = sys.argv
+        sys.argv = [saved_argv[0]] + (["--quick"] if quick else [])
+        mesh_ok = True
+        try:
+            mesh_suite.main()
+        except SystemExit:
+            mesh_ok = False
+        finally:
+            sys.argv = saved_argv
+        if os.path.exists("BENCH_mesh.json"):
+            with open("BENCH_mesh.json") as f:
+                ms = json.load(f)
+            summary["mesh_throughput_scales"] = (
+                ms["gates"]["throughput_scales"]
+            )
+            summary["mesh_affinity_tier0_no_worse"] = (
+                ms["gates"]["affinity_tier0_no_worse"]
+            )
+            summary["mesh_speculative_local_guarantee"] = (
+                ms["gates"]["speculative_local_guarantee"]
+            )
+            summary["mesh_speculative_upgrade_iff_wins"] = (
+                ms["gates"]["speculative_upgrade_iff_wins"]
+            )
+            summary["mesh_throughput_1"] = (
+                ms["scaling"]["1"]["throughput_rps"]
+            )
+            summary["mesh_throughput_8"] = (
+                ms["scaling"]["8"]["throughput_rps"]
+            )
+        else:  # suite aborted before writing
+            summary["mesh_throughput_scales"] = False
+            summary["mesh_affinity_tier0_no_worse"] = False
+            summary["mesh_speculative_local_guarantee"] = False
+            summary["mesh_speculative_upgrade_iff_wins"] = False
+            summary["mesh_throughput_1"] = None
+            summary["mesh_throughput_8"] = None
+        summary["mesh_contract_ok"] = mesh_ok and (
+            summary["mesh_throughput_scales"]
+            and summary["mesh_affinity_tier0_no_worse"]
+            and summary["mesh_speculative_local_guarantee"]
+            and summary["mesh_speculative_upgrade_iff_wins"]
+        )
+
     t1 = table1_full_pipeline()
     t2 = table2_elided()
     summary["elision_speedup"] = t1["total_us"] / t2["total_us"]
@@ -270,6 +326,15 @@ def main() -> None:
         ok = summary["fleet_contract_ok"]
         print(f"  fleet overload: {miss_txt}, coast/fault gates "
               f"{'ok' if ok else 'VIOLATED'}")
+    if "mesh_contract_ok" in summary:
+        t1 = summary.get("mesh_throughput_1")
+        t8 = summary.get("mesh_throughput_8")
+        thr_txt = (f"throughput {t1:.0f} -> {t8:.0f} rps (1 -> 8 "
+                   f"replicas)" if t1 is not None and t8 is not None
+                   else "scaling arms missing")
+        ok = summary["mesh_contract_ok"]
+        print(f"  sharded fleet: {thr_txt}, affinity/offload gates "
+              f"{'ok' if ok else 'VIOLATED'}")
 
     path = "BENCH_paper_tables.json"
     with open(path, "w") as f:
@@ -278,7 +343,8 @@ def main() -> None:
     if not (summary.get("scenario_autotune_contract_ok", True)
             and summary.get("service_contract_ok", True)
             and summary.get("tracking_contract_ok", True)
-            and summary.get("fleet_contract_ok", True)):
+            and summary.get("fleet_contract_ok", True)
+            and summary.get("mesh_contract_ok", True)):
         raise SystemExit(1)  # CI gates on the exit code, not the JSON
 
 

@@ -12,12 +12,24 @@ inside one fused program, so t_transfer ~ 0 and the placement rule reduces
 to: *GEMM-expressible -> MXU; element-wise/control -> VPU; host only for
 I/O*.  This module encodes that rule as an explicit, testable planner and
 documents the assumption change.
+
+**Speculative local/remote offload** (Schafhalter et al., "Leveraging
+Cloud Computing to Make Autonomous Vehicles Safer", PAPERS.md): the same
+offload calculus one tier up, between the vehicle and a remote replica
+across a network.  A fast low-res *local* pass guarantees the deadline; a
+high-res *remote* pass races it across the network and upgrades the
+answer when it wins.  :class:`SpeculativeConfig` + :func:`decide_race`
+are the pure deterministic policy — completion times in, winner out, no
+clock or RNG — so the serving layer
+(:meth:`repro.serve.fleet.ShardedDetectionService.submit_speculative`)
+and its tests model the race exactly on a ``VirtualClock``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
+import math
+from typing import Iterable, Optional
 
 from .profiling import StageCost
 
@@ -71,3 +83,63 @@ def plan_line_detection(H: int, W: int, *, fused: bool = False
     from .profiling import line_detection_costs
 
     return plan(line_detection_costs(H, W, fused=fused))
+
+
+# --- speculative local/remote offload (Schafhalter et al.) ------------------
+
+@dataclasses.dataclass(frozen=True)
+class SpeculativeConfig:
+    """Modeled network for the local/remote race.
+
+    ``rtt_s`` is the full round trip (request uplink + response
+    downlink); the race model charges it on top of the remote replica's
+    completion time, so "remote wins" means the *upgraded answer is in
+    the vehicle's hands* before the deadline — not merely computed
+    somewhere.  ``local_shape`` is the low-res bucket the guaranteed
+    local pass runs at (None = the service's smallest bucket)."""
+    rtt_s: float = 0.03
+    local_shape: Optional[tuple[int, int]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RaceDecision:
+    """Deterministic outcome of one speculative race (pure data)."""
+    local_done_at: float        # when the local low-res answer landed
+    remote_ready_at: float      # remote completion + downlink rtt
+    deadline_at: Optional[float]
+    upgraded: bool              # remote answer replaces the local one
+    local_met_deadline: bool    # the guarantee the local tier exists for
+
+    @property
+    def winner(self) -> str:
+        return "remote" if self.upgraded else "local"
+
+
+def decide_race(local_done_at: float, remote_done_at: Optional[float],
+                deadline_at: Optional[float], *,
+                rtt_s: float) -> RaceDecision:
+    """Pick the answer of one local/remote speculative race.
+
+    The local pass is authoritative by default — it is the deadline
+    guarantee.  The remote high-res answer upgrades it iff the remote
+    replica actually completed (``remote_done_at`` not None: a shed,
+    refused, or dead-replica remote pass never upgrades anything) and
+    its answer, after the downlink (+``rtt_s``, the modeled network),
+    is in hand by the deadline.  With no deadline the remote answer
+    always upgrades once complete — there is nothing to race.
+    """
+    remote_ready = (math.inf if remote_done_at is None
+                    else remote_done_at + rtt_s)
+    upgraded = remote_ready <= (
+        deadline_at if deadline_at is not None else math.inf
+    ) if remote_done_at is not None else False
+    if remote_done_at is not None and deadline_at is None:
+        upgraded = True
+    return RaceDecision(
+        local_done_at=local_done_at,
+        remote_ready_at=remote_ready,
+        deadline_at=deadline_at,
+        upgraded=upgraded,
+        local_met_deadline=(deadline_at is None
+                            or local_done_at <= deadline_at),
+    )

@@ -293,11 +293,27 @@ class DetectionPlan:
 
 
 class PlanCache:
-    """Per-detector memo of plans keyed by ``(H, W, batch-bucket)``."""
+    """Per-detector memo of plans keyed by ``(H, W, batch-bucket)``.
 
-    def __init__(self, cfg: PipelineConfig):
+    ``device`` pins the cache (and everything staged through ``put``) to
+    one jax device: a sharded service keeps one PlanCache per replica, so
+    each replica's dispatches compile and run on its own device instead
+    of whatever the backend default is.  ``None`` keeps the pre-mesh
+    behavior (default device, plain ``jax.device_put``).
+    """
+
+    def __init__(self, cfg: PipelineConfig, *, device=None):
         self.cfg = cfg
+        self.device = device
         self._plans: dict[tuple[int, int, int | None], DetectionPlan] = {}
+
+    def put(self, x):
+        """Ship a host batch to this cache's device (the one explicit
+        transfer per dispatch — callers keep their hot loops under
+        ``jax.transfer_guard("disallow")``)."""
+        if self.device is None:
+            return jax.device_put(x)
+        return jax.device_put(x, self.device)
 
     def plan_for(self, height: int, width: int, *,
                  batch: int | None = None) -> DetectionPlan:

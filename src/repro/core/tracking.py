@@ -76,6 +76,19 @@ class TrackerConfig:
     # classic gated-tracking lock-out.  Long enough to rebirth + confirm
     # a replacement (confirm_hits) with margin.
     rescan_frames: int = 5
+    # Warm-start coast eligibility: a session that has been *grounded* —
+    # step() matched at least one detection — this many frames EVER may
+    # coast on any confirmed track, even one whose own ``hits`` count is
+    # still short of ``coast_hits``.  Under overload shed pressure (or on
+    # noisy families where detections flicker between a stroke's raster
+    # sides) tracks churn faster than any single one can accumulate
+    # ``coast_hits`` matched detections, so the strictly per-track bar
+    # starves the ladder's coast rung exactly when it is needed; the
+    # session-level bar says "this camera has proven it sees lanes",
+    # which is the evidence the per-track bar was a proxy for.  The miss
+    # budget (``misses + steps <= max_misses``) still applies per track,
+    # so a warm-started coast can never outlive a real blackout.
+    warm_frames: int = 10
     band_half_deg: float = 8.0    # per-track half-width of the Hough gate
     # Pre-association doublet merge: a painted stroke has two raster
     # sides, so the detector legitimately yields peak pairs a few rho bins
@@ -203,6 +216,10 @@ class LaneTracker:
         self._next_id = 0
         self.frame = 0
         self._rescan = 0          # full-sweep frames still owed (see cfg)
+        # frames where step() matched >= 1 detection to a track — the
+        # session-level "has this camera ever seen lanes" evidence the
+        # warm-start coast rule reads (cfg.warm_frames)
+        self.grounded_frames = 0
 
     # --- introspection --------------------------------------------------
     @property
@@ -236,23 +253,33 @@ class LaneTracker:
             t.theta += math.pi
             t.rho, t.drho = -t.rho, -t.drho
 
-    def step(self, peaks, valid=None) -> list[Track]:
+    def step(self, peaks, valid=None, *, scale: float = 1.0) -> list[Track]:
         """Advance one frame on the detector's (K, 2)/(K,) peak output.
 
         ``valid=None`` treats every row of ``peaks`` as a detection.
+        ``scale`` is the resolution divisor the detections were computed
+        at (1 = native): a frame served downshifted by ``factor`` carries
+        rho quantization error ~``factor`` times the native bin, so the
+        rho association gate (and the doublet-merge tolerance) widen by
+        it — otherwise an upscaled coarse detection lands just outside
+        the native gate, the true track coasts, and a twin is born at
+        the quantized position (the track-churn path that starves the
+        coast rung across resolution downshifts).  Theta is
+        scale-invariant, so the theta gate does not widen.
         Returns the reported tracks for this frame (see class docstring).
         """
         peaks = np.asarray(peaks, np.float64).reshape(-1, 2)
         if valid is not None:
             peaks = peaks[np.asarray(valid, bool).reshape(-1)]
         cfg = self.cfg
+        scale = max(1.0, float(scale))
         # consume one owed rescan frame BEFORE any kill below can open a
         # new window: a kill at this frame must leave the full
         # rescan_frames budget for the frames after it
         if self._rescan > 0:
             self._rescan -= 1
         if cfg.merge_rho > 0.0 and peaks.shape[0] > 1:
-            peaks = merge_peaks(peaks, tol_rho=cfg.merge_rho,
+            peaks = merge_peaks(peaks, tol_rho=cfg.merge_rho * scale,
                                 tol_theta_deg=cfg.merge_theta_deg)
 
         self._predict()
@@ -260,10 +287,13 @@ class LaneTracker:
                              np.float64).reshape(-1, 2)
         matches = match_peaks(
             peaks, predicted,
-            tol_rho=cfg.gate_rho, tol_theta_deg=cfg.gate_theta_deg,
+            tol_rho=cfg.gate_rho * scale,
+            tol_theta_deg=cfg.gate_theta_deg,
         )
         matched_det = {m[0] for m in matches}
         matched_trk = {m[1] for m in matches}
+        if matches:
+            self.grounded_frames += 1
 
         for det_i, trk_i, _, _ in matches:
             t = self._tracks[trk_i]
@@ -329,18 +359,36 @@ class LaneTracker:
         answers an overloaded frame from the session tracker without
         running detection at all — but only a track that has EARNED the
         coast may back such an answer, by the same rules ``step`` applies
-        to real missed frames: confirmed, mature (``hits >= coast_hits``),
-        and still inside its miss budget after ``steps`` more unobserved
-        frames (``misses + steps <= max_misses``).  A service can
-        therefore never coast a session further than the tracker itself
-        would have survived a real dropout — the coast budget and the
-        blackout budget are one number.
+        to real missed frames: confirmed, mature, and still inside its
+        miss budget after ``steps`` more unobserved frames
+        (``misses + steps <= max_misses``).  A service can therefore
+        never coast a session further than the tracker itself would have
+        survived a real dropout — the coast budget and the blackout
+        budget are one number.
+
+        Maturity is per-track (``hits >= coast_hits``), with a
+        session-level warm-start *fallback*: when no track meets the
+        strict bar but the tracker has been grounded ``warm_frames``
+        frames *ever* (not consecutively), the confirmed tracks qualify
+        anyway — under shed pressure or detection churn no single track
+        may survive long enough to accumulate ``coast_hits``, while the
+        session as a whole has long since proven it sees lanes (see
+        ``TrackerConfig.warm_frames``).  Fallback, not widening: a
+        session with mature tracks answers from exactly those (immature
+        twins never dilute a good coast), so the warm start only engages
+        where the strict bar would have starved the rung entirely.
         """
         cfg = self.cfg
-        return [
+        strict = [
             t for t in self._tracks
             if t.confirmed and t.hits >= cfg.coast_hits
             and t.misses + steps <= cfg.max_misses
+        ]
+        if strict or self.grounded_frames < cfg.warm_frames:
+            return strict
+        return [
+            t for t in self._tracks
+            if t.confirmed and t.misses + steps <= cfg.max_misses
         ]
 
     def can_coast(self, steps: int = 1) -> bool:

@@ -24,6 +24,30 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_replica_mesh(n: int | None = None):
+    """1-D ``("replica",)`` mesh over (up to) ``n`` host devices.
+
+    The detection fleet's mesh: each replica of the sharded
+    :class:`~repro.serve.fleet.ShardedDetectionService` pins its plans
+    and dispatches to one device along this axis.  Testable on a CPU
+    host via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    (set before jax initializes — the device count is frozen at first
+    use, which is why the mesh tests run it in subprocesses).
+    """
+    devs = jax.devices()
+    n = min(n or len(devs), len(devs))
+    return jax.make_mesh((n,), ("replica",))
+
+
+def replica_devices(n: int) -> list:
+    """``n`` device handles for ``n`` service replicas, cycling over the
+    host's real devices when there are fewer — on a 1-device host every
+    replica shares device 0 (the policy layer still shards queues,
+    trackers, and plan caches; only the physical placement collapses)."""
+    devs = jax.devices()
+    return [devs[i % len(devs)] for i in range(n)]
+
+
 def make_host_mesh(*, multi_pod: bool = False, n: int | None = None):
     """Small mesh over however many (host) devices exist — tests/examples.
 

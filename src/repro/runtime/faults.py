@@ -23,6 +23,12 @@ against :class:`repro.serve.detection.DetectionService`:
   * **clock jumps** — ``clock_jump_for_step(k)`` returns seconds to jump
     the service's :class:`VirtualClock` forward before scheduled
     scheduler steps (a large jump expires a whole EDF wave at once).
+  * **replica death** — ``replicas_to_kill(k)`` returns the replica
+    indices scheduled to die before router step ``k`` of a
+    :class:`repro.serve.fleet.ShardedDetectionService`; the router
+    fails the dead replica's in-flight work, re-routes its queue to
+    survivors, and drops its session pins (trackers die with the
+    replica — failover is explicit, never silent).
 
 Every trigger fires exactly once (the ``_fired`` set), so an injected
 fault can never livelock a bounded driver loop, and every schedule is a
@@ -47,6 +53,8 @@ class ServiceFaultInjector:
     corrupt_frame_uids: tuple[int, ...] = () # request uids to NaN-poison
     clock_jump_at_step: tuple[int, ...] = () # scheduler-step ordinals
     clock_jump_s: float = 10.0               # forward jump per trigger
+    # (router step, replica index) pairs: replica dies before that step
+    kill_replica_at: tuple[tuple[int, int], ...] = ()
     _stage_calls: int = 0
     _fired: set = dataclasses.field(default_factory=set)
 
@@ -89,3 +97,14 @@ class ServiceFaultInjector:
         if self._once("clock", k, self.clock_jump_at_step):
             return float(self.clock_jump_s)
         return 0.0
+
+    # -- replicas (fleet router) -----------------------------------------
+    def replicas_to_kill(self, k: int) -> tuple[int, ...]:
+        """Replica indices scheduled to die before router step ``k``
+        (one-shot per (step, replica) pair, like every other trigger)."""
+        out = []
+        for step, replica in self.kill_replica_at:
+            if step == k and self._once("replica", (k, replica),
+                                        ((k, replica),)):
+                out.append(replica)
+        return tuple(out)

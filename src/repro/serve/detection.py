@@ -134,8 +134,8 @@ import jax
 import numpy as np
 
 from repro.core.plan import (
-    DetectionPlan, DetectionResult, PipelineConfig, downshift_frame,
-    load_frame,
+    DetectionPlan, DetectionResult, PipelineConfig, PlanCache,
+    downshift_frame, load_frame,
 )
 from repro.core.tracking import LaneTracker, Track, TrackerConfig
 from repro.runtime.heartbeat import Heartbeat
@@ -767,7 +767,14 @@ class DetectionService:
                  ladder: bool = True,
                  validate_frames: bool = True,
                  faults: Optional[object] = None,
-                 max_stager_restarts: int = 3):
+                 max_stager_restarts: int = 3,
+                 gate_band: Optional[int] = 40,
+                 device: Optional[object] = None):
+        if cfg.hough.theta_band is not None:
+            raise ValueError(
+                "pass the gate width via gate_band=, not through the "
+                "config: the service derives gated plans itself"
+            )
         self.cfg = cfg
         self.batch_size = batch_size
         self.tracker_cfg = tracker
@@ -781,11 +788,17 @@ class DetectionService:
         self.validate_frames = validate_frames
         self.faults = faults
         self.max_stager_restarts = max_stager_restarts
+        self.gate_band = gate_band
+        self.device = device
         self.load_controller = LoadController(self)
+        # one PlanCache per service: a sharded fleet builds one service
+        # per replica, so plans (and the per-dispatch device_put) pin to
+        # that replica's device
+        self.plans = PlanCache(cfg, device=device)
         self.grids = {
             shape: _BucketGrid(
                 shape, batch_size,
-                DetectionPlan.build(cfg, *shape, batch=batch_size),
+                self.plans.plan_for(*shape, batch=batch_size),
                 est_dispatch_s,
             )
             for shape in self.buckets
@@ -801,7 +814,10 @@ class DetectionService:
         self._seq = 0
         self._rr = 0            # round-robin cursor (throughput mode)
         self._steps = 0
-        self._warmed: set[tuple[tuple[int, int], bool]] = set()
+        # (shape, render, theta_band) plan bindings already compiled
+        self._warmed: set[
+            tuple[tuple[int, int], bool, Optional[int]]
+        ] = set()
         self._loader: Optional[PrefetchStager] = None
         self.heartbeats: dict[str, float] = {}   # stager liveness registry
         self.slo: dict[str, SessionSLO] = {}     # per-session accounting
@@ -813,8 +829,10 @@ class DetectionService:
         self.completed_late = 0
         # ladder + fault counters
         self.downshifted = 0          # requests moved to a smaller bucket
+        self.pre_downshifted = 0      # ...of which at admission time
         self.served_downshift = 0     # completed at reduced resolution
         self.served_coast = 0         # answered from tracker prediction
+        self.gated_dispatches = 0     # dispatches under a union theta gate
         self.evicted = 0              # lower-tier evictions (in rejected_*)
         self.rejected_invalid = 0     # NaN/corrupt frames refused
         self.dispatch_faults = 0      # requests failed by dispatch faults
@@ -883,13 +901,21 @@ class DetectionService:
         return sum(len(q) for q in self.queues.values())
 
     # --- request lifecycle ---------------------------------------------
-    def submit(self, req: DetectionRequest) -> RequestStatus:
+    def submit(self, req: DetectionRequest, *,
+               force_bucket: Optional[tuple[int, int]] = None
+               ) -> RequestStatus:
         """Enqueue ``req`` — or reject it with ``QUEUE_FULL`` when the
         bounded admission queue is at capacity (backpressure: the caller
         learns *now*, instead of every queued request learning late).
         With the ladder on, a full queue first tries to evict the worst
         strictly-lower-tier queued request (priority-tiered shedding:
-        tier-0 traffic displaces tier-2, never a peer)."""
+        tier-0 traffic displaces tier-2, never a peer).
+
+        ``force_bucket`` downshifts the request into that (smaller,
+        registered) bucket unconditionally at admission — the
+        speculative-offload local tier (``serve/fleet.py``), whose
+        low-res pass is a downshift *by design*, not a reaction to
+        load."""
         req.bucket = self.bucket_for(req.frame)
         now = self.clock()
         req.submitted_at = now
@@ -901,9 +927,34 @@ class DetectionService:
             req.frame = _nan_poison(req.frame)
         if self.max_queue is not None and self.queued >= self.max_queue:
             if not (self.ladder and self._evict_for(req, now)):
+                # before refusing outright, a session newcomer may still
+                # be answered from its tracker — a degraded answer under
+                # backpressure beats an explicit refusal (same rung
+                # order the queue police applies)
+                if self.ladder and self._try_coast(req, now):
+                    return req.status
                 self._refuse(req, RequestStatus.QUEUE_FULL, now)
                 self.rejected_queue_full += 1
                 return req.status
+        if force_bucket is not None and force_bucket != req.bucket:
+            assert force_bucket in self.buckets, (force_bucket,
+                                                  self.buckets)
+            self._downshift_into(req, force_bucket)
+        # Pre-downshift at admission: when the bucket's measured backlog
+        # already makes this deadline infeasible, rung 1 engages NOW —
+        # queueing at the native bucket first would burn the little slack
+        # the request has left before the queue police notices it is
+        # hopeless (one whole scheduler step later, after which even the
+        # smaller bucket may no longer save it).
+        if (self.ladder and req.deadline_at is not None
+                and req.policy.allow_downshift):
+            grid = self.grids[req.bucket]
+            ahead = grid.active + len(self.queues[req.bucket])
+            if not self.load_controller.feasible(
+                    req.bucket, req.deadline_at, now, ahead):
+                target = self.load_controller.downshift_target(req, now)
+                if target is not None and self._downshift_into(req, target):
+                    self.pre_downshifted += 1
         # Prefetch pays only when staging does real work (luma conversion
         # or taper padding).  A grayscale frame already at bucket shape is
         # a pass-through: shipping it to the worker would add one thread
@@ -913,7 +964,7 @@ class DetectionService:
             req.frame.ndim == 3 or req.frame.shape[:2] != req.bucket
             or req.frame.dtype != np.float32
         )
-        if self.prefetch and needs_staging:
+        if self.prefetch and needs_staging and req._staged is None:
             self._stage_supervised(req)
         self._seq += 1
         key = req.deadline_at if req.deadline_at is not None else math.inf
@@ -956,8 +1007,12 @@ class DetectionService:
         q.remove(entry)
         heapq.heapify(q)
         victim = entry[3]
-        self._refuse(victim, RequestStatus.QUEUE_FULL, now)
-        self.rejected_queue_full += 1   # still a backpressure refusal
+        # the victim leaves the queue either way; a session victim whose
+        # tracker can back a coast gets a degraded answer instead of a
+        # refusal (rung 2 before rung 3, same as the queue police)
+        if not self._try_coast(victim, now):
+            self._refuse(victim, RequestStatus.QUEUE_FULL, now)
+            self.rejected_queue_full += 1   # still a backpressure refusal
         self.evicted += 1
         return True
 
@@ -1088,29 +1143,38 @@ class DetectionService:
             heapq.heapify(q)
 
     # --- the ladder rungs -----------------------------------------------
-    def _try_downshift(self, req: DetectionRequest, now: float) -> bool:
-        """Rung 1: re-stage ``req`` into a smaller bucket where its
-        deadline is feasible.  The frame mean-pools by 2x per halving
+    def _downshift_into(self, req: DetectionRequest,
+                        target: tuple[int, int]) -> bool:
+        """Re-stage ``req`` for the smaller ``target`` bucket (shared by
+        the queue-police rung and the admission-time pre-downshift; the
+        caller enqueues).  The frame mean-pools by 2x per halving
         (host-side, ``core.plan.downshift_frame``) and the result scales
-        back to native coordinates at completion (``upscale_result``) —
-        a lower-fidelity answer in time beats a perfect answer late."""
-        if not self.ladder or not req.policy.allow_downshift:
-            return False
-        target = self.load_controller.downshift_target(req, now)
-        if target is None:
-            return False
+        back to native coordinates at completion (``upscale_result``).
+        Staging is synchronous, now: the downshift exists to make an
+        imminent deadline, so the pooled pad must be slot-ready the
+        moment the target grid admits (host work, same cost class as the
+        synchronous staging path)."""
         img, factor = downshift_frame(req.frame, target)
         if factor <= req.downshift:
             return False   # no actual resolution drop: nothing gained
-        # stage synchronously, now: the downshift exists to make an
-        # imminent deadline, so the pooled pad must be slot-ready the
-        # moment the target grid admits (host work, same cost class as
-        # the synchronous staging path)
         req._staged = pad_to_bucket(img, target)
         req._ds_shape = img.shape
         req.downshift = factor
         req.bucket = target
         self.downshifted += 1
+        return True
+
+    def _try_downshift(self, req: DetectionRequest, now: float) -> bool:
+        """Rung 1: re-stage ``req`` into a smaller bucket where its
+        deadline is feasible — a lower-fidelity answer in time beats a
+        perfect answer late."""
+        if not self.ladder or not req.policy.allow_downshift:
+            return False
+        target = self.load_controller.downshift_target(req, now)
+        if target is None:
+            return False
+        if not self._downshift_into(req, target):
+            return False
         self._seq += 1
         key = req.deadline_at if req.deadline_at is not None else math.inf
         heapq.heappush(
@@ -1304,10 +1368,15 @@ class DetectionService:
                     self.sessions[req.session_id] = tracker
                 # slot order == admission order, and one batch is in
                 # flight per grid, so a session's frames advance its
-                # tracker in stream order (see DetectionRequest docstring)
+                # tracker in stream order (see DetectionRequest docstring).
+                # scale= widens the rho association gate for downshifted
+                # frames: the upscaled coarse detections must re-ground
+                # the existing tracks, not birth quantized twins —
+                # tracker state persists across resolution downshifts
                 req.tracks = tracker.step(
                     np.asarray(req.result.peaks),
                     np.asarray(req.result.valid),
+                    scale=req.downshift,
                 )
                 # a real frame re-grounds the tracker: the coast budget
                 # resets (see _try_coast)
@@ -1323,6 +1392,46 @@ class DetectionService:
                 if req.session_id is not None:
                     self._slo(req.session_id).late += 1
             self.completed += 1
+
+    # --- union theta gate -----------------------------------------------
+    def _union_gate(self, grid: _BucketGrid) -> Optional[np.ndarray]:
+        """Union theta-band gate for one dispatched grid, or None (full
+        sweep).
+
+        The single-session ``TrackingPipeline`` realizes the 1.59x
+        prediction-gated speedup; batching frames whose gates differ
+        needs the *union* of the member sessions' bands.  Gating engages
+        only when EVERY occupied slot is covered — each request belongs
+        to a session whose tracker is healthy (``gate_bins`` non-None:
+        confirmed tracks, none coasting, no open rescan window) — and
+        the union fits the static ``gate_band`` budget; otherwise the
+        grid full-sweeps, so gating is never a correctness dependence
+        (same fallback contract as the pipeline path).  At full
+        coverage the gated result is bit-exact with the full sweep
+        (tested): theta is scale-invariant, so downshifted members gate
+        identically.
+        """
+        if self.gate_band is None:
+            return None
+        n_theta = self.cfg.hough.n_theta
+        bins: set[int] = set()
+        for req in grid.slots:
+            if req is None:
+                continue
+            if req.session_id is None:
+                return None
+            tracker = self.sessions.get(req.session_id)
+            if tracker is None:
+                return None
+            b = tracker.gate_bins(n_theta)
+            if b is None:
+                return None
+            bins.update(int(x) for x in b)
+        if not bins or len(bins) > self.gate_band:
+            return None           # empty grid or band-budget overflow
+        out = sorted(bins)
+        out += [out[0]] * (self.gate_band - len(out))
+        return np.asarray(out, np.int32)
 
     # --- scheduling -----------------------------------------------------
     def _deadline_mode(self) -> bool:
@@ -1422,6 +1531,9 @@ class DetectionService:
             r is not None and r.render_output for r in grid.slots
         )
         plan = grid.plan.with_render(True) if want_render else grid.plan
+        theta_bins = self._union_gate(grid)
+        if theta_bins is not None:
+            plan = plan.with_theta_band(self.gate_band)
         reqs = list(grid.slots)
         if self.faults is not None and self.faults.fails_dispatch(
                 self.dispatches):
@@ -1440,20 +1552,23 @@ class DetectionService:
             grid.slots = [None] * self.batch_size
             grid.staged = np.zeros_like(grid.staged)
             return True
-        imgs = jax.device_put(grid.staged)
-        warm_key = (grid.shape, plan.cfg.render_output)
+        imgs = self.plans.put(grid.staged)
+        warm_key = (grid.shape, plan.cfg.render_output,
+                    plan.cfg.hough.theta_band)
         was_warm = warm_key in self._warmed
         if was_warm:
             with jax.transfer_guard("disallow"):
-                res = plan.run(imgs)            # async dispatch of batch k
+                res = plan.run(imgs, theta_bins)  # async dispatch, batch k
         else:
             # a compile takes seconds: retire the previous batch BEFORE it,
             # so the blocking-path EMA sample below cannot absorb compile
             # time (there is no overlap to preserve during a compile), and
             # est_s cannot inflate into shedding feasible traffic
             self._complete(grid)
-            res = plan.run(imgs)                # first call compiles
+            res = plan.run(imgs, theta_bins)      # first call compiles
             self._warmed.add(warm_key)
+        if theta_bins is not None:
+            self.gated_dispatches += 1
         # device_put may alias (zero-copy) a numpy buffer on CPU backends:
         # hand the old buffer to the in-flight batch and stage the next
         # wave into a fresh one rather than mutating shared memory.  Only

@@ -1,0 +1,486 @@
+"""Sharded detection fleet: multi-replica dispatch with session affinity.
+
+The paper's premise is that one general-purpose core cannot meet AV
+real-time requirements alone; ``DetectionService`` scaled the stack to
+one device, this module scales it past one.  A
+:class:`ShardedDetectionService` fronts N :class:`DetectionService`
+replicas, each pinned to its own jax device (``launch.mesh`` — on this
+host an 8-device CPU mesh via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) with its own
+:class:`~repro.core.plan.PlanCache`, admission queues, service-time
+EMAs, and session trackers:
+
+  * **Replica-aware routing** — a sessionless request routes to the
+    replica with the shortest projected completion horizon for its
+    bucket (per-replica queue depth x per-replica per-bucket EMA — the
+    same ``LoadController`` arithmetic each replica's admission police
+    uses, so the router and the ladder agree about what "busy" means),
+    ties broken by total queue depth then index.
+  * **Session affinity** — sessions carry tracker state (PR 5): a
+    session request pins to the replica holding its tracker, because a
+    tracker split across replicas is two half-blind trackers (each sees
+    every other frame, coasts constantly, and births twin tracks).
+    ``affinity=False`` disables pinning (the benchmark's ablation arm);
+    ``migrate_session`` moves the tracker + SLO + coast budget to
+    another replica explicitly — affinity is a routing *invariant*, not
+    a cage.
+  * **Replica death + failover** — ``runtime.faults`` schedules
+    ``kill_replica_at`` (step, replica) pairs: the dead replica's
+    in-flight and slotted work fails explicitly (``FAILED`` — the
+    batch died with the device), its queue re-routes to survivors with
+    original deadlines preserved, and its session pins drop (the
+    tracker died with it; the next frame re-pins wherever routing
+    lands and rebuilds — the warm-start coast rule shortens the blind
+    window).  Nothing hangs; every request still terminates.
+  * **Speculative local/remote offload** (Schafhalter et al.,
+    PAPERS.md; policy in ``core.offload``) — ``submit_speculative``
+    races a fast low-res *local* pass (forced downshift on the local
+    replica: the deadline guarantee) against a full-res *remote* pass
+    on a designated replica behind a modeled network
+    (``SpeculativeConfig.rtt_s`` charged on the response); the remote
+    answer upgrades the local one iff it is in hand by the deadline.
+    On the shared :class:`VirtualClock` the race is a pure function of
+    the schedule — deterministic to test, like every other policy here.
+
+``benchmarks/mesh_suite.py`` drives the scaling curve (1 -> 8 replicas
+at equal offered load), the affinity ablation, and the offload race and
+writes ``BENCH_mesh.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.offload import RaceDecision, SpeculativeConfig, decide_race
+from repro.core.plan import PipelineConfig
+from repro.core.tracking import Track
+from repro.launch.mesh import replica_devices
+from repro.serve.detection import (
+    SHED_ONLY, DegradationPolicy, DetectionRequest, DetectionService,
+    RequestStatus, SessionSLO,
+)
+
+
+@dataclasses.dataclass
+class _Replica:
+    index: int
+    service: DetectionService
+    alive: bool = True
+
+
+@dataclasses.dataclass
+class SpeculativeTicket:
+    """One speculative race in flight: the caller's request plus its two
+    racing clones (resolved by ``resolve_speculative`` / ``run``)."""
+    request: DetectionRequest
+    local: DetectionRequest
+    remote: DetectionRequest
+    decision: Optional[RaceDecision] = None
+
+    @property
+    def resolved(self) -> bool:
+        return self.decision is not None
+
+
+class ShardedDetectionService:
+    """N ``DetectionService`` replicas behind one routing front.
+
+    Every replica keeps the full single-device contract (bounded
+    admission, priority-major/EDF, degradation ladder, fault injection,
+    session streaming); this class only decides *which* replica each
+    request reaches — and proves the decisions (affinity, failover, the
+    speculative race) deterministically on the shared clock.
+
+    ``devices`` defaults to ``launch.mesh.replica_devices(n_replicas)``:
+    one device per replica when the host has them (the
+    ``--xla_force_host_platform_device_count`` mesh), cycling otherwise.
+    ``faults`` here is the *router's* injector (``kill_replica_at``);
+    per-replica service faults belong to the replicas' own injectors.
+    """
+
+    def __init__(self, cfg: PipelineConfig = PipelineConfig(), *,
+                 n_replicas: int = 2,
+                 devices: Optional[Sequence] = None,
+                 clock: Callable[[], float] = time.perf_counter,
+                 affinity: bool = True,
+                 speculative: Optional[SpeculativeConfig] = None,
+                 remote_replica: Optional[int] = None,
+                 faults: Optional[object] = None,
+                 **svc_kw):
+        assert n_replicas >= 1
+        if devices is None:
+            devices = replica_devices(n_replicas)
+        assert len(devices) == n_replicas, (len(devices), n_replicas)
+        self.cfg = cfg
+        self.clock = clock
+        self.affinity = affinity
+        self.speculative = speculative
+        self.remote_replica = (
+            remote_replica if remote_replica is not None else n_replicas - 1
+        )
+        self.faults = faults
+        self.replicas = [
+            _Replica(i, DetectionService(
+                cfg, clock=clock, device=devices[i], **svc_kw,
+            ))
+            for i in range(n_replicas)
+        ]
+        self._session_replica: dict[str, int] = {}
+        self._tickets: list[SpeculativeTicket] = []
+        self._steps = 0
+        # routing + failover + race counters
+        self.routed = 0
+        self.session_migrations = 0    # saturated pins moved explicitly
+        self.session_failovers = 0     # pins dropped by a replica death
+        self.requeued = 0              # queued work re-routed off a corpse
+        self.failed_on_death = 0       # in-flight/slotted work that died
+        self.speculative_races = 0
+        self.speculative_upgrades = 0
+
+    # --- introspection --------------------------------------------------
+    @property
+    def alive_replicas(self) -> list[_Replica]:
+        return [r for r in self.replicas if r.alive]
+
+    @property
+    def dispatches(self) -> int:
+        return sum(r.service.dispatches for r in self.replicas)
+
+    @property
+    def gated_dispatches(self) -> int:
+        return sum(r.service.gated_dispatches for r in self.replicas)
+
+    def session_location(self, session_id: str) -> Optional[int]:
+        """Replica index the session is pinned to (None if unpinned)."""
+        return self._session_replica.get(session_id)
+
+    def session_tracks(self, session_id: str) -> list[Track]:
+        i = self._session_replica.get(session_id)
+        if i is not None:
+            return self.replicas[i].service.session_tracks(session_id)
+        for r in self.replicas:
+            ts = r.service.session_tracks(session_id)
+            if ts:
+                return ts
+        return []
+
+    def session_slo(self, session_id: str) -> SessionSLO:
+        """Aggregated SLO across every replica the session touched
+        (affinity keeps that to one; the ablation arm and failover
+        don't)."""
+        total = SessionSLO()
+        for r in self.replicas:
+            s = r.service.slo.get(session_id)
+            if s is None:
+                continue
+            for f in dataclasses.fields(SessionSLO):
+                setattr(total, f.name,
+                        getattr(total, f.name) + getattr(s, f.name))
+        return total
+
+    # --- routing --------------------------------------------------------
+    def _route_cost(self, rep: _Replica, shape: tuple[int, int]
+                    ) -> tuple[float, int, int]:
+        svc = rep.service
+        grid = svc.grids[shape]
+        ahead = grid.active + len(svc.queues[shape])
+        horizon = svc.load_controller.horizon_s(shape, ahead)
+        return (horizon, svc.queued, rep.index)
+
+    def _route(self, req: DetectionRequest) -> int:
+        """Pick a replica: affinity pin first, else the shortest
+        projected completion horizon for the request's bucket."""
+        alive = self.alive_replicas
+        if not alive:
+            raise RuntimeError("no live replicas")
+        sid = req.session_id
+        if sid is not None and self.affinity:
+            pinned = self._session_replica.get(sid)
+            if pinned is not None:
+                if self.replicas[pinned].alive:
+                    target = self._maybe_migrate(req, pinned)
+                    return pinned if target is None else target
+                # the pinned replica died: the tracker is gone, so the
+                # stream re-pins wherever routing sends it (explicitly
+                # accounted — a failover, not silent drift)
+                del self._session_replica[sid]
+                self.session_failovers += 1
+        shape = alive[0].service.bucket_for(req.frame)
+        best = min(alive, key=lambda r: self._route_cost(r, shape))
+        if sid is not None and self.affinity:
+            self._session_replica[sid] = best.index
+        return best.index
+
+    def _maybe_migrate(self, req: DetectionRequest,
+                       pinned: int) -> Optional[int]:
+        """Explicit migration escape hatch for a saturated pin.
+
+        Affinity is an invariant about *where the tracker lives*, not a
+        cage: when the pinned replica's measured backlog makes this
+        request's deadline infeasible and another replica could still
+        meet it, the SESSION moves there — tracker, SLO, coast budget —
+        via :meth:`migrate_session`, so the stream stays whole on the
+        new replica instead of missing deadlines on the old one.
+        Returns the new replica index, or None (keep the pin).
+        """
+        if req.deadline_s is None:
+            return None
+        svc = self.replicas[pinned].service
+        shape = svc.bucket_for(req.frame)
+        now = self.clock()
+        deadline_at = now + req.deadline_s
+        grid = svc.grids[shape]
+        ahead = grid.active + len(svc.queues[shape])
+        if svc.load_controller.feasible(shape, deadline_at, now, ahead):
+            return None
+        best = min(self.alive_replicas,
+                   key=lambda r: self._route_cost(r, shape))
+        if best.index == pinned:
+            return None
+        b = best.service
+        b_ahead = (b.grids[shape].active + len(b.queues[shape]))
+        if not b.load_controller.feasible(shape, deadline_at, now,
+                                          b_ahead):
+            return None             # nowhere better: the ladder's problem
+        self.migrate_session(req.session_id, best.index)
+        self.session_migrations += 1
+        return best.index
+
+    def submit(self, req: DetectionRequest) -> RequestStatus:
+        status = self.replicas[self._route(req)].service.submit(req)
+        self.routed += 1
+        return status
+
+    def migrate_session(self, session_id: str, to_replica: int) -> bool:
+        """Explicitly move a session's tracker + SLO + coast budget to
+        ``to_replica`` (the sanctioned way to rebalance a pinned stream;
+        returns False if the session has no state anywhere or the target
+        is dead).  The tracker object moves — stream continuity (track
+        ids, hit counts, the warm-start grounding) survives the hop."""
+        if not self.replicas[to_replica].alive:
+            return False
+        src = self._session_replica.get(session_id)
+        if src is None:
+            src = next(
+                (r.index for r in self.replicas
+                 if session_id in r.service.sessions), None,
+            )
+        if src is None:
+            return False
+        if src != to_replica:
+            s_svc = self.replicas[src].service
+            d_svc = self.replicas[to_replica].service
+            tracker = s_svc.sessions.pop(session_id, None)
+            if tracker is not None:
+                d_svc.sessions[session_id] = tracker
+            slo = s_svc.slo.pop(session_id, None)
+            if slo is not None:
+                # merge, not overwrite: the target may have history from
+                # a pre-affinity or failover era
+                d = d_svc._slo(session_id)
+                for f in dataclasses.fields(SessionSLO):
+                    setattr(d, f.name,
+                            getattr(d, f.name) + getattr(slo, f.name))
+            coasts = s_svc._session_coasts.pop(session_id, None)
+            if coasts is not None:
+                d_svc._session_coasts[session_id] = coasts
+        self._session_replica[session_id] = to_replica
+        return True
+
+    # --- replica death + failover ---------------------------------------
+    def kill_replica(self, index: int) -> None:
+        """Kill one replica: in-flight and slotted work dies with the
+        device (``FAILED``), queued work re-routes to survivors with its
+        original deadlines, session pins drop (trackers are gone)."""
+        rep = self.replicas[index]
+        if not rep.alive:
+            return
+        rep.alive = False
+        svc = rep.service
+        now = svc.clock()
+        victims: list[DetectionRequest] = []
+        for g in svc.grids.values():
+            if g.in_flight is not None:
+                victims += [r for r in g.in_flight[0] if r is not None]
+                g.in_flight = None
+            victims += [r for r in g.slots if r is not None]
+            g.slots = [None] * len(g.slots)
+            g.staged = np.zeros_like(g.staged)
+        for r in victims:
+            if not r.is_terminal:
+                svc._refuse(r, RequestStatus.FAILED, now)
+                self.failed_on_death += 1
+        requeue: list[DetectionRequest] = []
+        for q in svc.queues.values():
+            requeue += [entry[3] for entry in q]
+            q.clear()
+        svc.close()
+        survivors = {
+            s: r for s, r in self._session_replica.items() if r != index
+        }
+        self.session_failovers += (
+            len(self._session_replica) - len(survivors)
+        )
+        self._session_replica = survivors
+        # re-route in arrival order (the seq was part of the heap key)
+        for req in sorted(requeue, key=lambda r: r.submitted_at):
+            self._resubmit(req)
+
+    def _resubmit(self, req: DetectionRequest) -> None:
+        """Re-route one queued request off a dead replica, preserving
+        its original submit stamp and ABSOLUTE deadline (the failover
+        must not hand it a fresh budget)."""
+        sub, dl = req.submitted_at, req.deadline_at
+        req._staged = None
+        req._ds_shape = None
+        req.downshift = 1
+        req.bucket = None
+        try:
+            target = self._route(req)
+        except RuntimeError:
+            req.status = RequestStatus.FAILED
+            req.finished_at = sub
+            return
+        svc = self.replicas[target].service
+        svc.submit(req)
+        req.submitted_at, req.deadline_at = sub, dl
+        if req.session_id is not None:
+            # submit() charged the stream a second arrival; the frame
+            # was offered once — undo the double count
+            svc._slo(req.session_id).submitted -= 1
+        self.requeued += 1
+
+    # --- speculative offload (local/remote race) ------------------------
+    def submit_speculative(self, req: DetectionRequest
+                           ) -> SpeculativeTicket:
+        """Race a low-res local pass against a full-res remote pass.
+
+        The *local* clone force-downshifts into
+        ``SpeculativeConfig.local_shape`` (default: the smallest
+        registered bucket) on the best non-remote replica — small enough
+        that its answer always lands inside the deadline (the
+        guarantee).  The *remote* clone runs full-res, shed-only (a
+        degraded remote answer is pointless: the local tier already
+        covers degraded) on the designated remote replica; the modeled
+        network charges ``rtt_s`` on its response.  ``run`` (or an
+        explicit ``resolve_speculative``) applies
+        :func:`repro.core.offload.decide_race` and stamps the winner
+        onto ``req``.  Clones are sessionless by construction — a
+        tracker must see ONE stream, not a race's two interleaved
+        copies.
+        """
+        if self.speculative is None:
+            raise ValueError("no SpeculativeConfig on this service")
+        spec = self.speculative
+        alive = self.alive_replicas
+        if not alive:
+            raise RuntimeError("no live replicas")
+        remote_rep = self.replicas[self.remote_replica]
+        locals_ = [r for r in alive if r.index != self.remote_replica]
+        local_rep = locals_[0] if locals_ else alive[0]
+        if len(locals_) > 1:
+            shape = local_rep.service.bucket_for(req.frame)
+            local_rep = min(
+                locals_, key=lambda r: self._route_cost(r, shape),
+            )
+        buckets = local_rep.service.buckets
+        local_shape = spec.local_shape or buckets[0]
+        local = DetectionRequest(
+            uid=req.uid, frame=req.frame, deadline_s=req.deadline_s,
+            priority=req.priority, render_output=req.render_output,
+            policy=DegradationPolicy(allow_coast=False),
+        )
+        remote = DetectionRequest(
+            uid=req.uid, frame=req.frame, deadline_s=req.deadline_s,
+            priority=req.priority, render_output=req.render_output,
+            policy=SHED_ONLY,
+        )
+        local_rep.service.submit(local, force_bucket=local_shape)
+        if remote_rep.alive:
+            remote_rep.service.submit(remote)
+        else:
+            remote.status = RequestStatus.FAILED
+            remote.finished_at = self.clock()
+        ticket = SpeculativeTicket(req, local, remote)
+        self._tickets.append(ticket)
+        self.speculative_races += 1
+        return ticket
+
+    def resolve_speculative(self, ticket: SpeculativeTicket
+                            ) -> Optional[RaceDecision]:
+        """Apply the race policy once both clones are terminal; stamps
+        the winning answer onto the caller's request.  Returns None
+        while either side is still pending."""
+        if ticket.resolved:
+            return ticket.decision
+        local, remote, req = ticket.local, ticket.remote, ticket.request
+        if not (local.is_terminal and remote.is_terminal):
+            return None
+        decision = decide_race(
+            local.finished_at,
+            remote.finished_at if remote.ok else None,
+            local.deadline_at,
+            rtt_s=self.speculative.rtt_s,
+        )
+        win = remote if decision.upgraded else local
+        req.result = win.result
+        req.status = win.status
+        req.bucket = win.bucket
+        req.downshift = win.downshift
+        req.submitted_at = local.submitted_at
+        req.deadline_at = local.deadline_at
+        req.finished_at = (
+            decision.remote_ready_at if decision.upgraded
+            else local.finished_at
+        )
+        if decision.upgraded:
+            self.speculative_upgrades += 1
+        ticket.decision = decision
+        return decision
+
+    # --- scheduling -----------------------------------------------------
+    def step(self, *, flush: bool = False) -> bool:
+        """One router step: injected replica deaths fire first, then
+        every live replica takes one scheduler step.  Returns True while
+        any replica still has work."""
+        k = self._steps
+        self._steps += 1
+        if self.faults is not None:
+            for victim in self.faults.replicas_to_kill(k):
+                self.kill_replica(victim)
+        busy = False
+        for rep in self.replicas:
+            if rep.alive:
+                busy = rep.service.step(flush=flush) or busy
+        return busy
+
+    def run(self, max_steps: int = 10_000) -> None:
+        """Drive every replica until the fleet drains, then resolve any
+        open speculative tickets."""
+        while max_steps > 0:
+            busy = self.step(flush=True)
+            pending = any(
+                g.active or g.in_flight is not None
+                for rep in self.alive_replicas
+                for g in rep.service.grids.values()
+            )
+            queued = any(r.service.queued for r in self.alive_replicas)
+            if not busy and not pending and not queued:
+                break
+            max_steps -= 1
+        for t in self._tickets:
+            self.resolve_speculative(t)
+
+    def close(self) -> None:
+        for rep in self.replicas:
+            rep.service.close()
+
+    def __enter__(self) -> "ShardedDetectionService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

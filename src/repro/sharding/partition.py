@@ -310,6 +310,37 @@ def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
     )
 
 
+# --- detection fleet (replica mesh) -----------------------------------------
+
+# The detection service's slot grids are (slots, H, W) batches: the only
+# shardable axis is the slot axis, over the 1-D ("replica",) mesh of
+# launch.mesh.make_replica_mesh — rows/columns stay whole (the Canny halo
+# and the Hough vote read whole frames).
+DETECTION_RULES: AxisRules = {
+    "slots": ("replica", None),
+    "row": (None,),
+    "col": (None,),
+}
+
+
+def slot_sharding(mesh: Mesh, n_slots: int) -> NamedSharding:
+    """NamedSharding splitting a (slots, H, W) grid's slot axis over the
+    replica mesh (replicated fallback when slots don't divide it)."""
+    return named_sharding(
+        ("slots", "row", "col"), (n_slots, 1, 1), mesh, DETECTION_RULES,
+    )
+
+
+def shard_slots(batch, mesh: Mesh):
+    """Place a host-side (slots, H, W) batch slot-sharded on ``mesh`` —
+    the one explicit transfer of an SPMD detection dispatch (each device
+    holds ``slots / n_replica`` frames; the frame-independent kernels
+    then run without any cross-replica collective)."""
+    import numpy as np
+    arr = np.asarray(batch)
+    return jax.device_put(arr, slot_sharding(mesh, arr.shape[0]))
+
+
 def rules_for_shape(shape_kind: str) -> AxisRules:
     """Pick the rule table for a workload shape class.
 

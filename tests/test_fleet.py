@@ -540,3 +540,203 @@ def test_predict_tracks_matches_real_coast_and_does_not_mutate():
         assert p.misses == c.misses
     # beyond the miss budget the coast refuses
     assert tr.predict_tracks(cfg.max_misses + 1) == []
+
+
+# --- union theta-band gated dispatch (PR 7) ---------------------------------
+
+
+def _stream_cycle(svc, clock, *, session="ego", n=14, uid0=0):
+    """Drive one session through a drive cycle, one frame per dispatch."""
+    from repro.data import make_drive_cycle
+    cycle = make_drive_cycle("straight", n, 120, 160, seed=0)
+    reqs = []
+    for fr in cycle.frames:
+        req = DetectionRequest(uid=uid0 + fr.t, frame=fr.scene.image,
+                               session_id=session)
+        svc.submit(req)
+        svc.run()
+        clock.advance(0.01)
+        reqs.append(req)
+    return reqs
+
+
+def test_union_gate_bitexact_with_full_sweep():
+    """At full coverage the gated dispatch is bit-exact with the full
+    sweep — the gate is a speedup, never a correctness dependence."""
+    clock_g, clock_f = VirtualClock(), VirtualClock()
+    gated = make_svc(clock=clock_g)                  # gate_band=40 default
+    full = make_svc(clock=clock_f, gate_band=None)
+    got = _stream_cycle(gated, clock_g)
+    ref = _stream_cycle(full, clock_f)
+    # the session confirms within a few frames; after that every
+    # single-slot grid is fully covered and the gate engages
+    assert gated.gated_dispatches > 0
+    assert full.gated_dispatches == 0
+    for g, f in zip(got, ref):
+        assert g.ok and f.ok
+        np.testing.assert_array_equal(np.asarray(g.result.peaks),
+                                      np.asarray(f.result.peaks))
+        np.testing.assert_array_equal(np.asarray(g.result.lines),
+                                      np.asarray(f.result.lines))
+        np.testing.assert_array_equal(np.asarray(g.result.valid),
+                                      np.asarray(f.result.valid))
+    gated.close()
+    full.close()
+
+
+def test_union_gate_requires_every_slot_covered():
+    """A grid with any sessionless (or tracker-less) slot full-sweeps:
+    gating is all-or-nothing per dispatch."""
+    clock = VirtualClock()
+    svc = make_svc(clock=clock, batch_size=2)
+    # warm the session's tracker to gating health on single-slot grids
+    for t in range(6):
+        svc.submit(DetectionRequest(uid=t, frame=_frame(120, 160, seed=0),
+                                    session_id="ego"))
+        svc.submit(DetectionRequest(uid=100 + t,
+                                    frame=_frame(120, 160, seed=0),
+                                    session_id="ego"))
+        svc.run()
+        clock.advance(0.01)
+    assert svc.sessions["ego"].gate_bins(svc.cfg.hough.n_theta) is not None
+    before = svc.gated_dispatches
+    # mixed grid: one session slot + one sessionless slot -> full sweep
+    a = DetectionRequest(uid=200, frame=_frame(120, 160, seed=0),
+                         session_id="ego")
+    b = DetectionRequest(uid=201, frame=_frame(120, 160, seed=1))
+    svc.submit(a)
+    svc.submit(b)
+    svc.run()
+    assert a.ok and b.ok
+    assert svc.gated_dispatches == before
+    svc.close()
+
+
+def test_union_gate_engages_on_covered_multisession_grid():
+    clock = VirtualClock()
+    svc = make_svc(clock=clock, batch_size=2)
+    for t in range(6):
+        for s, base in (("a", 0), ("b", 0)):
+            svc.submit(DetectionRequest(
+                uid=t * 10 + base + (0 if s == "a" else 1),
+                frame=_frame(120, 160, seed=0), session_id=s))
+        svc.run()
+        clock.advance(0.01)
+    assert svc.gated_dispatches > 0
+    svc.close()
+
+
+# --- coast starvation fix: warm-start + downshift persistence (PR 7) --------
+
+
+def test_warm_start_coastable_fallback_semantics():
+    """``coastable_tracks`` falls back to confirmed-but-young tracks only
+    for a session that has EVER been grounded ``warm_frames`` times; the
+    strict per-track bar still wins whenever it is met."""
+    cfg = TrackerConfig()
+    peaks = np.array([[40.0, 0.3]], np.float32)
+    # cold tracker: confirmed but young track, no grounding history
+    cold = LaneTracker(cfg)
+    for _ in range(cfg.confirm_hits + 1):
+        cold.step(peaks)
+    assert cold.grounded_frames < cfg.warm_frames
+    young = cold._tracks[0]
+    assert young.confirmed and young.hits < cfg.coast_hits
+    assert cold.coastable_tracks(1) == []            # starved, correctly
+    # warm tracker: same young track state, but the SESSION is grounded
+    warm = LaneTracker(cfg)
+    for _ in range(cfg.warm_frames + 1):   # birth frame doesn't ground
+        warm.step(peaks)
+    assert warm.grounded_frames >= cfg.warm_frames
+    warm._tracks[0].hits = cfg.coast_hits - 1        # re-born young track
+    assert warm.coastable_tracks(1) != []            # warm start engages
+    # strict bar preferred when any track meets it
+    warm._tracks[0].hits = cfg.coast_hits
+    assert [t.hits for t in warm.coastable_tracks(1)] == [cfg.coast_hits]
+
+
+def test_tracker_step_scale_widens_rho_gate():
+    """A downshifted frame's peaks carry ~factor x the rho quantization;
+    ``step(scale=factor)`` widens the match gate so the track stays
+    grounded instead of forking a twin."""
+    cfg = TrackerConfig()
+    tr = LaneTracker(cfg)
+    peaks = np.array([[40.0, 0.3]], np.float32)
+    for _ in range(3):
+        tr.step(peaks)
+    off = np.array([[40.0 + cfg.gate_rho * 1.5, 0.3]], np.float32)
+    twin = LaneTracker(cfg)
+    for _ in range(3):
+        twin.step(peaks)
+    tr.step(off)                     # native scale: outside the gate
+    twin.step(off, scale=2.0)        # downshifted: gate widened 2x
+    assert len(tr._tracks) == 2      # forked a twin track
+    assert len(twin._tracks) == 1    # stayed grounded
+    assert twin._tracks[0].hits == 4
+
+
+def test_downshifted_stream_still_earns_coast():
+    """The starvation fix end-to-end: a session served ONLY downshifted
+    frames still accrues warm-start grounding, so a blackout frame gets a
+    coast answer instead of a refusal."""
+    clock = VirtualClock()
+    svc = make_svc(clock=clock, validate_frames=True)
+    cfg = svc.tracker_cfg
+    for t in range(cfg.warm_frames + 2):
+        req = DetectionRequest(uid=t, frame=_frame(120, 160, seed=0),
+                               session_id="ego")
+        svc.submit(req, force_bucket=(96, 128))
+        svc.run()
+        clock.advance(0.01)
+        assert req.status is RequestStatus.DEGRADED_DOWNSHIFT
+    tracker = svc.sessions["ego"]
+    assert tracker.grounded_frames >= cfg.warm_frames
+    assert tracker.coastable_tracks(1) != []
+    bad = DetectionRequest(uid=99,
+                           frame=np.full((120, 160), np.nan, np.float32),
+                           session_id="ego")
+    svc.submit(bad)
+    svc.run()
+    assert bad.status is RequestStatus.DEGRADED_COAST
+    assert svc.slo["ego"].served_coast == 1
+    svc.close()
+
+
+# --- pre-downshift at admission (PR 7) --------------------------------------
+
+
+def test_pre_downshift_engages_at_admission():
+    """When the native bucket's measured backlog already makes the
+    deadline infeasible at SUBMIT time, rung 1 fires immediately —
+    the request never burns slack queueing at the doomed bucket."""
+    clock = VirtualClock()
+    svc = make_svc(clock=clock)
+    _ground_estimate(svc, clock, (120, 160), 0.30, uid0=900)
+    _ground_estimate(svc, clock, (96, 128), 0.01, uid0=910)
+    # a wave ahead of us at the big bucket: deadline 0.15 < est 0.30
+    blocker = DetectionRequest(uid=0, frame=_frame(120, 160, seed=0))
+    svc.submit(blocker)
+    req = DetectionRequest(uid=1, frame=_frame(120, 160, seed=1),
+                           deadline_s=0.15)
+    svc.submit(req)
+    # downgraded at admission, before any scheduler step ran
+    assert svc.pre_downshifted == 1
+    assert req.bucket == (96, 128) and req.downshift == 2
+    svc.run()
+    assert req.status is RequestStatus.DEGRADED_DOWNSHIFT
+    assert req.finished_at <= req.deadline_at
+    svc.close()
+
+
+def test_pre_downshift_skipped_when_feasible():
+    clock = VirtualClock()
+    svc = make_svc(clock=clock)
+    _ground_estimate(svc, clock, (120, 160), 0.01, uid0=900)
+    req = DetectionRequest(uid=0, frame=_frame(120, 160, seed=0),
+                           deadline_s=1.0)
+    svc.submit(req)
+    assert svc.pre_downshifted == 0
+    assert req.bucket == (120, 160)
+    svc.run()
+    assert req.ok
+    svc.close()

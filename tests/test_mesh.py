@@ -1,0 +1,427 @@
+"""Sharded detection fleet: routing, affinity, failover, speculation.
+
+Every in-process test drives a :class:`ShardedDetectionService` of
+single-device replicas on one shared :class:`VirtualClock` — routing,
+affinity, replica death, and the speculative local/remote race are all
+*policy*, so one device proves them deterministically.  The one
+multi-device scenario (real 8-device placement of the slot shards and
+per-replica plan caches) runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``, same isolation
+pattern as ``test_distributed.py``.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.plan import HoughConfig, PipelineConfig
+from repro.core.offload import SpeculativeConfig
+from repro.data import make_drive_cycle, make_scenario
+from repro.runtime import ServiceFaultInjector
+from repro.serve.detection import (
+    DetectionRequest, RequestStatus, VirtualClock,
+)
+from repro.serve.fleet import ShardedDetectionService
+
+pytestmark = pytest.mark.mesh
+
+BUCKETS = ((96, 128), (120, 160))
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _cfg() -> PipelineConfig:
+    return PipelineConfig(hough=HoughConfig(compact=True, max_edges="auto"))
+
+
+def make_fleet(n: int = 2, **kw) -> ShardedDetectionService:
+    kw.setdefault("buckets", BUCKETS)
+    kw.setdefault("batch_size", 1)
+    kw.setdefault("clock", VirtualClock())
+    kw.setdefault("prefetch", False)
+    return ShardedDetectionService(_cfg(), n_replicas=n, **kw)
+
+
+def _frame(h: int = 120, w: int = 160, seed: int = 0) -> np.ndarray:
+    return make_scenario("straight", h, w, seed=seed).image
+
+
+# --- routing + affinity -------------------------------------------------
+
+def test_sessionless_load_spreads_across_replicas():
+    svc = make_fleet(3)
+    reqs = [DetectionRequest(uid=i, frame=_frame(seed=i)) for i in range(6)]
+    for r in reqs:
+        svc.submit(r)
+    svc.run()
+    assert all(r.ok for r in reqs)
+    per_replica = [rep.service.dispatches for rep in svc.replicas]
+    # queue-depth tiebreak: 6 requests over 3 idle replicas -> 2 each
+    assert per_replica == [2, 2, 2]
+    svc.close()
+
+
+def test_session_affinity_pins_one_replica():
+    svc = make_fleet(3)
+    reqs = []
+    for t in range(9):
+        # interleave sessionless filler so the least-loaded replica keeps
+        # changing — only the pin can keep the stream together
+        filler = DetectionRequest(uid=100 + t, frame=_frame(seed=t))
+        req = DetectionRequest(uid=t, frame=_frame(seed=t),
+                               session_id="ego")
+        svc.submit(filler)
+        svc.submit(req)
+        svc.run()
+        reqs.append(req)
+    assert all(r.ok for r in reqs)
+    pin = svc.session_location("ego")
+    assert pin is not None
+    # the session's tracker exists on exactly ONE replica: the stream
+    # never observed two half-blind trackers
+    holders = [rep.index for rep in svc.replicas
+               if "ego" in rep.service.sessions]
+    assert holders == [pin]
+    slo = svc.session_slo("ego")
+    assert slo.submitted == 9 and slo.served == 9
+    svc.close()
+
+
+def test_affinity_off_splits_the_stream():
+    svc = make_fleet(3, affinity=False)
+    uid = 100
+    for t in range(9):
+        # varying filler load per round shifts which replica is least
+        # loaded when the session frame arrives
+        for _ in range(t % 3):
+            svc.submit(DetectionRequest(uid=uid, frame=_frame(seed=t)))
+            uid += 1
+        svc.submit(DetectionRequest(uid=t, frame=_frame(seed=t),
+                                    session_id="ego"))
+        svc.run()
+    # the ablation arm: load-only routing scatters the stream, so more
+    # than one replica grew a tracker for it (the failure mode affinity
+    # exists to prevent) — and the aggregated SLO still accounts per-frame
+    holders = [rep.index for rep in svc.replicas
+               if "ego" in rep.service.sessions]
+    assert len(holders) >= 2
+    assert svc.session_location("ego") is None
+    assert svc.session_slo("ego").submitted == 9
+    svc.close()
+
+
+def test_session_churn_keeps_pins_consistent():
+    svc = make_fleet(3)
+    alive_sessions = set()
+    uid = 0
+    for wave in range(4):
+        # three sessions arrive, the oldest one leaves each wave
+        for s in range(3):
+            sid = f"s{wave}-{s}"
+            alive_sessions.add(sid)
+            for t in range(2):
+                svc.submit(DetectionRequest(
+                    uid=uid, frame=_frame(seed=uid), session_id=sid))
+                uid += 1
+            svc.run()
+        if wave:
+            gone = f"s{wave - 1}-0"
+            pin = svc.session_location(gone)
+            svc.replicas[pin].service.end_session(gone)
+            del svc._session_replica[gone]
+            alive_sessions.discard(gone)
+    for sid in alive_sessions:
+        pin = svc.session_location(sid)
+        holders = [rep.index for rep in svc.replicas
+                   if sid in rep.service.sessions]
+        assert holders == [pin], (sid, holders, pin)
+    svc.close()
+
+
+def test_migrate_session_moves_tracker_state():
+    svc = make_fleet(2)
+    for t in range(4):
+        svc.submit(DetectionRequest(uid=t, frame=_frame(seed=0),
+                                    session_id="ego"))
+        svc.run()
+    src = svc.session_location("ego")
+    dst = 1 - src
+    tracker = svc.replicas[src].service.sessions["ego"]
+    ids_before = sorted(t.track_id for t in svc.session_tracks("ego"))
+    assert svc.migrate_session("ego", dst)
+    assert svc.session_location("ego") == dst
+    # the tracker OBJECT moved — stream continuity survives the hop
+    assert svc.replicas[dst].service.sessions["ego"] is tracker
+    assert "ego" not in svc.replicas[src].service.sessions
+    req = DetectionRequest(uid=99, frame=_frame(seed=0), session_id="ego")
+    svc.submit(req)
+    svc.run()
+    assert req.ok
+    assert svc.replicas[dst].service.dispatches > 0
+    ids_after = sorted(t.track_id for t in svc.session_tracks("ego"))
+    assert set(ids_before) <= set(ids_after)
+    assert svc.session_slo("ego").submitted == 5
+    svc.close()
+
+
+def test_migrate_to_dead_replica_refused():
+    svc = make_fleet(2)
+    svc.submit(DetectionRequest(uid=0, frame=_frame(), session_id="ego"))
+    svc.run()
+    svc.kill_replica(1 - svc.session_location("ego"))
+    assert not svc.migrate_session("ego", 1 - svc.session_location("ego"))
+    svc.close()
+
+
+# --- replica death + failover -------------------------------------------
+
+def test_replica_death_requeues_with_original_deadlines():
+    clock = VirtualClock()
+    svc = make_fleet(2, clock=clock, max_queue=16)
+    reqs = [DetectionRequest(uid=i, frame=_frame(seed=i), deadline_s=5.0)
+            for i in range(6)]
+    for r in reqs:
+        svc.submit(r)
+    deadlines = [r.deadline_at for r in reqs]
+    clock.advance(0.5)
+    victim = 0
+    svc.kill_replica(victim)
+    assert not svc.replicas[victim].alive
+    # queued work re-routed to the survivor with its ORIGINAL absolute
+    # deadline — failover must not hand a request a fresh budget
+    assert svc.requeued > 0
+    for r, dl in zip(reqs, deadlines):
+        assert r.deadline_at == dl
+    svc.run()
+    assert all(r.is_terminal for r in reqs)
+    assert all(r.ok for r in reqs)   # 0.5s of lost time << 5s budgets
+    assert svc.replicas[1].service.dispatches == 6
+    svc.close()
+
+
+def test_replica_death_fails_in_flight_and_drops_pins():
+    svc = make_fleet(2)
+    # pin a session and put a request IN FLIGHT on its replica
+    warm = DetectionRequest(uid=0, frame=_frame(), session_id="ego")
+    svc.submit(warm)
+    svc.run()
+    pin = svc.session_location("ego")
+    doomed = DetectionRequest(uid=1, frame=_frame(), session_id="ego")
+    svc.submit(doomed)
+    svc.step()          # dispatches on the pinned replica
+    svc.kill_replica(pin)
+    assert doomed.status is RequestStatus.FAILED
+    assert svc.failed_on_death >= 1
+    assert svc.session_failovers >= 1
+    assert svc.session_location("ego") is None
+    # the next frame re-pins on the survivor and rebuilds a tracker there
+    nxt = DetectionRequest(uid=2, frame=_frame(), session_id="ego")
+    svc.submit(nxt)
+    svc.run()
+    assert nxt.ok
+    assert svc.session_location("ego") == 1 - pin
+    assert "ego" in svc.replicas[1 - pin].service.sessions
+    svc.close()
+
+
+def test_replica_death_via_fault_schedule():
+    faults = ServiceFaultInjector(kill_replica_at=((1, 0),))
+    svc = make_fleet(2, faults=faults)
+    reqs = [DetectionRequest(uid=i, frame=_frame(seed=i)) for i in range(4)]
+    for r in reqs:
+        svc.submit(r)
+    svc.run()
+    assert not svc.replicas[0].alive
+    assert svc.replicas[1].alive
+    # nothing hangs: every request terminated (served by the survivor,
+    # or failed explicitly with the dead replica's in-flight batch)
+    assert all(r.is_terminal for r in reqs)
+    assert sum(r.ok for r in reqs) + svc.failed_on_death == len(reqs)
+    svc.close()
+
+
+def test_all_replicas_dead_fails_explicitly():
+    svc = make_fleet(2)
+    reqs = [DetectionRequest(uid=i, frame=_frame(seed=i)) for i in range(3)]
+    for r in reqs:
+        svc.submit(r)
+    svc.kill_replica(0)
+    svc.kill_replica(1)
+    assert all(r.status is RequestStatus.FAILED for r in reqs)
+    with pytest.raises(RuntimeError):
+        svc.submit(DetectionRequest(uid=9, frame=_frame()))
+    svc.close()
+
+
+# --- bursty dropout storms (drive-cycle blackout frames) -----------------
+
+def test_dropout_storm_coasts_through_blackout():
+    cycle = make_drive_cycle(
+        "straight", 18, 120, 160, seed=0,
+        dropout_frames=(10, 11, 12),   # 3-frame camera blackout burst
+    )
+    clock = VirtualClock()
+    svc = make_fleet(2, clock=clock)
+    results = []
+    for fr in cycle.frames:
+        req = DetectionRequest(uid=fr.t, frame=fr.scene.image,
+                               session_id="ego")
+        svc.submit(req)
+        svc.run()
+        clock.advance(0.01)
+        results.append((fr, req))
+    assert all(r.is_terminal and r.served for _, r in results)
+    # the stream stayed whole through the storm: one pinned tracker,
+    # still holding a confirmed track after the blackout burst
+    pin = svc.session_location("ego")
+    holders = [rep.index for rep in svc.replicas
+               if "ego" in rep.service.sessions]
+    assert holders == [pin]
+    assert any(t.confirmed for t in svc.session_tracks("ego"))
+    svc.close()
+
+
+# --- speculative local/remote offload ------------------------------------
+
+def _spec_fleet(rtt_s: float, clock: VirtualClock) -> ShardedDetectionService:
+    return make_fleet(
+        2, clock=clock, remote_replica=1,
+        speculative=SpeculativeConfig(rtt_s=rtt_s,
+                                      local_shape=(96, 128)),
+    )
+
+
+def test_speculative_remote_upgrade_when_it_wins():
+    clock = VirtualClock()
+    svc = _spec_fleet(0.02, clock)
+    req = DetectionRequest(uid=0, frame=_frame(), deadline_s=1.0)
+    ticket = svc.submit_speculative(req)
+    # local tier force-downshifted to the small bucket on replica 0
+    assert ticket.local.bucket == (96, 128)
+    assert ticket.remote.bucket == (120, 160)
+    svc.replicas[0].service.run()       # local lands at t=0.00
+    clock.advance(0.10)
+    svc.replicas[1].service.run()       # remote computes at t=0.10
+    decision = svc.resolve_speculative(ticket)
+    assert decision is not None and decision.upgraded
+    assert decision.winner == "remote"
+    assert decision.local_met_deadline          # the guarantee held anyway
+    # the caller's request carries the FULL-RES answer, stamped with the
+    # modeled downlink: finished when the upgrade was in hand, not when
+    # the remote replica computed it
+    assert req.bucket == (120, 160) and req.downshift == 1
+    assert req.finished_at == pytest.approx(0.10 + 0.02)
+    assert svc.speculative_upgrades == 1
+    svc.close()
+
+
+def test_speculative_local_wins_when_network_too_slow():
+    clock = VirtualClock()
+    svc = _spec_fleet(0.5, clock)       # rtt alone blows the deadline
+    req = DetectionRequest(uid=0, frame=_frame(), deadline_s=0.2)
+    ticket = svc.submit_speculative(req)
+    svc.replicas[0].service.run()
+    clock.advance(0.05)
+    svc.replicas[1].service.run()
+    decision = svc.resolve_speculative(ticket)
+    assert decision is not None and not decision.upgraded
+    assert decision.winner == "local"
+    assert decision.local_met_deadline
+    # the low-res local answer stands: served inside the deadline
+    assert req.bucket == (96, 128) and req.downshift > 1
+    assert req.served and req.finished_at <= req.deadline_at
+    assert svc.speculative_upgrades == 0
+    svc.close()
+
+
+def test_speculative_dead_remote_never_upgrades():
+    clock = VirtualClock()
+    svc = _spec_fleet(0.01, clock)
+    svc.kill_replica(1)
+    req = DetectionRequest(uid=0, frame=_frame(), deadline_s=1.0)
+    ticket = svc.submit_speculative(req)
+    assert ticket.remote.status is RequestStatus.FAILED
+    svc.run()
+    assert ticket.decision is not None and not ticket.decision.upgraded
+    assert req.served and req.bucket == (96, 128)
+    svc.close()
+
+
+def test_speculative_race_is_deterministic():
+    def arm():
+        clock = VirtualClock()
+        svc = _spec_fleet(0.02, clock)
+        req = DetectionRequest(uid=0, frame=_frame(), deadline_s=0.5)
+        ticket = svc.submit_speculative(req)
+        svc.replicas[0].service.run()
+        clock.advance(0.1)
+        svc.replicas[1].service.run()
+        d = svc.resolve_speculative(ticket)
+        peaks = np.asarray(req.result.peaks)
+        svc.close()
+        return d, peaks
+
+    d1, p1 = arm()
+    d2, p2 = arm()
+    assert d1 == d2
+    np.testing.assert_array_equal(p1, p2)
+
+
+# --- real 8-device placement (subprocess, slow) --------------------------
+
+@pytest.mark.slow
+def test_eight_device_fleet_placement():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    body = textwrap.dedent("""
+        import jax, numpy as np
+        from repro.core.plan import HoughConfig, PipelineConfig
+        from repro.data import make_scenario
+        from repro.launch.mesh import make_replica_mesh, replica_devices
+        from repro.serve.detection import DetectionRequest, VirtualClock
+        from repro.serve.fleet import ShardedDetectionService
+        from repro.sharding.partition import shard_slots
+
+        assert len(jax.devices()) == 8, jax.devices()
+
+        # slot-axis sharding: one slot grid spread over the replica mesh
+        mesh = make_replica_mesh(8)
+        batch = np.random.default_rng(0).random((8, 96, 128), np.float32)
+        sharded = shard_slots(batch, mesh)
+        shards = sharded.addressable_shards
+        assert len(shards) == 8
+        assert all(s.data.shape == (1, 96, 128) for s in shards)
+        assert len({s.device for s in shards}) == 8
+        np.testing.assert_array_equal(np.asarray(sharded), batch)
+
+        # fleet: one replica per physical device, distinct plan caches
+        cfg = PipelineConfig(hough=HoughConfig(compact=True,
+                                               max_edges="auto"))
+        svc = ShardedDetectionService(
+            cfg, n_replicas=8, devices=replica_devices(8),
+            clock=VirtualClock(), buckets=((96, 128), (120, 160)),
+            batch_size=1, prefetch=False,
+        )
+        devs = {rep.service.device for rep in svc.replicas}
+        assert len(devs) == 8
+        frame = make_scenario("straight", 120, 160, seed=0).image
+        reqs = [DetectionRequest(uid=i, frame=frame) for i in range(8)]
+        for r in reqs:
+            svc.submit(r)
+        svc.run()
+        assert all(r.ok for r in reqs)
+        # every replica served one request, each on its own device
+        assert [rep.service.dispatches for rep in svc.replicas] == [1] * 8
+        ref = np.asarray(reqs[0].result.peaks)
+        for r in reqs[1:]:
+            np.testing.assert_array_equal(np.asarray(r.result.peaks), ref)
+        svc.close()
+        print("8-device fleet placement OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", body], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
