@@ -3,7 +3,9 @@
 from __future__ import annotations
 
 import csv
+import datetime
 import os
+import subprocess
 import time
 from typing import Callable
 
@@ -13,16 +15,52 @@ OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
 
 
 def timeit_us(fn: Callable, *args, warmup: int = 2, repeats: int = 5,
-              **kw) -> float:
+              min_wall_s: float = 0.0, **kw) -> float:
     """Mean wall microseconds of fn(*args) with device sync (paper method:
-    averaged repeats, explicit completion boundaries)."""
+    averaged repeats, explicit completion boundaries).
+
+    ``min_wall_s`` keeps repeating past ``repeats`` until that much wall
+    time has accumulated — a fast kernel on a noisy host gets enough
+    samples that the mean is stable, while a slow one still stops after
+    ``repeats`` (comparative gates like fused-vs-staged want equal-noise
+    arms, not equal-repeat arms)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args, **kw))
     t0 = time.perf_counter()
-    for _ in range(repeats):
+    n = 0
+    out = None
+    while n < repeats or (time.perf_counter() - t0) < min_wall_s:
         out = fn(*args, **kw)
+        n += 1
     jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / repeats * 1e6
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run_stamp() -> dict:
+    """{"timestamp_utc", "commit"} identifying this benchmark run.
+
+    Every BENCH_*.json carries one so a checked-in result can be traced
+    to the commit (and time) that produced it — a number without its
+    provenance cannot be re-baselined honestly."""
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        commit = None
+    return {
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc
+        ).isoformat(timespec="seconds"),
+        "commit": commit,
+    }
+
+
+def stamp_json(payload: dict) -> dict:
+    """Return ``payload`` with the run stamp merged under ``"run"``."""
+    return {**payload, "run": run_stamp()}
 
 
 def write_csv(name: str, header: list[str], rows: list[list]) -> str:

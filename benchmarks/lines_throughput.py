@@ -1,7 +1,7 @@
 """Batched line-detection throughput: frames/s vs batch size, resolution,
 and edge compaction — the perf trajectory of the streaming fast path.
 
-Three measurement families, all on the host's default (xla) kernel path:
+Four measurement families, all on the host's default (xla) kernel path:
 
   * ``detect_loop``  — the pre-batching baseline: one ``detect`` call per
     frame (batch=1), dense Hough voting.
@@ -9,6 +9,12 @@ Three measurement families, all on the host's default (xla) kernel path:
     program, with the edge-compaction pre-pass on and off.
   * per-stage split  — canny / hough / get_lines microseconds per frame at
     batch 1 and 8, so regressions can be pinned to a stage.
+  * fused-vs-staged  — the steady-state comparison: a tracker warmed on
+    the scene supplies the theta gate and rho corridors, then the gated
+    staged plan races its fused twin on the same frames.  This family
+    carries a strict gate — the run fails (exit 1) if the fused hot path
+    is slower on ANY config — so a regression in the fused kernels can
+    never land silently behind a green benchmark.
 
 Emits ``BENCH_lines.json`` in the working directory.
 
@@ -26,9 +32,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import HoughConfig, LineDetector, PipelineConfig
+from repro.core.tracking import TrackingPipeline
 from repro.data.images import synthetic_road
 
-from .common import print_table
+from .common import print_table, stamp_json, timeit_us
+
+# The fused arm's production shape (serve/detection.py defaults): a
+# 40-bin theta gate and an 8-slot corridor budget.
+FUSED_BAND = 40
+FUSED_CORRIDORS = 8
 
 
 def _frames(n: int, h: int, w: int) -> np.ndarray:
@@ -106,6 +118,66 @@ def bench_stages(h: int, w: int, batches, *, compact: bool):
     return rows
 
 
+def bench_fused(h: int, w: int, batches, *, quick: bool):
+    """Fused-vs-staged steady state: warmed tracker, strict per-config gate.
+
+    One scene geometry; a ``TrackingPipeline`` replays it 8 frames so the
+    tracker confirms and yields a healthy theta gate + rho corridors —
+    exactly the state in which ``serve/detection.py`` engages the fused
+    plan.  The batch axis models B parallel streams of that scene with
+    independent sensor noise (same geometry, so one corridor set covers
+    the whole batch, as the service's corridor union does).  Staged and
+    fused arms run the same gated plan config and the same inputs; repeats
+    are interleaved (staged/fused rounds alternate, best round kept) so
+    host noise cannot systematically favor one arm.
+    """
+    scene = synthetic_road(h, w, seed=100).image.astype(np.float32)
+    pipe = TrackingPipeline(
+        PipelineConfig(hough=HoughConfig(compact=True, max_edges="auto")),
+        height=h, width=w, theta_band=FUSED_BAND,
+    )
+    for _ in range(8):
+        pipe.process(scene)
+    bins = pipe.tracker.gate_bins(pipe.n_theta, band=FUSED_BAND)
+    cors = pipe.tracker.corridors(FUSED_CORRIDORS)
+    if bins is None or cors is None:
+        raise RuntimeError(
+            "tracker failed to warm on the benchmark scene — the fused "
+            "arm needs a healthy gate and corridors"
+        )
+    bins = jnp.asarray(bins)
+    cors = jnp.asarray(cors)
+    staged = pipe.gated_plan
+    fused = staged.with_fused(FUSED_CORRIDORS)
+
+    rng = np.random.default_rng(7)
+    frames = np.stack([
+        np.clip(scene + rng.normal(0.0, 6.0, scene.shape), 0, 255)
+        for _ in range(max(batches))
+    ]).astype(np.float32)
+    frames = jnp.asarray(frames)
+
+    rounds = 2 if quick else 3
+    min_wall = 0.05 if quick else 0.25
+    rows = []
+    for B in batches:
+        x = frames[:B]
+        ts, tf = [], []
+        for _ in range(rounds):
+            ts.append(timeit_us(staged.run, x, bins, min_wall_s=min_wall))
+            tf.append(timeit_us(fused.run, x, bins, cors,
+                                min_wall_s=min_wall))
+        t_staged, t_fused = min(ts), min(tf)
+        rows.append({
+            "height": h, "width": w, "batch": B,
+            "staged_us_per_frame": t_staged / B,
+            "fused_us_per_frame": t_fused / B,
+            "fused_speedup": t_staged / t_fused,
+            "gate_ok": t_fused <= t_staged,
+        })
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -116,12 +188,14 @@ def main() -> None:
     resolutions = [(120, 160), (240, 320)]
     batches = (1, 4, 8)
 
-    throughput, stages = [], []
+    throughput, stages, fused = [], [], []
     for h, w in resolutions:
         throughput += bench_throughput(h, w, batches, quick=args.quick)
         stages += bench_stages(h, w, (1, 8), compact=True)
         if not args.quick:
             stages += bench_stages(h, w, (8,), compact=False)
+    for h, w in ((240, 320), (480, 640)):
+        fused += bench_fused(h, w, (1, 8), quick=args.quick)
 
     def fps(mode, B, compact, h, w):
         for r in throughput:
@@ -149,6 +223,15 @@ def main() -> None:
           f"{r['hough_us_per_frame']:.0f}",
           f"{r['get_lines_us_per_frame']:.0f}"] for r in stages],
     )
+    print_table(
+        "fused vs staged (warmed tracker, us/frame)",
+        ["HxW", "batch", "staged", "fused", "speedup", "gate"],
+        [[f"{r['height']}x{r['width']}", r["batch"],
+          f"{r['staged_us_per_frame']:.0f}",
+          f"{r['fused_us_per_frame']:.0f}",
+          f"{r['fused_speedup']:.2f}x",
+          "ok" if r["gate_ok"] else "FAIL"] for r in fused],
+    )
     if speedup is not None:
         print(f"\nbatched fast path (batch=8, compact) vs batch=1 detect "
               f"loop @240x320: {speedup:.1f}x frames/s")
@@ -158,14 +241,25 @@ def main() -> None:
             "backend": jax.default_backend(),
             "impl": "xla (host default)",
             "quick": args.quick,
+            "fused_band": FUSED_BAND,
+            "fused_corridors": FUSED_CORRIDORS,
         },
         "throughput": throughput,
         "stages": stages,
+        "fused_vs_staged": fused,
         "speedup_batch8_compact_vs_loop_240x320": speedup,
     }
     with open(args.out, "w") as f:
-        json.dump(out, f, indent=2, default=float)
+        json.dump(stamp_json(out), f, indent=2, default=float)
     print(f"wrote {args.out}")
+    bad = [r for r in fused if not r["gate_ok"]]
+    if bad:
+        for r in bad:
+            print(f"FUSED GATE FAILED: {r['height']}x{r['width']} "
+                  f"batch={r['batch']} fused "
+                  f"{r['fused_us_per_frame']:.0f}us > staged "
+                  f"{r['staged_us_per_frame']:.0f}us per frame")
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

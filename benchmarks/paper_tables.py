@@ -184,6 +184,88 @@ def table7_speedup_matrix():
     return {"best_total_speedup": best}
 
 
+def table_fused_roofline():
+    """Measured roofline gap of the fused hot path vs the staged stages.
+
+    Per stage: HBM bytes + MXU (dot) FLOPs from the compiled HLO
+    (``launch.hlo_cost.analyze`` over ``jit(f).lower(x).compile()``), wall
+    time measured, achieved GB/s / GFLOP/s against the v5e peaks
+    (``launch.roofline.stage_roofline``).  The staged hot path is the sum
+    of separately-jitted canny + hough modules — each is its own XLA
+    module, so the edge map crosses HBM between them (write + read), which
+    is exactly the traffic the fused module deletes.  ``max_edges`` is
+    pinned to one tier (no ``lax.switch``) so the HLO byte count is the
+    one program that actually runs, not a sum over branches.  The gate:
+    fused-module bytes strictly below the staged stages' summed bytes.
+    """
+    from repro.core.hough import fused_hough
+    from repro.launch.hlo_cost import analyze
+    from repro.launch.roofline import stage_roofline
+
+    image = _frame()
+    max_edges = 2048
+    ccfg = CannyConfig()
+    hcfg = HoughConfig(compact=True, max_edges=max_edges)
+
+    canny_fn = lambda im: canny(im, ccfg)                  # noqa: E731
+    hough_fn = lambda e: hough_transform(e, hcfg)          # noqa: E731
+    fused_fn = lambda im: fused_hough(im, ccfg, hcfg)      # noqa: E731
+    edges = jax.jit(canny_fn)(image)
+    votes = jax.jit(hough_fn)(edges)
+    lines_fn = lambda v: get_lines(                        # noqa: E731
+        v, height=H, width=W, cfg=LinesConfig()
+    )
+
+    cells = []
+    for name, fn, arg in [
+        ("canny", canny_fn, image),
+        ("hough", hough_fn, edges),
+        ("get_coordinates", lines_fn, votes),
+        ("fused_canny_hough", fused_fn, image),
+    ]:
+        jitted = jax.jit(fn)
+        cost = analyze(jitted.lower(arg).compile().as_text())
+        wall_us = timeit_us(jitted, arg, min_wall_s=0.2)
+        cells.append(stage_roofline(
+            name, bytes=cost.bytes, dot_flops=cost.dot_flops,
+            wall_s=wall_us * 1e-6,
+        ))
+
+    staged = {c["stage"]: c for c in cells}
+    staged_bytes = staged["canny"]["bytes"] + staged["hough"]["bytes"]
+    fused_bytes = staged["fused_canny_hough"]["bytes"]
+    header = ["stage", "HBM bytes", "dot FLOPs", "wall(us)",
+              "achieved GB/s", "% HBM peak", "achieved GFLOP/s",
+              "% FLOP peak", "bottleneck"]
+    rows = [
+        [c["stage"], f"{c['bytes']:.3e}", f"{c['dot_flops']:.3e}",
+         f"{c['wall_s']*1e6:.0f}", f"{c['achieved_gbps']:.2f}",
+         f"{c['frac_hbm_peak']:.2%}", f"{c['achieved_gflops']:.2f}",
+         f"{c['frac_flops_peak']:.2%}", c["bottleneck"]]
+        for c in cells
+    ]
+    rows.append([
+        "staged hot path (canny+hough)", f"{staged_bytes:.3e}", "", "", "",
+        "", "", "", "",
+    ])
+    write_csv("t_fused_roofline", header, rows)
+    print_table(
+        "Fused hot path roofline (achieved vs v5e peak; HLO-derived "
+        "bytes/FLOPs, measured walls)", header, rows,
+    )
+    ok = fused_bytes < staged_bytes
+    print(f"  fused-module HBM bytes {fused_bytes:.3e} "
+          f"{'<' if ok else '>='} staged canny+hough {staged_bytes:.3e} "
+          f"({'ok' if ok else 'VIOLATED'}; the deleted edge-map round "
+          f"trip)")
+    return {
+        "stages": cells,
+        "fused_hot_path_bytes": fused_bytes,
+        "staged_hot_path_bytes": staged_bytes,
+        "fused_traffic_below_staged": ok,
+    }
+
+
 def table7_projected():
     """Table 7 on the *target*: TPU v5e projection via the offload model.
 

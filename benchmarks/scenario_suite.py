@@ -21,7 +21,10 @@ Two detector variants are compared per family:
 
 The suite asserts the ROADMAP autotune contract — on every family, ``auto``
 matches ``hand`` F1 exactly while allocating a no-larger buffer — and
-records both in ``BENCH_scenarios.json``.
+records both in ``BENCH_scenarios.json``.  A third, score-only family of
+rows covers the low-precision gradient tiers (``CannyConfig.grad_dtype``
+f16/int8): per-family F1 that ``scripts/check_f1.py`` pins against the
+committed baseline and each family's floor.
 
 Usage: PYTHONPATH=src python -m benchmarks.scenario_suite [--quick]
 """
@@ -35,7 +38,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    HoughConfig, LineDetector, PipelineConfig, aggregate_scores, score_batch,
+    CannyConfig, HoughConfig, LineDetector, PipelineConfig, aggregate_scores,
+    score_batch,
 )
 from repro.data import get_family, scenario_batch, scenario_names
 from repro.kernels.ops import default_max_edges
@@ -84,6 +88,38 @@ def bench_family(name: str, h: int, w: int, *, n_seeds: int, batches,
     return rows
 
 
+def bench_quantized(name: str, h: int, w: int, *, n_seeds: int
+                    ) -> list[dict]:
+    """Score-only rows for the low-precision gradient tiers.
+
+    ``CannyConfig.grad_dtype`` drops the gradient accumulation to f16 or
+    int8 (per-frame symmetric input quantization) while the threshold
+    compare stays f32 — the accelerator's low-precision path.  Accuracy is
+    the only axis that can silently move (on this host the low-precision
+    ops are emulated, so timing says nothing), so these rows carry F1 per
+    family and ``scripts/check_f1.py`` pins them against the committed
+    baseline and each family's registered floor.
+    """
+    imgs_np, truths = scenario_batch([name] * n_seeds, h, w, seed=0)
+    imgs = jnp.asarray(imgs_np)
+    rows = []
+    for grad in ("f16", "int8"):
+        det = LineDetector(PipelineConfig(
+            canny=CannyConfig(grad_dtype=grad),
+            hough=HoughConfig(compact=True, max_edges="auto"),
+        ))
+        res = det.detect_batch(imgs)
+        agg = aggregate_scores(score_batch(res.peaks, res.valid, truths))
+        rows.append({
+            "scenario": name, "grad_dtype": grad, "batch": n_seeds,
+            "height": h, "width": w,
+            "f1": agg["f1"], "precision": agg["precision"],
+            "recall": agg["recall"],
+            "f1_floor": get_family(name).f1_floor,
+        })
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -97,11 +133,13 @@ def main() -> None:
     repeats = 1 if args.quick else 2
     batches = (1, 8)
 
-    rows = []
+    rows, quantized = [], []
     for name in scenario_names():
         rows += bench_family(name, args.height, args.width,
                              n_seeds=n_seeds, batches=batches,
                              repeats=repeats)
+        quantized += bench_quantized(name, args.height, args.width,
+                                     n_seeds=n_seeds)
 
     print_table(
         f"scenario suite ({args.height}x{args.width}, {n_seeds} seeds)",
@@ -133,6 +171,14 @@ def main() -> None:
             ),
             "above_floor": auto["f1"] >= get_family(name).f1_floor,
         }
+    print_table(
+        "quantized gradient tiers (batch-8 F1, score only)",
+        ["scenario", "grad", "F1", "prec", "recall", "floor"],
+        [[r["scenario"], r["grad_dtype"], f"{r['f1']:.3f}",
+          f"{r['precision']:.2f}", f"{r['recall']:.2f}",
+          f"{r['f1_floor']:.2f}"] for r in quantized],
+    )
+
     ok = all(v["f1_equal"] and v["buffer_no_larger"] and v["above_floor"]
              for v in autotune.values())
     savings = {
@@ -151,6 +197,7 @@ def main() -> None:
             "n_seeds": n_seeds, "quick": args.quick,
         },
         "rows": rows,
+        "quantized": quantized,
         "autotune": autotune,
         "autotune_contract_ok": ok,
     }

@@ -9,6 +9,10 @@ instead of landing silently:
   * ``scenarios`` — static per-family F1 from ``BENCH_scenarios.json``
     (batch-8 ``auto`` rows, the deployment configuration): F1 >= baseline
     F1 - tolerance and >= the family's registered floor.
+  * ``quantized`` — the low-precision gradient tiers (``CannyConfig.
+    grad_dtype`` f16/int8), also from ``BENCH_scenarios.json``: per
+    (family, tier) F1 >= baseline - tolerance and >= the family's floor,
+    so precision cuts keep paying only while they stay accurate.
   * ``drive_cycles`` — the temporal path, from ``BENCH_tracking.json``:
     tracked F1 over each gated family's standard drive cycle >= baseline
     - tolerance, and on the noisy families tracked F1 >= the same run's
@@ -47,6 +51,17 @@ def batch8_auto_f1(bench: dict) -> dict[str, dict]:
             out[r["scenario"]] = {
                 "f1": float(r["f1"]), "f1_floor": float(r["f1_floor"]),
             }
+    return out
+
+
+def quantized_f1(bench: dict) -> dict[str, dict]:
+    """{"family/grad_dtype": {"f1", "f1_floor"}} from the scenario-suite
+    quantized rows (absent in bench files predating the tiers)."""
+    out = {}
+    for r in bench.get("quantized", []):
+        out[f"{r['scenario']}/{r['grad_dtype']}"] = {
+            "f1": float(r["f1"]), "f1_floor": float(r["f1_floor"]),
+        }
     return out
 
 
@@ -102,6 +117,7 @@ def main() -> int:
     if sc_bench is None:
         return 2
     current = batch8_auto_f1(sc_bench)
+    quantized = quantized_f1(sc_bench)
     tr_bench = _load(args.tracking_bench,
                      "`python -m benchmarks.tracking_suite`")
     if tr_bench is None:
@@ -123,6 +139,7 @@ def main() -> int:
         os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
         payload = {
             "scenarios": current,
+            "quantized": quantized,
             "drive_cycles": {
                 name: {"f1_tracked": v["f1_tracked"]}
                 for name, v in sorted(cycles.items())
@@ -135,8 +152,8 @@ def main() -> int:
         with open(args.baseline, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"check_f1: wrote baseline for {len(current)} families + "
-              f"{len(cycles)} drive cycles + {len(coasts)} coast floors "
-              f"-> {args.baseline}")
+              f"{len(quantized)} quantized tiers + {len(cycles)} drive "
+              f"cycles + {len(coasts)} coast floors -> {args.baseline}")
         return 0
 
     baseline = _load(args.baseline, "`scripts/check_f1.py --update`")
@@ -157,6 +174,28 @@ def main() -> int:
             failures.append(
                 f"{name}: F1 {cur['f1']:.4f} below registered floor "
                 f"{cur['f1_floor']:.2f}"
+            )
+    # quantized tiers: same bench file as scenarios, so a pinned tier
+    # missing from the run means the suite stopped emitting it — a
+    # vanished gate, not a skippable cell
+    checked_quant = 0
+    for name, base in sorted(baseline.get("quantized", {}).items()):
+        if name not in quantized:
+            failures.append(
+                f"{name} [quantized]: tier missing from bench run"
+            )
+            continue
+        cur = quantized[name]
+        checked_quant += 1
+        if cur["f1"] < base["f1"] - args.tolerance:
+            failures.append(
+                f"{name} [quantized]: F1 {cur['f1']:.4f} < baseline "
+                f"{base['f1']:.4f}"
+            )
+        if cur["f1"] < cur["f1_floor"]:
+            failures.append(
+                f"{name} [quantized]: F1 {cur['f1']:.4f} below registered "
+                f"floor {cur['f1_floor']:.2f}"
             )
     # drive cycles: a --quick run covers only the gated subset, so absent
     # families are skipped there — but a FULL run must cover every pinned
@@ -214,8 +253,8 @@ def main() -> int:
             print(f"  {f_}")
         return 1
     print(f"check_f1: OK — {len(baseline['scenarios'])} families, "
-          f"{checked_cycles} drive cycles, and {checked_coast} coast "
-          f"floors at or above baseline"
+          f"{checked_quant} quantized tiers, {checked_cycles} drive "
+          f"cycles, and {checked_coast} coast floors at or above baseline"
           + (f" (tolerance {args.tolerance})" if args.tolerance else ""))
     return 0
 

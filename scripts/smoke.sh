@@ -23,13 +23,16 @@ python -m pytest -q -m "tracking and not slow" -x
 # robustness layer: degradation ladder, fault injection, overload
 # shedding, coast semantics (marker `fleet`)
 python -m pytest -q -m "fleet and not slow" -x
+# fused hot path: kernel parity, corridor filtering, exact-count tiering,
+# steady-state engagement (marker `fused`)
+python -m pytest -q -m "fused and not slow" -x
 # sharded-fleet layer: replica routing, session affinity, failover,
 # speculative offload (marker `mesh`); the 8-device placement scenario
 # itself is `slow` — the device-count flag here covers any test that
 # inits jax, and the mesh bench below runs under the same flag
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -q -m "mesh and not slow" -x
-python -m pytest -q -m "not slow and not scenarios and not serve and not deadline and not tracking and not fleet and not mesh"
+python -m pytest -q -m "not slow and not scenarios and not serve and not deadline and not tracking and not fleet and not mesh and not fused"
 # CI F1 gate: regenerate the scenario + drive-cycle + fleet suites and
 # compare per-family (static, tracked, and coast-only) F1 against the
 # committed baseline (benchmarks/baselines/f1_baseline.json); the fleet

@@ -99,44 +99,121 @@ class CannyConfig:
     hysteresis_iters: int = 8
     border: int = 4            # suppress zero-padding artifacts at the rim
     impl: str | None = None    # kernel dispatch (None => backend default)
+    # Gradient-accumulation tier: "f32" (exact, the bit-exactness contract),
+    # "f16" (half-precision conv accumulation), or "int8" (per-frame
+    # symmetric quantization via core.quantize + integer convs).  The
+    # threshold compare downstream always happens on f32 magnitudes; the
+    # low-precision tiers trade gradient accuracy for bandwidth and are
+    # quality-gated by the quantized F1 floors in scripts/check_f1.py.
+    grad_dtype: str = "f32"    # "f32" | "f16" | "int8"
 
 
-def _gradients(image: jax.Array, cfg: CannyConfig):
+@functools.cache
+def gradient_masks(cfg: CannyConfig) -> tuple[np.ndarray, ...]:
+    """The conv-mask constants ``_gradients`` needs for ``cfg``, in order.
+
+    Exposed so the fused detection kernel can feed the masks in as Pallas
+    operands (kernel bodies may not capture array constants) via the
+    ``masks=`` override on :func:`canny` — the override is positional and
+    must come from this function for the same ``cfg``.
+    """
+    if cfg.integer or cfg.grad_dtype == "int8":
+        if cfg.fused:
+            return (np.round(fused_masks() * GAUSS_NORM).astype(np.int32),)
+        return (
+            GAUSS_5x5.astype(np.int32)[None],
+            np.stack([SOBEL_X, SOBEL_Y]).astype(np.int32),
+        )
+    dt = np.float16 if cfg.grad_dtype == "f16" else np.float32
+    if cfg.fused:
+        return (fused_masks().astype(dt),)
+    return (
+        (GAUSS_5x5 / GAUSS_NORM)[None].astype(dt),
+        np.stack([SOBEL_X, SOBEL_Y]).astype(dt),
+    )
+
+
+def _gradients(image: jax.Array, cfg: CannyConfig, masks=None):
     """Stages 1-2: noise reduction + intensity gradient, all GEMM-form.
 
     ``image`` is (..., H, W); conv outputs stack masks on axis -3.
+    ``masks`` optionally overrides the conv-mask constants (must match
+    ``gradient_masks(cfg)`` positionally — the fused-kernel seam).
+    Whatever the accumulation tier, ``gx``/``gy`` come back as f32 (int32
+    for the paper's integer rewrite) so the threshold compare downstream
+    is always full-precision.
     """
+    if cfg.grad_dtype not in ("f32", "f16", "int8"):
+        raise ValueError(f"unknown grad_dtype {cfg.grad_dtype!r}")
+    if cfg.integer and cfg.grad_dtype != "f32":
+        raise ValueError(
+            "grad_dtype tiers apply to the float pipeline; the integer "
+            "rewrite (integer=True) is its own arithmetic mode"
+        )
+    if masks is None:
+        masks = tuple(jnp.asarray(m) for m in gradient_masks(cfg))
+
     if cfg.integer:
         img = image.astype(jnp.int32)
         if cfg.fused:
             # Integer fusion: scale fused float masks to int (x GAUSS_NORM).
-            m = jnp.asarray(
-                np.round(fused_masks() * GAUSS_NORM).astype(np.int32)
-            )
-            out = ops.conv2d_gemm(img, m, impl=cfg.impl)
+            out = ops.conv2d_gemm(img, masks[0], impl=cfg.impl)
             nr = out[..., 0, :, :] // int(GAUSS_NORM)
             gx = out[..., 1, :, :] // int(GAUSS_NORM)
             gy = out[..., 2, :, :] // int(GAUSS_NORM)
         else:
-            g = jnp.asarray(GAUSS_5x5.astype(np.int32))
-            nr = ops.conv2d_gemm(img, g[None], impl=cfg.impl)[
+            nr = ops.conv2d_gemm(img, masks[0], impl=cfg.impl)[
                 ..., 0, :, :
             ] // int(GAUSS_NORM)
-            sob = jnp.asarray(
-                np.stack([SOBEL_X, SOBEL_Y]).astype(np.int32)
-            )
-            gxy = ops.conv2d_gemm(nr, sob, impl=cfg.impl)
+            gxy = ops.conv2d_gemm(nr, masks[1], impl=cfg.impl)
             gx, gy = gxy[..., 0, :, :], gxy[..., 1, :, :]
         return nr, gx, gy
 
+    if cfg.grad_dtype == "int8":
+        # Per-frame symmetric int8 (core.quantize): integer convs with int32
+        # accumulation, dequantized back to f32 between stages so the
+        # Gaussian's output re-quantizes at its own dynamic range.
+        from .quantize import quantize_frames  # function-level: no cycle
+
+        q = quantize_frames(image)
+        if cfg.fused:
+            out = ops.conv2d_gemm(q.values, masks[0], impl=cfg.impl)
+            s = q.scale / GAUSS_NORM
+            nr = out[..., 0, :, :].astype(jnp.float32) * s
+            gx = out[..., 1, :, :].astype(jnp.float32) * s
+            gy = out[..., 2, :, :].astype(jnp.float32) * s
+            return nr, gx, gy
+        nr_q = ops.conv2d_gemm(q.values, masks[0], impl=cfg.impl)[
+            ..., 0, :, :
+        ]
+        nr = nr_q.astype(jnp.float32) * (q.scale / GAUSS_NORM)
+        q2 = quantize_frames(nr)
+        gxy = ops.conv2d_gemm(q2.values, masks[1], impl=cfg.impl)
+        gx = gxy[..., 0, :, :].astype(jnp.float32) * q2.scale
+        gy = gxy[..., 1, :, :].astype(jnp.float32) * q2.scale
+        return nr, gx, gy
+
+    if cfg.grad_dtype == "f16":
+        img = image.astype(jnp.float16)
+        if cfg.fused:
+            out = ops.conv2d_gemm(img, masks[0], impl=cfg.impl)
+            return tuple(
+                out[..., k, :, :].astype(jnp.float32) for k in range(3)
+            )
+        nr16 = ops.conv2d_gemm(img, masks[0], impl=cfg.impl)[..., 0, :, :]
+        gxy = ops.conv2d_gemm(nr16, masks[1], impl=cfg.impl)
+        return (
+            nr16.astype(jnp.float32),
+            gxy[..., 0, :, :].astype(jnp.float32),
+            gxy[..., 1, :, :].astype(jnp.float32),
+        )
+
     img = image.astype(jnp.float32)
     if cfg.fused:
-        out = ops.conv2d_gemm(img, jnp.asarray(fused_masks()), impl=cfg.impl)
+        out = ops.conv2d_gemm(img, masks[0], impl=cfg.impl)
         return out[..., 0, :, :], out[..., 1, :, :], out[..., 2, :, :]
-    g = jnp.asarray(GAUSS_5x5 / GAUSS_NORM)
-    nr = ops.conv2d_gemm(img, g[None], impl=cfg.impl)[..., 0, :, :]
-    sob = jnp.asarray(np.stack([SOBEL_X, SOBEL_Y]))
-    gxy = ops.conv2d_gemm(nr, sob, impl=cfg.impl)
+    nr = ops.conv2d_gemm(img, masks[0], impl=cfg.impl)[..., 0, :, :]
+    gxy = ops.conv2d_gemm(nr, masks[1], impl=cfg.impl)
     return nr, gxy[..., 0, :, :], gxy[..., 1, :, :]
 
 
@@ -200,13 +277,16 @@ def _clear_border(x: jax.Array, b: int) -> jax.Array:
     return jnp.where(inside, x, jnp.zeros_like(x))
 
 
-def canny(image: jax.Array, cfg: CannyConfig = CannyConfig()) -> jax.Array:
+def canny(image: jax.Array, cfg: CannyConfig = CannyConfig(),
+          masks=None) -> jax.Array:
     """Edge map (..., H, W) uint8 in {0, 255} (paper's ``image_out``).
 
     Accepts a single frame (H, W) or a batch (N, H, W) — the batch lowers
     through the conv kernel as one launch and the VPU stages broadcast.
+    ``masks`` optionally overrides the gradient conv masks (positional per
+    ``gradient_masks(cfg)``) so a Pallas caller can pass them as operands.
     """
-    nr, gx, gy = _gradients(image, cfg)
+    nr, gx, gy = _gradients(image, cfg, masks)
     mag, dirs = _magnitude_direction(gx, gy, cfg.integer)
     mag = _clear_border(mag, cfg.border)
 
@@ -234,7 +314,8 @@ canny_jit = jax.jit(canny, static_argnames=("cfg",))
 @functools.partial(jax.jit, static_argnames=("cfg", "stride", "margin"))
 def estimate_edge_count_device(image: jax.Array,
                                cfg: CannyConfig = CannyConfig(), *,
-                               stride: int = 2, margin: float = 2.5
+                               stride: int = 2, margin: float = 2.5,
+                               corridors: jax.Array | None = None
                                ) -> jax.Array:
     """Device-side downsampled-gradient edge-count bound (int32 scalar).
 
@@ -253,8 +334,16 @@ def estimate_edge_count_device(image: jax.Array,
     # low/2, floored at 20: contrast below that never survives the double
     # threshold, and 20 sits >3 sigma above asphalt-texture differences so
     # the count tracks strokes/speckle, not ground-plane noise.
+    #
+    # ``corridors`` makes the bound corridor-aware for the fused path's
+    # tier selection: coarse hits outside every (widened) rho window don't
+    # count, since the fused kernel drops those pixels before compaction.
+    # The windows are widened by 2*stride — the worst-case rho drift
+    # between a coarse cell corner and any fine pixel it represents is
+    # stride*sqrt(2) — so the estimate stays an upper bound.
     thresh = max(cfg.low / 2.0, 20.0)
     hits = ops.grad_hits(image, stride=stride, thresh=thresh,
+                         corridors=corridors, widen=2.0 * stride,
                          impl=cfg.impl)
     worst = hits.max().astype(jnp.float32)
     return jnp.floor(worst * stride * margin).astype(jnp.int32) + 64

@@ -62,11 +62,58 @@ class HoughConfig:
     # band), the bin values are data (the gate slides every frame without
     # recompiling).  None = full sweep.
     theta_band: int | None = None
+    # Rho-corridor edge pre-filter (the fused hot path only): when set, the
+    # fused detect kernel drops edge pixels outside every one of
+    # ``corridors`` per-track rho windows before compaction/voting —
+    # cutting the vote's *pixel* axis the way ``theta_band`` cuts its theta
+    # axis.  Like the band, the corridor *count* is static (plan attribute)
+    # while the window values (``[cos, sin, rho_lo, rho_hi]`` rows from
+    # ``tracking.LaneTracker.corridors``) are runtime data.  None = no
+    # filtering.  ``full_corridors`` builds pass-everything windows, under
+    # which the fused path is bit-exact with the staged full sweep.
+    corridors: int | None = None
+
+
+# Corridor windows wider than any image diagonal: a (lo, hi) of
+# (-CORRIDOR_INF, CORRIDOR_INF) passes every pixel.
+CORRIDOR_INF = 1e9
+
+
+def full_corridors(n: int = 1) -> np.ndarray:
+    """(n, 4) corridor rows that pass every pixel (full-coverage fallback).
+
+    Every row is the same all-pass window, so padding a real corridor set
+    with these (or using them outright on cold start) is idempotent under
+    the kernel's any-corridor OR.
+    """
+    row = np.array([1.0, 0.0, -CORRIDOR_INF, CORRIDOR_INF], np.float32)
+    return np.tile(row, (n, 1))
 
 
 def rho_bins(height: int, width: int, cfg: HoughConfig) -> int:
     diag = math.hypot(height, width)
     return int(2.0 * diag / cfg.rho_res) + 1
+
+
+def hough_trig(height: int, width: int, cfg: HoughConfig) -> np.ndarray:
+    """(3, n_theta) homogeneous trig table for the rho GEMM.
+
+    Rows ``cos/rho_res``, ``sin/rho_res``, and the folded ``+diag`` shift —
+    so ``floor(xy_homogeneous @ trig)`` is directly the rho bin index.
+    Shared by the staged vote (``_hough_transform``) and the fused hot
+    path's kernel B so both bin identically.
+    """
+    diag = math.hypot(height, width)
+    theta = np.arange(cfg.n_theta, dtype=np.float32) * (
+        math.pi / cfg.n_theta
+    )
+    return np.stack(
+        [
+            np.cos(theta) / cfg.rho_res,
+            np.sin(theta) / cfg.rho_res,
+            np.full_like(theta, diag / cfg.rho_res),
+        ]
+    ).astype(np.float32)
 
 
 def max_edge_tiers(height: int, width: int, *, base: int = 512
@@ -242,18 +289,7 @@ def _hough_transform(edges: jax.Array, cfg: HoughConfig = HoughConfig(),
         )
     H, W = edges.shape[-2:]
     n_rho = rho_bins(H, W, cfg)
-    diag = math.hypot(H, W)
-
-    theta = np.arange(cfg.n_theta, dtype=np.float32) * (
-        math.pi / cfg.n_theta
-    )
-    trig = np.stack(
-        [
-            np.cos(theta) / cfg.rho_res,
-            np.sin(theta) / cfg.rho_res,
-            np.full_like(theta, diag / cfg.rho_res),
-        ]
-    ).astype(np.float32)
+    trig = hough_trig(H, W, cfg)
 
     jj, ii = jnp.meshgrid(jnp.arange(W), jnp.arange(H))
     xy = jnp.stack(
@@ -267,6 +303,205 @@ def _hough_transform(edges: jax.Array, cfg: HoughConfig = HoughConfig(),
         compact=cfg.compact, max_edges=cfg.max_edges,
         theta_bins=theta_bins, scatter_back=scatter,
     )
+
+
+def _check_corridors(corridors, cfg: HoughConfig) -> None:
+    if (corridors is None) != (cfg.corridors is None):
+        raise ValueError(
+            "HoughConfig.corridors and the corridors argument come as a "
+            f"pair (got corridors={cfg.corridors!r}, argument="
+            f"{'set' if corridors is not None else None!r})."
+        )
+    if corridors is not None and corridors.shape != (cfg.corridors, 4):
+        raise ValueError(
+            f"corridors must have the plan's static shape "
+            f"({cfg.corridors}, 4); got {corridors.shape}."
+        )
+
+
+def fused_hough(image: jax.Array, canny_cfg, cfg: HoughConfig,
+                theta_bins: jax.Array | None = None,
+                corridors: jax.Array | None = None, *,
+                scatter: bool = True) -> jax.Array:
+    """The fused hot path: image -> votes with no HBM round trips between.
+
+    Kernel A (``ops.fused_detect``) runs the whole Canny front end,
+    corridor-filters, and compacts in VMEM; kernel B is the standard vote
+    over the compacted list.  Bit-exact with ``canny`` + ``hough_transform``
+    at full corridor/band coverage whenever the edge count fits the
+    compaction buffer (votes are small-integer sums in f32 and both paths
+    produce the identical edge set).
+
+    ``cfg.max_edges`` must be a resolved int (or None for the dense
+    default): the fused path never materializes an edge map to count, so
+    ``"auto"`` only exists in tiered form (``fused_hough_tiered``).
+    """
+    if cfg.max_edges == "auto":
+        raise ValueError(
+            "fused_hough cannot resolve max_edges='auto' (there is no "
+            "edge map to count); use fused_hough_tiered."
+        )
+    return _fused_hough(image, canny_cfg, cfg, theta_bins, corridors,
+                        scatter=scatter)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("canny_cfg", "cfg", "scatter")
+)
+def _fused_hough(image: jax.Array, canny_cfg, cfg: HoughConfig,
+                 theta_bins: jax.Array | None = None,
+                 corridors: jax.Array | None = None, *,
+                 scatter: bool = True) -> jax.Array:
+    if (theta_bins is None) != (cfg.theta_band is None):
+        raise ValueError(
+            "HoughConfig.theta_band and the theta_bins argument come as a "
+            f"pair (got theta_band={cfg.theta_band!r}, "
+            f"theta_bins={'set' if theta_bins is not None else None!r})."
+        )
+    if theta_bins is not None and theta_bins.shape != (cfg.theta_band,):
+        raise ValueError(
+            f"theta_bins must have the plan's static band shape "
+            f"({cfg.theta_band},); got {theta_bins.shape}."
+        )
+    _check_corridors(corridors, cfg)
+    H, W = image.shape[-2:]
+    n_rho = rho_bins(H, W, cfg)
+    max_edges = cfg.max_edges
+    if max_edges is None:
+        max_edges = ops.default_max_edges(H * W)
+    cxy, cw = ops.fused_detect(
+        image, corridors, cfg=canny_cfg,
+        edge_threshold=cfg.edge_threshold, max_edges=max_edges,
+        impl=cfg.impl,
+    )
+    return ops.hough_vote(
+        cxy, cw, jnp.asarray(hough_trig(H, W, cfg)), n_rho=n_rho,
+        impl=cfg.impl, compact=False, theta_bins=theta_bins,
+        scatter_back=scatter,
+    )
+
+
+def fused_hough_tiered(image: jax.Array, canny_cfg, cfg: HoughConfig,
+                       tiers: tuple[int, ...] | None = None,
+                       theta_bins: jax.Array | None = None,
+                       corridors: jax.Array | None = None, *,
+                       scatter: bool = True) -> jax.Array:
+    """Tiered ``max_edges`` dispatch for the fused path (trace-safe).
+
+    Two tier selectors, split by where the buffer size must be known:
+
+    * **Host backends (xla/stencil):** the whole fused module — Canny,
+      corridor filter, exact count, compaction, vote — is one jitted
+      program.  The weights exist as an in-module intermediate, so the
+      selector counts them *exactly* (post-corridor, max over a batch)
+      and ``lax.switch``es over compact+vote branches, just like the
+      staged ``hough_transform_tiered``.  Same count ⇒ same tier as
+      staged at full coverage, and corridors genuinely shrink the tier
+      on cluttered frames.
+    * **Pallas (pallas/interpret):** kernel A's compaction buffer is an
+      output shape fixed before launch, so the tier comes from the
+      *pre-Canny* downsampled-gradient bound
+      (``canny.estimate_edge_count_device``), made corridor-aware.  The
+      estimate is an upper bound (validated per scenario family), so it
+      over-provisions — a larger-than-needed tier votes zero rows and
+      stays bit-exact.
+
+    Either way only a genuine overflow of the cap tier drops edges,
+    exactly like the staged cap.
+    """
+    if not cfg.compact:
+        return _fused_hough(
+            image, canny_cfg, dataclasses.replace(cfg, max_edges=None),
+            theta_bins, corridors, scatter=scatter,
+        )
+    H, W = image.shape[-2:]
+    if tiers is None:
+        tiers = max_edge_tiers(H, W)
+    if ops.resolve_impl(cfg.impl) in ("xla", "stencil"):
+        return _fused_hough_tiered_exact(
+            image, canny_cfg, cfg, tuple(tiers), theta_bins, corridors,
+            scatter=scatter,
+        )
+    # function-level: plan imports both (and the package re-exports the
+    # ``canny`` *function*, so import the module by its full path)
+    from .canny import estimate_edge_count_device
+
+    est = estimate_edge_count_device(image, canny_cfg, corridors=corridors)
+    idx = jnp.minimum(
+        sum((est > t).astype(jnp.int32) for t in tiers),
+        len(tiers) - 1,
+    )
+    cfgs = [dataclasses.replace(cfg, max_edges=int(t)) for t in tiers]
+
+    def make(c):
+        # theta_bins/corridors captured by closure (lax.switch branches may
+        # close over tracers) so every branch keeps one operand signature.
+        def branch(img):
+            return _fused_hough(img, canny_cfg, c, theta_bins, corridors,
+                                scatter=scatter)
+
+        return branch
+
+    return jax.lax.switch(idx, [make(c) for c in cfgs], image)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("canny_cfg", "cfg", "tiers", "scatter")
+)
+def _fused_hough_tiered_exact(image: jax.Array, canny_cfg, cfg: HoughConfig,
+                              tiers: tuple[int, ...],
+                              theta_bins: jax.Array | None = None,
+                              corridors: jax.Array | None = None, *,
+                              scatter: bool = True) -> jax.Array:
+    """Exact-count fused tiering for host backends: one module end to end.
+
+    Canny runs once; the exact post-corridor edge count (the same
+    reduction as ``hough_transform_tiered``, on weights instead of the
+    edge map) picks the branch; each branch compacts via the raster
+    index scatter and votes.  Bit-exact with the staged path at full
+    corridor/band coverage because the count — hence the tier — matches
+    the staged dispatch and compaction preserves raster order.
+    """
+    if (theta_bins is None) != (cfg.theta_band is None):
+        raise ValueError(
+            "HoughConfig.theta_band and the theta_bins argument come as a "
+            f"pair (got theta_band={cfg.theta_band!r}, "
+            f"theta_bins={'set' if theta_bins is not None else None!r})."
+        )
+    if theta_bins is not None and theta_bins.shape != (cfg.theta_band,):
+        raise ValueError(
+            f"theta_bins must have the plan's static band shape "
+            f"({cfg.theta_band},); got {theta_bins.shape}."
+        )
+    _check_corridors(corridors, cfg)
+    H, W = image.shape[-2:]
+    n_rho = rho_bins(H, W, cfg)
+    trig = jnp.asarray(hough_trig(H, W, cfg))
+    w = ops.fused_weights(
+        image, corridors, cfg=canny_cfg, edge_threshold=cfg.edge_threshold,
+        impl=cfg.impl,
+    )
+    worst = (w > 0).sum(axis=-1).max().astype(jnp.int32)
+    idx = jnp.minimum(
+        sum((worst > t).astype(jnp.int32) for t in tiers),
+        len(tiers) - 1,
+    )
+
+    def make(t):
+        # theta_bins captured by closure (lax.switch branches may close
+        # over tracers) so every branch keeps one operand signature.
+        def branch(w):
+            cxy, cw = ops.compact_raster(
+                w, width=W, max_edges=int(t), impl=cfg.impl
+            )
+            return ops.hough_vote(
+                cxy, cw, trig, n_rho=n_rho, impl=cfg.impl, compact=False,
+                theta_bins=theta_bins, scatter_back=scatter,
+            )
+
+        return branch
+
+    return jax.lax.switch(idx, [make(t) for t in tiers], w)
 
 
 def hough_paper_loop(edges: jax.Array, cfg: HoughConfig = HoughConfig()

@@ -36,7 +36,8 @@ import numpy as np
 
 from .canny import CannyConfig, canny
 from .hough import (
-    HoughConfig, hough_transform, hough_transform_tiered, max_edge_tiers,
+    HoughConfig, fused_hough, fused_hough_tiered, hough_transform,
+    hough_transform_tiered, max_edge_tiers,
 )
 from .lines import LinesConfig, get_lines, render_lines
 
@@ -47,6 +48,13 @@ class PipelineConfig:
     hough: HoughConfig = HoughConfig()
     lines: LinesConfig = LinesConfig()
     render_output: bool = False   # paper's elision: off by default
+    # Fused hot path (kernels/fused_detect.py): canny -> corridor filter ->
+    # compact -> vote with no intermediate HBM arrays.  Requires
+    # ``hough.compact=True`` (the fused kernel's output IS the compacted
+    # edge list).  The ``edges`` field of the result is a zeros placeholder
+    # on this path — eliding the edge map is the point of the fusion.
+    # Bit-exact with the staged path at full corridor/band coverage.
+    fused: bool = False
 
 
 class DetectionResult(NamedTuple):
@@ -126,7 +134,8 @@ def downshift_frame(raw, shape: tuple[int, int]
 
 @functools.partial(jax.jit, static_argnames=("cfg", "tiers"))
 def _detect(cfg: PipelineConfig, image: jax.Array,
-            theta_bins: jax.Array | None = None, *,
+            theta_bins: jax.Array | None = None,
+            corridors: jax.Array | None = None, *,
             tiers: tuple[int, ...] | None = None) -> DetectionResult:
     """The one jitted detection body, shared across detector instances.
 
@@ -138,18 +147,39 @@ def _detect(cfg: PipelineConfig, image: jax.Array,
     round-trips.  ``theta_bins`` (required iff ``cfg.hough.theta_band`` is
     set) carries the prediction gate: the vote sweeps only those theta
     bins (``core/tracking.py`` slides the gate frame to frame; the band
-    length is the static part, so the program never recompiles)."""
+    length is the static part, so the program never recompiles).
+    ``corridors`` (required iff ``cfg.hough.corridors`` is set — fused
+    path only) is the (C, 4) rho-window set that pre-filters edge pixels.
+    """
     H, W = image.shape[-2:]
-    edges = canny(image, cfg.canny)
-    # gated frames stay in band space end to end: the vote emits the
-    # (n_rho, theta_band) accumulator and get_lines searches exactly those
-    # columns, so the whole post-Canny stack scales with the band
-    if tiers is None:
-        votes = hough_transform(edges, cfg.hough, theta_bins,
-                                scatter=False)
-    else:
-        votes = hough_transform_tiered(edges, cfg.hough, tiers, theta_bins,
+    if cfg.fused:
+        # Fused hot path: no edge map ever materializes — kernel A emits
+        # the compacted (corridor-filtered) edge list straight from the
+        # frame, and the result's ``edges`` field is a zeros placeholder.
+        edges = jnp.zeros(image.shape, jnp.uint8)
+        if tiers is None:
+            votes = fused_hough(image, cfg.canny, cfg.hough, theta_bins,
+                                corridors, scatter=False)
+        else:
+            votes = fused_hough_tiered(image, cfg.canny, cfg.hough, tiers,
+                                       theta_bins, corridors,
                                        scatter=False)
+    else:
+        if corridors is not None:
+            raise ValueError(
+                "corridors is a fused-path argument; this plan is staged "
+                "(PipelineConfig.fused=False)"
+            )
+        edges = canny(image, cfg.canny)
+        # gated frames stay in band space end to end: the vote emits the
+        # (n_rho, theta_band) accumulator and get_lines searches exactly
+        # those columns, so the whole post-Canny stack scales with the band
+        if tiers is None:
+            votes = hough_transform(edges, cfg.hough, theta_bins,
+                                    scatter=False)
+        else:
+            votes = hough_transform_tiered(edges, cfg.hough, tiers,
+                                           theta_bins, scatter=False)
     lines, valid, peaks = get_lines(
         votes, height=H, width=W, cfg=cfg.lines, theta_bins=theta_bins
     )
@@ -211,6 +241,11 @@ class DetectionPlan:
     @classmethod
     def build(cls, cfg: PipelineConfig, height: int, width: int, *,
               batch: int | None = None) -> "DetectionPlan":
+        if cfg.fused and not cfg.hough.compact:
+            raise ValueError(
+                "PipelineConfig.fused requires hough.compact=True: the "
+                "fused kernel's output IS the compacted edge list."
+            )
         resolved, tiers = resolve_static(cfg, height, width)
         return cls(resolved, height, width, batch, tiers)
 
@@ -250,12 +285,41 @@ class DetectionPlan:
             )
         )
 
+    def with_fused(self, corridors: int | None = None) -> "DetectionPlan":
+        """The fused-hot-path twin of this plan, optionally with the
+        rho-corridor pre-filter bound to a static corridor count.
+
+        Same pattern as ``with_theta_band``: the fused binding and the
+        corridor *count* are config-static knobs of the jitted body (one
+        compiled program per value), while the corridor *windows* are
+        runtime data passed to ``run``.  Callers (the tracking loop, the
+        detection service) hold the staged plan and this twin, dispatching
+        fused only when the tracker's corridors are healthy — the staged
+        plan is the full-sweep fallback on cold start and overflow.
+        Requires ``hough.compact=True`` (checked at build).
+        """
+        cfg = dataclasses.replace(
+            self.cfg, fused=True,
+            hough=dataclasses.replace(self.cfg.hough, corridors=corridors),
+        )
+        if cfg == self.cfg:
+            return self
+        if not cfg.hough.compact:
+            raise ValueError(
+                "with_fused requires hough.compact=True: the fused "
+                "kernel's output IS the compacted edge list."
+            )
+        return dataclasses.replace(self, cfg=cfg)
+
     # --- execution ----------------------------------------------------
     def _dispatch(self, images: jax.Array,
-                  theta_bins: jax.Array | None = None) -> DetectionResult:
-        return _detect(self.cfg, images, theta_bins, tiers=self.tiers)
+                  theta_bins: jax.Array | None = None,
+                  corridors: jax.Array | None = None) -> DetectionResult:
+        return _detect(self.cfg, images, theta_bins, corridors,
+                       tiers=self.tiers)
 
-    def run(self, images, theta_bins=None) -> DetectionResult:
+    def run(self, images, theta_bins=None, corridors=None
+            ) -> DetectionResult:
         """Detect on a frame (H, W) or batch (N <= bucket, H, W).
 
         Batches shorter than the bucket are padded with zero frames (every
@@ -263,14 +327,18 @@ class DetectionPlan:
         results) and the result is sliced back to the true length.
         ``theta_bins`` — required exactly when the plan's config sets
         ``theta_band`` — is the (theta_band,) int32 prediction gate, shared
-        across the batch.
+        across the batch.  ``corridors`` — required exactly when the
+        config sets ``hough.corridors`` (fused plans) — is the
+        (corridors, 4) f32 rho-window set, likewise shared.
         """
         if theta_bins is not None:
             theta_bins = jnp.asarray(theta_bins, jnp.int32)
+        if corridors is not None:
+            corridors = jnp.asarray(corridors, jnp.float32)
         if self.batch is None:
             assert images.shape[-2:] == (self.height, self.width), (
                 images.shape, self)
-            return self._dispatch(images, theta_bins)
+            return self._dispatch(images, theta_bins, corridors)
         n = images.shape[0]
         assert (images.ndim == 3 and n <= self.batch
                 and images.shape[-2:] == (self.height, self.width)), (
@@ -281,7 +349,7 @@ class DetectionPlan:
                 jnp.zeros((self.batch - n, self.height, self.width),
                           images.dtype),
             ])
-        res = self._dispatch(images, theta_bins)
+        res = self._dispatch(images, theta_bins, corridors)
         if n == self.batch:
             return res
         return DetectionResult(

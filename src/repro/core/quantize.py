@@ -2,8 +2,11 @@
 
 The paper replaces the pipeline's floats with integers "without any loss in
 accuracy", matching Gemmini's int8 array + wide accumulator.  The same
-machinery serves three places in this framework:
+machinery serves four places in this framework:
 
+  * the low-precision gradient tier of the detection stack
+    (``CannyConfig(grad_dtype="int8")`` -> :func:`quantize_frames`, the
+    per-frame entry point the ``DetectionPlan`` pipeline lowers through),
   * the integer Canny/Hough path (``CannyConfig(integer=True)``),
   * int8 GEMM operands for ``tiled_matmul`` (MXU int8 path),
   * int8 error-feedback gradient compression (``train/compression.py``) for
@@ -39,6 +42,20 @@ def quantize(x: jax.Array, *, bits: int = 8, axis=None) -> Quantized:
 
 def dequantize(q: Quantized) -> jax.Array:
     return q.values.astype(jnp.float32) * q.scale
+
+
+def quantize_frames(images: jax.Array, *, bits: int = 8) -> Quantized:
+    """Per-frame symmetric quantization of an ``(..., H, W)`` frame stack.
+
+    The detection-stack entry point (this module predates ``DetectionPlan``
+    and used to offer only per-tensor scales): one scale per frame
+    (``axis=(-2, -1)``, keepdims so it broadcasts straight back over the
+    frame), so a dark frame batched with a bright one keeps its own dynamic
+    range instead of inheriting the batch max.  Traced-safe — the plan
+    pipeline calls it under jit.
+    """
+    return quantize(jnp.asarray(images, jnp.float32), bits=bits,
+                    axis=(-2, -1))
 
 
 def quantize_weights_int8(params, *, compute_dtype=jnp.bfloat16):

@@ -90,6 +90,15 @@ class TrackerConfig:
     # so a warm-started coast can never outlive a real blackout.
     warm_frames: int = 10
     band_half_deg: float = 8.0    # per-track half-width of the Hough gate
+    # Per-track half-width (px) of the fused path's rho corridor: the
+    # window around a predicted lane inside which edge pixels may vote
+    # (``corridors()``).  Sized to cover the association gate
+    # (``gate_rho``) plus the worst-case rho drift of a real edge pixel
+    # under the prediction's theta error (~s*sin(dtheta): a pixel ~200 px
+    # along the lane under a ~1.7 deg error moves ~6 px in rho) with
+    # slack — a lane's edge pixels must stay in-corridor whenever the
+    # association gate would still claim the lane.
+    corridor_half_px: float = 25.0
     # Pre-association doublet merge: a painted stroke has two raster
     # sides, so the detector legitimately yields peak pairs a few rho bins
     # apart (what metrics.DetectionScore counts as ``dup``).  Tracking
@@ -466,6 +475,45 @@ class LaneTracker:
             out = out + [out[0]] * (band - len(out))
         return np.asarray(out, np.int32)
 
+    # --- the rho corridors (fused hot path) -----------------------------
+    def corridors(self, max_corridors: Optional[int] = None, *,
+                  half_px: Optional[float] = None) -> Optional[np.ndarray]:
+        """Rho windows the *next* frame's fused kernel may keep edges in.
+
+        The spatial twin of :meth:`gate_bins`: one ``[cos, sin, rho_lo,
+        rho_hi]`` row per live track (tentative included — a newborn lane's
+        edge pixels must survive the filter so it can confirm or die) at
+        the one-frame-ahead prediction, with half-width
+        ``TrackerConfig.corridor_half_px`` (overridable via ``half_px``).
+        Health rules are *identical* to the theta gate — None ("keep every
+        pixel: run the staged full sweep") on cold start, any confirmed
+        track coasting, an open rescan window, or (with ``max_corridors``
+        set) window overflow — so a pipeline that consults both gates
+        degrades them together.  With ``max_corridors`` the result is
+        padded to the plan's static (max_corridors, 4) shape by repeating
+        the first row (the kernel's any-corridor OR is idempotent);
+        ``max_corridors=None`` returns the raw unpadded rows for callers
+        that union across sessions first (``serve/detection.py``).
+        """
+        conf = [t for t in self._tracks if t.confirmed]
+        if not conf or self._rescan > 0:
+            return None
+        if any(t.misses > 0 for t in conf):
+            return None
+        half = float(self.cfg.corridor_half_px
+                     if half_px is None else half_px)
+        rows = []
+        for t in self._tracks:
+            rho_p = t.rho + t.drho
+            th_p = t.theta + t.dtheta
+            rows.append([math.cos(th_p), math.sin(th_p),
+                         rho_p - half, rho_p + half])
+        if max_corridors is not None:
+            if len(rows) > max_corridors:
+                return None
+            rows = rows + [rows[0]] * (max_corridors - len(rows))
+        return np.asarray(rows, np.float32).reshape(-1, 4)
+
 
 def tracks_as_peaks(tracks: Sequence[Track]) -> tuple[np.ndarray, np.ndarray]:
     """(M, 2) peaks + all-true valid mask from reported tracks — the
@@ -500,27 +548,54 @@ class TrackingPipeline:
     ``gated_frames`` / ``full_frames`` count the split —
     ``benchmarks/tracking_suite.py`` requires the steady state to be
     (almost) all gated.
+
+    ``fused_corridors`` (requires ``cfg.hough.compact=True`` and a theta
+    band) additionally builds the fused-hot-path twin of the gated plan
+    (``DetectionPlan.with_fused``): a steady-state frame whose tracker
+    yields BOTH a healthy theta gate and healthy rho corridors runs the
+    fused kernel (corridor-filtered, no edge map in HBM); any health
+    failure falls back exactly as before (gated, then full sweep).
+    ``fused_frames`` counts those dispatches.
     """
 
     def __init__(self, cfg: PipelineConfig = PipelineConfig(),
                  tracker: TrackerConfig = TrackerConfig(), *,
                  height: int = 240, width: int = 320,
-                 theta_band: Optional[int] = 40):
+                 theta_band: Optional[int] = 40,
+                 fused_corridors: Optional[int] = None):
         if cfg.hough.theta_band is not None:
             raise ValueError(
                 "pass the gate width via theta_band=, not through the "
                 "config: the pipeline derives the gated plan itself"
+            )
+        if cfg.hough.corridors is not None or cfg.fused:
+            raise ValueError(
+                "pass the corridor count via fused_corridors=, not "
+                "through the config: the pipeline derives the fused plan "
+                "itself"
+            )
+        if fused_corridors is not None and theta_band is None:
+            raise ValueError(
+                "fused_corridors requires a theta_band: the fused plan "
+                "is the gated plan's twin"
             )
         self.full_plan = DetectionPlan.build(cfg, height, width)
         self.gated_plan = (
             self.full_plan.with_theta_band(theta_band)
             if theta_band is not None else None
         )
+        # with_fused raises unless cfg.hough.compact=True
+        self.fused_plan = (
+            self.gated_plan.with_fused(fused_corridors)
+            if fused_corridors is not None else None
+        )
         self.n_theta = cfg.hough.n_theta
         self.theta_band = theta_band
+        self.fused_corridors = fused_corridors
         self.tracker = LaneTracker(tracker)
         self.gated_frames = 0
         self.full_frames = 0
+        self.fused_frames = 0
 
     def process(self, frame) -> TrackedFrame:
         img = load_frame(frame)
@@ -532,7 +607,13 @@ class TrackingPipeline:
             res = self.full_plan.run(img)
             self.full_frames += 1
         else:
-            res = self.gated_plan.run(img, bins)
+            cors = (self.tracker.corridors(self.fused_corridors)
+                    if self.fused_plan is not None else None)
+            if cors is not None:
+                res = self.fused_plan.run(img, bins, cors)
+                self.fused_frames += 1
+            else:
+                res = self.gated_plan.run(img, bins)
             self.gated_frames += 1
         tracks = self.tracker.step(np.asarray(res.peaks),
                                    np.asarray(res.valid))

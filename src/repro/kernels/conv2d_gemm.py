@@ -35,9 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
+from .tiles import acc_dtype as _acc_dtype
+from .tiles import round_up as _round_up
 
 
 def _conv_kernel(*refs, bh, bw, kh, kw, acc_dtype):
@@ -101,8 +100,9 @@ def conv2d_gemm(
     a leading batch grid axis.
 
     ``bh``/``bw`` tile the rows/columns; non-multiple shapes are padded up
-    and cropped.  Integer inputs accumulate in int32 (the paper's integer
-    pipeline); float inputs accumulate in f32.
+    and cropped.  Accumulation follows ``tiles.acc_dtype``: int32 for
+    integer inputs (the paper's integer pipeline), f16 for f16 inputs (the
+    low-precision gradient tier), f32 otherwise.
     """
     squeeze = image.ndim == 2
     if squeeze:
@@ -110,7 +110,7 @@ def conv2d_gemm(
     N, H, W = image.shape
     n_masks, kh, kw = masks.shape
     integer = jnp.issubdtype(image.dtype, jnp.integer)
-    acc_dtype = jnp.int32 if integer else jnp.float32
+    acc_dtype = _acc_dtype(image.dtype)
     if out_dtype is None:
         out_dtype = jnp.int32 if integer else image.dtype
 

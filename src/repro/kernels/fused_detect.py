@@ -1,0 +1,139 @@
+"""Fused canny -> corridor filter -> compact Pallas kernel (kernel A).
+
+The staged hot path runs three dispatches — gradient/canny, edge
+compaction, Hough vote — and each round-trips HBM: the gradient stack and
+the edge mask are materialized as full (H, W) arrays between kernels.
+This module is the fusion the ROADMAP's "one-kernel hot path" item asks
+for, split in two at the compaction boundary (the one place the dataflow
+genuinely changes shape):
+
+  * **Kernel A (here):** per frame, compute the whole Canny front end,
+    threshold, optionally drop pixels outside the tracker's predicted
+    rho corridors, and prefix-sum-compact the survivors — all in VMEM.
+    The only HBM traffic is the input frame in and the compacted
+    ``(max_edges, 3)`` edge list out; no gradient, magnitude, or edge-mask
+    array ever hits HBM.
+  * **Kernel B:** the existing ``hough_vote`` kernel, consuming the
+    compacted list directly (``compact=False`` — it is already compact).
+
+Grid is ``(batch,)`` with one full frame per step: the target workloads
+(240x320 .. 480x640 f32) fit VMEM whole, and whole-frame compaction is
+what keeps the fused path **bit-exact** with the staged one — a per-tile
+compaction quota would drop different edges on overflow.  The kernel body
+is written at the jnp level and calls the *same* Canny math as the staged
+path (``core.canny.canny`` with the impl pinned to the pure-jnp oracle, so
+the body never nests another pallas_call): identical ops on identical
+inputs give the identical edge set, and vote weights are small-integer
+sums in f32, so bit-exactness follows structurally.  This lowers today
+under ``interpret=True`` (and is validated that way); compiling the body
+through Mosaic on a real TPU is the re-scoped hardware item in ROADMAP.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _fused_kernel(img_ref, cor_ref, *rest, cfg, edge_threshold,
+                  max_edges, use_corridors):
+    from repro.core.canny import canny as _canny  # function-level: cycle
+
+    mask_refs, (oxy_ref, ow_ref) = rest[:-2], rest[-2:]
+    H, W = img_ref.shape[-2:]
+    img = img_ref[...].reshape(H, W)
+    # uint8 {0, 255}; cfg.impl pinned to "xla", conv masks fed as operands
+    # (a Pallas body may not capture array constants).
+    edges = _canny(img, cfg, tuple(m[...] for m in mask_refs))
+    flat = edges.reshape(H * W)
+    w = (flat >= edge_threshold).astype(jnp.float32)
+
+    # Raster (x, y, 1) coordinates — broadcasted_iota, never 1-D iota.
+    ii = jax.lax.broadcasted_iota(jnp.float32, (H, W), 0)
+    jj = jax.lax.broadcasted_iota(jnp.float32, (H, W), 1)
+    xy = jnp.stack(
+        [jj.ravel(), ii.ravel(), jnp.ones(H * W, jnp.float32)], axis=1
+    )
+
+    if use_corridors:
+        w = w * ref.corridor_keep(xy, cor_ref[...]).astype(jnp.float32)
+
+    # Whole-frame prefix-sum compaction (same math as
+    # ``hough_vote._compact_one``): edge k lands in row k, overflow drops.
+    mask = w > 0
+    pos = jnp.where(mask, jnp.cumsum(mask) - 1, max_edges)
+    cxy = (
+        jnp.zeros((max_edges, 3), jnp.float32).at[pos].set(xy, mode="drop")
+    )
+    cw = jnp.zeros((max_edges,), jnp.float32).at[pos].set(w, mode="drop")
+    oxy_ref[...] = cxy[None]
+    ow_ref[...] = cw[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "edge_threshold", "max_edges", "interpret"),
+)
+def fused_detect(image: jax.Array, corridors: jax.Array | None = None, *,
+                 cfg, edge_threshold: float, max_edges: int,
+                 interpret: bool = False):
+    """Kernel A: frame(s) -> compacted (and corridor-filtered) edge list.
+
+    Args:
+      image:     (H, W) or (N, H, W) frame stack.
+      corridors: optional (C, 4) rho windows (``ref.corridor_keep`` rows),
+                 shared across the batch; None disables filtering.
+      cfg:       ``CannyConfig`` — the impl is pinned to the jnp oracle
+                 inside the kernel body regardless of what it says.
+      edge_threshold: vote-weight threshold on the canny output (the
+                 staged ``HoughConfig.edge_threshold``).
+      max_edges: static compacted buffer length.
+
+    Returns ``(cxy, cw)``: (..., max_edges, 3) homogeneous coordinates and
+    (..., max_edges) f32 weights, matching ``ref.fused_detect``.
+    """
+    from repro.core.canny import gradient_masks  # function-level: cycle
+
+    cfg = dataclasses.replace(cfg, impl="xla")
+    squeeze = image.ndim == 2
+    if squeeze:
+        image = image[None]
+    N, H, W = image.shape
+    use_corridors = corridors is not None
+    if corridors is None:
+        corridors = jnp.zeros((1, 4), jnp.float32)  # placeholder operand
+    cor = jnp.asarray(corridors, jnp.float32)
+    C = cor.shape[0]
+    masks = tuple(jnp.asarray(m) for m in gradient_masks(cfg))
+
+    oxy, ow = pl.pallas_call(
+        functools.partial(
+            _fused_kernel, cfg=cfg, edge_threshold=edge_threshold,
+            max_edges=max_edges, use_corridors=use_corridors,
+        ),
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, H, W), lambda n: (n, 0, 0)),
+            pl.BlockSpec((C, 4), lambda n: (0, 0)),
+        ] + [
+            pl.BlockSpec(m.shape, (lambda n: (0,) * 3)) for m in masks
+        ],
+        out_specs=[
+            pl.BlockSpec((1, max_edges, 3), lambda n: (n, 0, 0)),
+            pl.BlockSpec((1, max_edges), lambda n: (n, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, max_edges, 3), jnp.float32),
+            jax.ShapeDtypeStruct((N, max_edges), jnp.float32),
+        ],
+        interpret=interpret,
+    )(image, cor, *masks)
+    if squeeze:
+        return oxy[0], ow[0]
+    return oxy, ow

@@ -41,9 +41,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
+from .tiles import round_up as _round_up
 
 
 def _compact_one(xy: jax.Array, w: jax.Array, max_edges: int):

@@ -12,6 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .tiles import acc_dtype as _acc_dtype
+
 
 def tiled_matmul(x: jax.Array, y: jax.Array, *, out_dtype=None) -> jax.Array:
     integer = jnp.issubdtype(x.dtype, jnp.integer)
@@ -27,7 +29,7 @@ def conv2d_gemm(image: jax.Array, masks: jax.Array, *, out_dtype=None
     H, W = image.shape[-2:]
     n_masks, kh, kw = masks.shape
     integer = jnp.issubdtype(image.dtype, jnp.integer)
-    acc = jnp.int32 if integer else jnp.float32
+    acc = _acc_dtype(image.dtype)
     if out_dtype is None:
         out_dtype = jnp.int32 if integer else image.dtype
     pad = [(0, 0)] * (image.ndim - 2) + [
@@ -59,7 +61,7 @@ def conv2d_stencil(image: jax.Array, masks: jax.Array, *, out_dtype=None
     H, W = image.shape[-2:]
     n_masks, kh, kw = masks.shape
     integer = jnp.issubdtype(image.dtype, jnp.integer)
-    acc = jnp.int32 if integer else jnp.float32
+    acc = _acc_dtype(image.dtype)
     if out_dtype is None:
         out_dtype = jnp.int32 if integer else image.dtype
     pad = [(0, 0)] * (image.ndim - 2) + [
@@ -78,7 +80,8 @@ def conv2d_stencil(image: jax.Array, masks: jax.Array, *, out_dtype=None
     return jnp.stack(outs, axis=-3).astype(out_dtype)
 
 
-def grad_hits(image: jax.Array, *, stride: int, thresh: float
+def grad_hits(image: jax.Array, *, stride: int, thresh: float,
+              corridors: jax.Array | None = None, widen: float = 0.0
               ) -> jax.Array:
     """Downsampled finite-difference gradient hit count (per frame).
 
@@ -90,14 +93,36 @@ def grad_hits(image: jax.Array, *, stride: int, thresh: float
     Element-wise + reduction — VPU work, no Pallas variant needed; it lives
     here so the estimator shares the kernel package's dispatch/oracle
     structure and a future fused on-device tuner has one seam to replace.
+
+    When ``corridors`` (C, 4) rho windows are given (see ``corridor_keep``),
+    coarse hits outside every corridor are not counted — the fused path's
+    tier selector sizes its buffer for the *filtered* edge set.  ``widen``
+    inflates each window (in pixels) so a coarse cell whose fine pixels
+    straddle a corridor edge still counts; callers pass ~2*stride, the max
+    rho drift across a stride-wide cell plus slack, to keep the estimate an
+    upper bound.
     """
     img = jnp.asarray(image, jnp.float32)
     sub = img[..., ::stride, ::stride]
     gx = jnp.abs(sub[..., :, 1:] - sub[..., :, :-1])[..., :-1, :]
     gy = jnp.abs(sub[..., 1:, :] - sub[..., :-1, :])[..., :, :-1]
-    return (jnp.maximum(gx, gy) >= thresh).sum(
-        axis=(-2, -1), dtype=jnp.int32
-    )
+    hit = jnp.maximum(gx, gy) >= thresh
+    if corridors is not None:
+        Hs, Ws = hit.shape[-2:]
+        # Fine-pixel coordinates of each coarse cell's top-left corner.
+        yy = jnp.arange(Hs, dtype=jnp.float32)[:, None] * stride
+        xx = jnp.arange(Ws, dtype=jnp.float32)[None, :] * stride
+        cor = jnp.asarray(corridors, jnp.float32)
+        rho = (
+            xx[None] * cor[:, 0, None, None]
+            + yy[None] * cor[:, 1, None, None]
+        )  # (C, Hs, Ws)
+        keep = (
+            (rho >= (cor[:, 2, None, None] - widen))
+            & (rho <= (cor[:, 3, None, None] + widen))
+        ).any(axis=0)
+        hit = hit & keep
+    return hit.sum(axis=(-2, -1), dtype=jnp.int32)
 
 
 def hough_vote(xy: jax.Array, weights: jax.Array, trig: jax.Array,
@@ -173,6 +198,116 @@ def hough_vote_gated(xy: jax.Array, weights: jax.Array, trig: jax.Array,
         jnp.zeros((trig.shape[1],), bool).at[theta_bins].set(True)
     )
     return jnp.where(mask, full, jnp.zeros_like(full))
+
+
+def corridor_keep(xy: jax.Array, corridors: jax.Array) -> jax.Array:
+    """Which pixels fall inside at least one rho corridor.
+
+    ``corridors`` is (C, 4) f32 rows ``[cos(theta_c), sin(theta_c),
+    rho_lo, rho_hi]`` — a window around one predicted lane in *signed,
+    unshifted* rho (``x*cos + y*sin``, the same convention ``get_lines``
+    decodes peaks into, so tracker state plugs in directly).  A pixel
+    survives if its rho along any corridor's normal lands in that
+    corridor's window; padding rows just repeat a real corridor (the OR is
+    idempotent).  ``hough.full_corridors`` builds windows that pass
+    everything.
+
+    ``xy`` is (..., P, C>=2) with columns (x, y, ...); returns (..., P) bool.
+    """
+    xyf = xy[..., :2].astype(jnp.float32)
+    cor = jnp.asarray(corridors, jnp.float32)
+    rho = xyf @ cor[:, :2].T  # (..., P, C)
+    return ((rho >= cor[:, 2]) & (rho <= cor[:, 3])).any(axis=-1)
+
+
+def fused_weights(image: jax.Array, *, cfg, edge_threshold: float,
+                  corridors: jax.Array | None = None) -> jax.Array:
+    """Flat edge weights of the fused hot path, pre-compaction.
+
+    Runs the full Canny front end (forced onto the pure-jnp "xla" impl so
+    the oracle never recurses into Pallas), weights pixels by the edge
+    threshold exactly as the staged ``hough`` stage does, and zeroes the
+    weights of pixels outside every corridor.  Returns ``(..., H*W)`` f32 —
+    the intermediate the fused module's exact tier selector counts before
+    compaction (``core.hough.fused_hough_tiered`` on the xla path).
+    """
+    import dataclasses
+
+    from repro.core.canny import canny as _canny  # function-level: cycle
+
+    edges = _canny(image, dataclasses.replace(cfg, impl="xla"))
+    H, W = edges.shape[-2:]
+    flat = edges.reshape(edges.shape[:-2] + (H * W,))
+    w = (flat >= edge_threshold).astype(jnp.float32)
+    if corridors is not None:
+        jj, ii = jnp.meshgrid(jnp.arange(W), jnp.arange(H))
+        xy = jnp.stack([jj.ravel(), ii.ravel()], axis=1).astype(jnp.float32)
+        w = w * corridor_keep(xy, corridors).astype(jnp.float32)
+    return w
+
+
+def compact_raster(weights: jax.Array, *, width: int, max_edges: int):
+    """Raster-layout edge compaction: scatter flat *indices*, not rows.
+
+    The generic ``compact_edges`` moves ``(x, y, 1)`` coordinate rows
+    through the scatter because its ``xy`` operand is arbitrary.  The
+    fused path owns the raster layout, so the pixel coordinate is a pure
+    function of the flat index — compaction only needs to scatter one
+    int32 per surviving pixel and reconstruct ``(idx % W, idx // W, 1)``
+    from the ``(max_edges,)`` result afterwards.  On a host backend this
+    cuts the scatter payload 4x (the dominant compaction cost); on the
+    TPU kernel it is the natural VMEM form (kernel A emits an index list).
+
+    Same contract as ``compact_edges``: raster order, rows past the edge
+    count zeroed, edges beyond ``max_edges`` dropped — and bit-identical
+    output (integer pixel coordinates are exact in f32 either way).
+    """
+    if weights.ndim == 2:
+        return jax.vmap(
+            lambda w: compact_raster(w, width=width, max_edges=max_edges)
+        )(weights)
+    n_pix = weights.shape[-1]
+    mask = weights > 0
+    pos = jnp.where(mask, jnp.cumsum(mask) - 1, max_edges)
+    idx = (
+        jnp.zeros((max_edges,), jnp.int32)
+        .at[pos]
+        .set(jnp.arange(n_pix, dtype=jnp.int32), mode="drop")
+    )
+    slot = jnp.arange(max_edges) < mask.sum()
+    cw = jnp.where(slot, weights[idx], 0.0)
+    cxy = jnp.stack(
+        [
+            (idx % width).astype(jnp.float32),
+            (idx // width).astype(jnp.float32),
+            jnp.ones((max_edges,), jnp.float32),
+        ],
+        axis=1,
+    )
+    return jnp.where(slot[:, None], cxy, 0.0), cw
+
+
+def fused_detect(image: jax.Array, *, cfg, edge_threshold: float,
+                 max_edges: int, corridors: jax.Array | None = None):
+    """Fused-hot-path oracle: gradient -> threshold -> corridor filter ->
+    compact, in one jnp function.
+
+    Semantics of record for ``kernels.fused_detect`` (the Pallas kernel A):
+    ``fused_weights`` produces the thresholded, corridor-filtered weights
+    and ``compact_raster`` compacts the survivors in raster order into a
+    static ``(max_edges, 3)`` homogeneous ``(x, y, 1)`` buffer (first
+    ``max_edges`` kept, trailing edges dropped — the same overflow contract
+    as ``compact_edges``).  Kernel B is the existing vote kernel, fed this
+    buffer.
+
+    Returns ``(cxy, cw)`` of shape ``(..., max_edges, 3)`` /
+    ``(..., max_edges)`` in f32.
+    """
+    W = image.shape[-1]
+    w = fused_weights(
+        image, cfg=cfg, edge_threshold=edge_threshold, corridors=corridors
+    )
+    return compact_raster(w, width=W, max_edges=max_edges)
 
 
 def attention(q, k, v, *, causal=True, window=None, q_offset=0):

@@ -1,0 +1,48 @@
+"""Shared tiling helpers for the kernels package.
+
+Every Pallas kernel here tiles its operands the same way — round shapes up
+to block multiples, pad, crop on the way out — and until the fused
+detection kernel arrived each module kept a private copy of the
+arithmetic.  This is the single home: ``conv2d_gemm``, ``hough_vote`` and
+``fused_detect`` all import from it, so a retune (e.g. a different lane
+multiple for a new dtype) lands in one place.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def acc_dtype(dtype):
+    """Accumulator dtype rule shared by the conv kernels and their oracle.
+
+    Integer inputs accumulate in int32 (the paper's integer pipeline); f16
+    inputs accumulate in f16 (the low-precision gradient tier, where the
+    whole point is cheap accumulation); everything else in f32.
+    """
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.int32
+    if dtype == jnp.float16:
+        return jnp.float16
+    return jnp.float32
+
+
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``x``."""
+    return -(-x // m) * m
+
+
+def cdiv(x: int, m: int) -> int:
+    """Ceiling division (grid sizing: ``cdiv(dim, block)`` steps)."""
+    return -(-x // m)
+
+
+def pad_trailing(x, target: int, axis: int = -1):
+    """Zero-pad one axis of ``x`` up to ``target`` (no-op when it fits)."""
+    n = x.shape[axis]
+    if n == target:
+        return x
+    assert n < target, (x.shape, axis, target)
+    pad = [(0, 0)] * x.ndim
+    pad[axis % x.ndim] = (0, target - n)
+    return jnp.pad(x, pad)

@@ -27,6 +27,36 @@ HBM_BW = 819e9             # bytes/s
 LINK_BW = 50e9             # bytes/s/link (ICI)
 
 
+def stage_roofline(name: str, *, bytes: float, dot_flops: float,
+                   wall_s: float) -> dict:
+    """Achieved-vs-peak roofline cell for one measured pipeline stage.
+
+    The LM cells above are *bound* rooflines (no wall clock on the dry-run
+    host); the detection stack has measured walls, so its table reports the
+    achieved side too: ``bytes``/``dot_flops`` come from the compiled HLO
+    (``launch.hlo_cost.analyze``), ``wall_s`` from a warmed wall-clock
+    measurement, and the cell gives achieved GB/s / GFLOP/s against the
+    target chip's peaks.  The bottleneck label is the larger *time* term
+    at peak rates (the classic roofline ridge test) — on the CPU host the
+    achieved fractions are honest about being far from a TPU's peaks; the
+    byte counts themselves are host-independent program facts.
+    """
+    memory_s = bytes / HBM_BW
+    compute_s = dot_flops / PEAK_FLOPS
+    return {
+        "stage": name,
+        "bytes": bytes,
+        "dot_flops": dot_flops,
+        "wall_s": wall_s,
+        "achieved_gbps": bytes / wall_s / 1e9 if wall_s else 0.0,
+        "achieved_gflops": dot_flops / wall_s / 1e9 if wall_s else 0.0,
+        "frac_hbm_peak": bytes / wall_s / HBM_BW if wall_s else 0.0,
+        "frac_flops_peak": dot_flops / wall_s / PEAK_FLOPS
+        if wall_s else 0.0,
+        "bottleneck": "memory" if memory_s >= compute_s else "compute",
+    }
+
+
 def model_flops_per_device(record: dict) -> float:
     """Useful-model FLOPs per device for this cell."""
     from repro.configs import SHAPES, get

@@ -769,12 +769,30 @@ class DetectionService:
                  faults: Optional[object] = None,
                  max_stager_restarts: int = 3,
                  gate_band: Optional[int] = 40,
+                 fused_corridors: Optional[int] = None,
                  device: Optional[object] = None):
         if cfg.hough.theta_band is not None:
             raise ValueError(
                 "pass the gate width via gate_band=, not through the "
                 "config: the service derives gated plans itself"
             )
+        if cfg.hough.corridors is not None or cfg.fused:
+            raise ValueError(
+                "pass the corridor count via fused_corridors=, not "
+                "through the config: the service derives fused plans "
+                "itself"
+            )
+        if fused_corridors is not None:
+            if gate_band is None:
+                raise ValueError(
+                    "fused_corridors requires gate_band: the fused plan "
+                    "is the gated plan's twin"
+                )
+            if not cfg.hough.compact:
+                raise ValueError(
+                    "fused_corridors requires hough.compact=True: the "
+                    "fused kernel's output IS the compacted edge list"
+                )
         self.cfg = cfg
         self.batch_size = batch_size
         self.tracker_cfg = tracker
@@ -789,6 +807,7 @@ class DetectionService:
         self.faults = faults
         self.max_stager_restarts = max_stager_restarts
         self.gate_band = gate_band
+        self.fused_corridors = fused_corridors
         self.device = device
         self.load_controller = LoadController(self)
         # one PlanCache per service: a sharded fleet builds one service
@@ -814,9 +833,9 @@ class DetectionService:
         self._seq = 0
         self._rr = 0            # round-robin cursor (throughput mode)
         self._steps = 0
-        # (shape, render, theta_band) plan bindings already compiled
+        # (shape, render, theta_band, fused) plan bindings already compiled
         self._warmed: set[
-            tuple[tuple[int, int], bool, Optional[int]]
+            tuple[tuple[int, int], bool, Optional[int], bool]
         ] = set()
         self._loader: Optional[PrefetchStager] = None
         self.heartbeats: dict[str, float] = {}   # stager liveness registry
@@ -833,6 +852,7 @@ class DetectionService:
         self.served_downshift = 0     # completed at reduced resolution
         self.served_coast = 0         # answered from tracker prediction
         self.gated_dispatches = 0     # dispatches under a union theta gate
+        self.fused_dispatches = 0     # ...of which ran the fused hot path
         self.evicted = 0              # lower-tier evictions (in rejected_*)
         self.rejected_invalid = 0     # NaN/corrupt frames refused
         self.dispatch_faults = 0      # requests failed by dispatch faults
@@ -1433,6 +1453,45 @@ class DetectionService:
         out += [out[0]] * (self.gate_band - len(out))
         return np.asarray(out, np.int32)
 
+    # --- union rho corridors (fused hot path) ---------------------------
+    def _union_corridors(self, grid: _BucketGrid) -> Optional[np.ndarray]:
+        """Union rho-corridor set for one dispatched grid, or None (stay
+        on the staged path).
+
+        The corridor twin of :meth:`_union_gate`, with one extra
+        admission rule: corridors are rho windows in *native* pixel
+        coordinates, so every occupied slot must be serving at native
+        resolution (``req.downshift == 1``) — a downshifted member's rho
+        scale differs and its session's windows would filter the wrong
+        pixels.  Beyond that, same contract: every slot needs a session
+        whose tracker yields healthy (unpadded) corridors, the union must
+        fit the static ``fused_corridors`` budget, and any failure means
+        the grid runs the staged (gated or full-sweep) path — the fused
+        dispatch is a perf hook, never a correctness dependence.
+        """
+        if self.fused_corridors is None:
+            return None
+        rows: list[np.ndarray] = []
+        for req in grid.slots:
+            if req is None:
+                continue
+            if req.session_id is None or req.downshift != 1:
+                return None
+            tracker = self.sessions.get(req.session_id)
+            if tracker is None:
+                return None
+            c = tracker.corridors()
+            if c is None:
+                return None
+            rows.append(c)
+        if not rows:
+            return None
+        out = np.concatenate(rows, axis=0)
+        if out.shape[0] > self.fused_corridors:
+            return None           # corridor-budget overflow
+        pad = np.tile(out[:1], (self.fused_corridors - out.shape[0], 1))
+        return np.concatenate([out, pad], axis=0).astype(np.float32)
+
     # --- scheduling -----------------------------------------------------
     def _deadline_mode(self) -> bool:
         """QoS scheduling engages iff any *admitted* request carries a
@@ -1532,8 +1591,15 @@ class DetectionService:
         )
         plan = grid.plan.with_render(True) if want_render else grid.plan
         theta_bins = self._union_gate(grid)
+        corridors = None
         if theta_bins is not None:
             plan = plan.with_theta_band(self.gate_band)
+            # fused only under an engaged theta gate: both gates read the
+            # same tracker health, so a corridor-eligible grid is already
+            # gated — the fused plan is the gated plan's twin
+            corridors = self._union_corridors(grid)
+            if corridors is not None:
+                plan = plan.with_fused(self.fused_corridors)
         reqs = list(grid.slots)
         if self.faults is not None and self.faults.fails_dispatch(
                 self.dispatches):
@@ -1554,21 +1620,24 @@ class DetectionService:
             return True
         imgs = self.plans.put(grid.staged)
         warm_key = (grid.shape, plan.cfg.render_output,
-                    plan.cfg.hough.theta_band)
+                    plan.cfg.hough.theta_band, plan.cfg.fused)
         was_warm = warm_key in self._warmed
         if was_warm:
             with jax.transfer_guard("disallow"):
-                res = plan.run(imgs, theta_bins)  # async dispatch, batch k
+                # async dispatch, batch k
+                res = plan.run(imgs, theta_bins, corridors)
         else:
             # a compile takes seconds: retire the previous batch BEFORE it,
             # so the blocking-path EMA sample below cannot absorb compile
             # time (there is no overlap to preserve during a compile), and
             # est_s cannot inflate into shedding feasible traffic
             self._complete(grid)
-            res = plan.run(imgs, theta_bins)      # first call compiles
+            res = plan.run(imgs, theta_bins, corridors)  # compiles
             self._warmed.add(warm_key)
         if theta_bins is not None:
             self.gated_dispatches += 1
+        if corridors is not None:
+            self.fused_dispatches += 1
         # device_put may alias (zero-copy) a numpy buffer on CPU backends:
         # hand the old buffer to the in-flight batch and stage the next
         # wave into a fresh one rather than mutating shared memory.  Only
