@@ -30,6 +30,23 @@ as wall time there).  Three sections:
     and the remote answer upgrades exactly in the arms where
     ``remote_done + rtt <= deadline`` — including never from a dead
     remote replica.
+  * **network** — the same races through the honest
+    ``core.network.NetworkModel``.  In uplink-compat mode (free
+    uplink, no jitter, no loss) the model must reproduce the ``rtt_s``
+    arms bit-exactly (GATE: ``network_compat_bitexact``).  Then a
+    seeded lossy matrix — lognormal-jittered legs at 5% per-leg loss,
+    plus forced lost-uplink / lost-downlink / stalled-remote arms —
+    must keep the local deadline guarantee on EVERY race with nonzero
+    ``speculative_timeouts`` (a lost leg resolves by timeout, never a
+    hang), upgrade exactly when the delivered answer is in hand by the
+    deadline, and replay bit-identically (GATES:
+    ``lossy_local_guarantee``, ``lossy_upgrade_iff_wins``,
+    ``lossy_deterministic``).
+  * **scale_up / diurnal** — the elastic half: ``add_replica`` grows
+    the fleet 4 -> 8 a quarter into the trace (GATE: elastic
+    throughput >= static 4), and a raised-cosine diurnal arrival ramp
+    (1x -> 3x) must leave every request terminal (GATE:
+    ``diurnal_all_terminal``).
 
 Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for
 real replica placement (smoke.sh does; the committed BENCH_mesh.json is
@@ -46,7 +63,11 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 
+import jax
+
+from repro.core.network import NetworkConfig
 from repro.core.offload import SpeculativeConfig
 from repro.data import make_scenario
 from repro.runtime import ServiceFaultInjector
@@ -72,7 +93,8 @@ RACE_DEADLINE = 0.10
 
 def drive_fleet(svc: ShardedDetectionService, clock: VirtualClock,
                 reqs: list[DetectionRequest],
-                arrivals: list[float]) -> float:
+                arrivals: list[float],
+                scale_up: tuple[float, int] | None = None) -> float:
     """Replay scripted arrivals through a replica fleet on one clock.
 
     Each replica owns a busy window: a dispatch at ``t`` occupies it
@@ -81,7 +103,10 @@ def drive_fleet(svc: ShardedDetectionService, clock: VirtualClock,
     the shared clock and the makespan shrinks with R (the quantity the
     scaling gate measures).  Compute is real; time is modeled — the
     ``run_deadline_sim`` recipe, one busy window per replica instead of
-    one global one.  Returns the makespan (virtual seconds).
+    one global one.  ``scale_up=(t_s, n_add)`` grows the fleet by
+    ``n_add`` replicas (``add_replica`` — estimator warmed, pinned
+    sessions rebalanced) the first time the clock reaches ``t_s``.
+    Returns the makespan (virtual seconds).
     """
     busy = {rep.index: clock() for rep in svc.replicas}
     i = 0
@@ -90,17 +115,32 @@ def drive_fleet(svc: ShardedDetectionService, clock: VirtualClock,
             svc.submit(reqs[i])
             i += 1
         arrived_all = i == len(reqs)
+        if scale_up is not None and clock() + 1e-12 >= scale_up[0]:
+            for _ in range(scale_up[1]):
+                svc.add_replica()
+            scale_up = None
         if svc.faults is not None:
             k = svc._steps
             svc._steps += 1
             for victim in svc.faults.replicas_to_kill(k):
                 svc.kill_replica(victim)
+            for host in svc.faults.hosts_to_kill(k):
+                svc.kill_host(host)
         pending = False
         for rep in svc.replicas:
             if not rep.alive:
                 continue
             s = rep.service
-            if busy[rep.index] <= clock() + 1e-12:
+            if busy.setdefault(rep.index, clock()) <= clock() + 1e-12:
+                # the model says the device finished when the busy window
+                # closed — which is now.  Block until the async result is
+                # wall-ready so step()'s non-blocking reap poll retires it
+                # HERE, not a window later: completion stamps (and the
+                # late/miss classification built on them) must depend on
+                # the modeled schedule, never on compile/exec wall time.
+                for g in s.grids.values():
+                    if g.in_flight is not None:
+                        jax.block_until_ready(g.in_flight[1].lines)
                 d0 = s.dispatches
                 s.step(flush=arrived_all)
                 if s.dispatches > d0:
@@ -147,7 +187,8 @@ def _tier_stats(reqs: list[DetectionRequest], trace: list[dict]) -> dict:
 
 def run_fleet_arm(trace: list[dict], *, n_replicas: int,
                   affinity: bool = True,
-                  faults: ServiceFaultInjector | None = None) -> dict:
+                  faults: ServiceFaultInjector | None = None,
+                  scale_up: tuple[float, int] | None = None) -> dict:
     clock = VirtualClock()
     svc = ShardedDetectionService(
         _cfg(), n_replicas=n_replicas, clock=clock, buckets=BUCKETS,
@@ -167,11 +208,13 @@ def run_fleet_arm(trace: list[dict], *, n_replicas: int,
         for i, it in enumerate(trace)
     ]
     makespan = drive_fleet(svc, clock, reqs,
-                           [it["arrival_s"] for it in trace])
+                           [it["arrival_s"] for it in trace],
+                           scale_up=scale_up)
     served = sum(r.served for r in reqs)
     out = _tier_stats(reqs, trace)
     out.update({
         "n_replicas": n_replicas,
+        "n_replicas_final": len(svc.alive_replicas),
         "affinity": affinity,
         "served": served,
         "offered": len(reqs),
@@ -186,27 +229,79 @@ def run_fleet_arm(trace: list[dict], *, n_replicas: int,
                             for rep in svc.replicas),
         "failed_on_death": svc.failed_on_death,
         "requeued": svc.requeued,
+        "scale_up_migrations": svc.scale_up_migrations,
     })
+    if scale_up is not None:
+        out["scale_up_at_s"] = scale_up[0]
+        out["scale_up_added"] = scale_up[1]
+    if any("rate" in it for it in trace):
+        # diurnal trace: split misses into peak vs trough half-cycles
+        cut = (1.0 + max(it["rate"] for it in trace)) / 2.0
+
+        def _miss(rs: list[DetectionRequest]) -> float:
+            if not rs:
+                return 0.0
+            bad = sum(r.status.refused
+                      or (r.served and r.finished_at > r.deadline_at)
+                      for r in rs)
+            return bad / len(rs)
+
+        out["peak_miss"] = _miss(
+            [r for r, it in zip(reqs, trace) if it["rate"] >= cut])
+        out["trough_miss"] = _miss(
+            [r for r, it in zip(reqs, trace) if it["rate"] < cut])
     return out
+
+
+# --- diurnal load ramps -------------------------------------------------------
+
+def diurnal_trace(n: int, *, seed: int = 0, period_s: float = 0.5,
+                  peak: float = 3.0) -> list[dict]:
+    """The fleet_suite Zipf trace with a diurnal arrival-rate ramp.
+
+    The instantaneous rate multiplier sweeps ``1 -> peak -> 1`` on a
+    raised cosine with period ``period_s`` (virtual seconds), so the
+    inter-arrival gap is ``ARRIVAL_GAP_S / rate(t)``: troughs offer the
+    fleet its baseline load, peaks offer ``peak`` times it — the shape
+    a real fleet sees over a day, compressed onto the virtual clock.
+    Each item keeps its ``rate`` so arms can split peak vs trough
+    misses.  Deterministic: same (n, seed) -> same trace.
+    """
+    trace = fleet_trace(n, seed=seed)
+    t = 0.0
+    for it in trace:
+        rate = 1.0 + (peak - 1.0) * 0.5 * (
+            1.0 - math.cos(2.0 * math.pi * t / period_s)
+        )
+        it["arrival_s"] = t
+        it["rate"] = rate
+        t += ARRIVAL_GAP_S / rate
+    return trace
 
 
 # --- speculative offload race ------------------------------------------------
 
-def run_offload_race(rtt_s: float, *, kill_remote: bool = False) -> dict:
+def run_offload_race(rtt_s: float, *, kill_remote: bool = False,
+                     net: NetworkConfig | None = None) -> dict:
     """One scripted local/remote race on the shared clock.
 
     The local low-res pass is driven to completion at
     ``RACE_LOCAL_DONE``; the remote full-res pass computes at
     ``RACE_REMOTE_DONE``; ``decide_race`` then charges ``rtt_s`` on the
     downlink.  Every quantity below is exact virtual time — reruns are
-    bit-identical.
+    bit-identical.  With ``net`` the race runs through the
+    ``NetworkModel`` path instead of the ``rtt_s`` compat path; pass
+    the **uplink-compat** config (``uplink_fraction=0``, no jitter, no
+    loss) and the schedule is unchanged, so the two paths must agree
+    field-for-field — the ``network_compat_bitexact`` gate.
     """
     clock = VirtualClock()
     svc = ShardedDetectionService(
         _cfg(), n_replicas=2, clock=clock, buckets=BUCKETS,
         batch_size=1, prefetch=False, remote_replica=1,
         speculative=SpeculativeConfig(rtt_s=rtt_s,
-                                      local_shape=BUCKETS[0]),
+                                      local_shape=BUCKETS[0],
+                                      network=net),
     )
     for rep in svc.replicas:
         for shape, grid in rep.service.grids.items():
@@ -250,6 +345,101 @@ def run_offload_race(rtt_s: float, *, kill_remote: bool = False) -> dict:
     return out
 
 
+def run_network_race(net: NetworkConfig, *, lose_uplink: bool = False,
+                     lose_downlink: bool = False,
+                     stall_remote: bool = False) -> dict:
+    """One seeded race on the honest network (jitter + loss + timeout).
+
+    Event-driven on the shared clock: the local pass lands at
+    ``RACE_LOCAL_DONE``; the remote clone is submitted when its sampled
+    uplink arrives (never, if lost) and computes ``MODEL_COST`` later;
+    the sampled downlink decides when — whether — the upgrade is in
+    hand.  ``stall_remote`` models a remote that accepts the request
+    but never completes (the dispatch-stall class): the race must then
+    resolve by the deadline timeout, not hang.  Everything is a pure
+    function of ``net.seed`` and the flags — reruns are bit-identical.
+    """
+    clock = VirtualClock()
+    faults = ServiceFaultInjector(
+        lose_uplink_races=(0,) if lose_uplink else (),
+        lose_downlink_races=(0,) if lose_downlink else (),
+    )
+    svc = ShardedDetectionService(
+        _cfg(), n_replicas=2, clock=clock, buckets=BUCKETS,
+        batch_size=1, prefetch=False, remote_replica=1, faults=faults,
+        speculative=SpeculativeConfig(local_shape=BUCKETS[0],
+                                      network=net),
+    )
+    for rep in svc.replicas:
+        for shape, grid in rep.service.grids.items():
+            grid.est_s = MODEL_COST[shape]
+            grid.est_measured = True
+    frame = make_scenario("straight", *BUCKETS[1], seed=0).image
+    req = DetectionRequest(uid=0, frame=frame, deadline_s=RACE_DEADLINE)
+    ticket = svc.submit_speculative(req)
+    local_svc = svc.replicas[0].service
+    remote_svc = svc.replicas[1].service
+    local_svc.step()                                  # dispatch at t=0
+    t_up = ticket.remote_submit_at
+    remote_done_at = None
+
+    def pump_remote() -> None:
+        nonlocal remote_done_at
+        svc._pump_speculative()
+        if ticket.remote_submitted and not stall_remote:
+            remote_svc.step(flush=True)               # dispatch at t_up
+            remote_done_at = clock() + MODEL_COST[BUCKETS[1]]
+
+    if math.isfinite(t_up) and t_up <= RACE_LOCAL_DONE:
+        clock.jump_to(t_up)
+        pump_remote()
+    clock.jump_to(RACE_LOCAL_DONE)
+    local_svc.step(flush=True)                        # local in hand
+    if (remote_done_at is None and not ticket.remote_submitted
+            and math.isfinite(t_up)):
+        clock.jump_to(t_up)
+        pump_remote()
+    if remote_done_at is not None:
+        clock.jump_to(remote_done_at)
+        remote_svc.step(flush=True)                   # remote computed
+    decision = svc.resolve_speculative(ticket)
+    if decision is None:
+        # remote leg dead (lost uplink / stalled service): the timeout
+        # resolves the race at the deadline — the unresolvable-race fix
+        clock.jump_to(max(clock(), RACE_DEADLINE))
+        decision = svc.resolve_speculative(ticket)
+    assert decision is not None, "race must always resolve"
+    up, down = ticket.uplink, ticket.downlink
+    expected_upgrade = bool(
+        not stall_remote and not up.lost and not down.lost
+        and t_up + MODEL_COST[BUCKETS[1]] + down.delay_s <= RACE_DEADLINE
+    )
+    out = {
+        "seed": net.seed,
+        "uplink_lost": up.lost,
+        "downlink_lost": down.lost,
+        "stalled_remote": stall_remote,
+        "uplink_s": up.delay_s,
+        "downlink_s": down.delay_s,
+        "remote_started_at": (None if not ticket.remote_submitted
+                              else t_up),
+        "local_done_at": decision.local_done_at,
+        "remote_ready_at": (None if decision.remote_ready_at == math.inf
+                            else decision.remote_ready_at),
+        "deadline_at": decision.deadline_at,
+        "winner": decision.winner,
+        "upgraded": decision.upgraded,
+        "timed_out": decision.timed_out,
+        "expected_upgrade": expected_upgrade,
+        "upgrade_as_expected": decision.upgraded == expected_upgrade,
+        "local_met_deadline": decision.local_met_deadline,
+        "served_in_time": bool(req.served
+                               and req.finished_at <= req.deadline_at),
+    }
+    svc.close()
+    return out
+
+
 # --- main -------------------------------------------------------------------
 
 def main() -> None:
@@ -275,7 +465,10 @@ def main() -> None:
           f"{a['gated_share']:.2f}"] for a in scaling],
     )
 
-    aff_n = 2 if args.quick else 4
+    # 4 replicas in BOTH modes: at 2-3 the quick trace's hot Zipf
+    # sessions pin one replica into overload and the ablation inverts —
+    # the gate compares like against like only at the full-mode width
+    aff_n = 4
     aff_on = run_fleet_arm(trace, n_replicas=aff_n, affinity=True)
     aff_off = run_fleet_arm(trace, n_replicas=aff_n, affinity=False)
     print_table(
@@ -302,6 +495,110 @@ def main() -> None:
           r["local_met_deadline"]] for r in races],
     )
 
+    # same three races through the NetworkModel in uplink-compat mode
+    # (free uplink, whole RTT on the response, no jitter/loss): the two
+    # paths must agree field-for-field, bit-exactly
+    def _compat_net(rtt: float) -> NetworkConfig:
+        return NetworkConfig(seed=0, rtt_median_s=rtt,
+                             uplink_fraction=0.0, jitter_sigma=0.0,
+                             loss=0.0)
+
+    net_races = [
+        run_offload_race(0.01, net=_compat_net(0.01)),
+        run_offload_race(0.05, net=_compat_net(0.05)),
+        run_offload_race(0.01, kill_remote=True, net=_compat_net(0.01)),
+    ]
+    compat_fields = ("rtt_s", "remote_alive", "local_done_at",
+                     "remote_ready_at", "deadline_at", "winner",
+                     "upgraded", "expected_upgrade", "upgrade_as_expected",
+                     "local_met_deadline", "served_bucket",
+                     "served_in_time")
+    network_compat_bitexact = all(
+        a[f] == b[f]
+        for a, b in zip(races, net_races) for f in compat_fields
+    )
+
+    # lossy matrix: seeded jittered races at 5% per-leg loss, plus three
+    # forced arms (lost uplink, lost downlink, stalled remote) so the
+    # timeout path is exercised regardless of which seeds draw a loss
+    lossy_cfg = {"rtt_median_s": 0.03, "uplink_fraction": 0.5,
+                 "jitter_sigma": 0.6, "loss": 0.05}
+    n_matrix = 12 if args.quick else 40
+
+    def _matrix() -> list[dict]:
+        return [run_network_race(NetworkConfig(seed=100 + i, **lossy_cfg))
+                for i in range(n_matrix)]
+
+    forced_net = {"rtt_median_s": 0.03, "uplink_fraction": 0.5,
+                  "jitter_sigma": 0.0, "loss": 0.0}
+    matrix = _matrix()
+    forced = [
+        run_network_race(NetworkConfig(seed=7, **forced_net),
+                         lose_uplink=True),
+        run_network_race(NetworkConfig(seed=8, **forced_net),
+                         lose_downlink=True),
+        run_network_race(NetworkConfig(seed=9, **forced_net),
+                         stall_remote=True),
+    ]
+    lossy = matrix + forced
+    n_lossy = len(lossy)
+    uplink_lost = sum(r["uplink_lost"] for r in lossy)
+    downlink_lost = sum(r["downlink_lost"] for r in lossy)
+    timeouts = sum(r["timed_out"] for r in lossy)
+    upgrades = sum(r["upgraded"] for r in lossy)
+    lossy_deterministic = _matrix() == matrix
+    print_table(
+        f"lossy-network race matrix ({n_matrix} seeded + 3 forced arms; "
+        f"rtt~LN(0.03, 0.6), loss 5%/leg, deadline {RACE_DEADLINE}s)",
+        ["races", "loss_rate", "upgrade_rate", "timeout_rate",
+         "guarantee", "iff_wins", "deterministic"],
+        [[n_lossy,
+          f"{(uplink_lost + downlink_lost) / (2 * n_lossy):.3f}",
+          f"{upgrades / n_lossy:.3f}", f"{timeouts / n_lossy:.3f}",
+          all(r["local_met_deadline"] and r["served_in_time"]
+              for r in lossy),
+          all(r["upgrade_as_expected"] for r in lossy),
+          lossy_deterministic]],
+    )
+
+    # elastic scale-up: start at 4 replicas, add 4 more a quarter of the
+    # way through, vs the same trace on a static 4.  The trace replays
+    # at DOUBLE rate so four replicas are genuinely saturated — added
+    # capacity then robustly shortens the makespan; at the base rate 4
+    # replicas idle between arrivals and adding more only fragments
+    # batches (window-quantization noise, not signal).
+    stress = [dict(it, arrival_s=it["arrival_s"] * 0.5) for it in trace]
+    static4 = run_fleet_arm(stress, n_replicas=4)
+    scale_at = stress[-1]["arrival_s"] * 0.25
+    elastic = run_fleet_arm(stress, n_replicas=4,
+                            scale_up=(scale_at, 4))
+    print_table(
+        f"elastic scale-up (4 -> 8 replicas at t={scale_at:.3f}s)",
+        ["arm", "replicas", "served", "thr_rps", "tier0_miss",
+         "migrations"],
+        [["static", 4, f"{static4['served']}/{static4['offered']}",
+          f"{static4['throughput_rps']:.1f}",
+          f"{static4['tier0']['miss_rate']:.3f}", 0],
+         ["elastic", f"4->{elastic['n_replicas_final']}",
+          f"{elastic['served']}/{elastic['offered']}",
+          f"{elastic['throughput_rps']:.1f}",
+          f"{elastic['tier0']['miss_rate']:.3f}",
+          elastic["scale_up_migrations"]]],
+    )
+
+    # diurnal ramp: raised-cosine arrival rate, baseline -> 3x -> baseline
+    dtrace = diurnal_trace(n_trace, seed=0, period_s=0.5, peak=3.0)
+    diurnal = run_fleet_arm(dtrace, n_replicas=aff_n)
+    print_table(
+        f"diurnal ramp ({aff_n} replicas, rate 1x -> 3x raised cosine, "
+        f"period 0.5s)",
+        ["served", "thr_rps", "peak_miss", "trough_miss", "terminal"],
+        [[f"{diurnal['served']}/{diurnal['offered']}",
+          f"{diurnal['throughput_rps']:.1f}",
+          f"{diurnal['peak_miss']:.3f}", f"{diurnal['trough_miss']:.3f}",
+          diurnal["all_terminal"]]],
+    )
+
     thr = {a["n_replicas"]: a["throughput_rps"] for a in scaling}
     gates = {
         "throughput_scales": thr[8] > thr[1],
@@ -317,6 +614,20 @@ def main() -> None:
         ),
         "all_terminal": all(a["all_terminal"] for a in scaling)
         and aff_on["all_terminal"] and aff_off["all_terminal"],
+        # the honest-network regime (this PR's tentpole)
+        "network_compat_bitexact": network_compat_bitexact,
+        "lossy_local_guarantee": all(
+            r["local_met_deadline"] and r["served_in_time"]
+            for r in lossy
+        ) and timeouts > 0,
+        "lossy_upgrade_iff_wins": all(
+            r["upgrade_as_expected"] for r in lossy
+        ),
+        "lossy_deterministic": lossy_deterministic,
+        "scaleup_throughput_no_worse": (
+            elastic["throughput_rps"] >= static4["throughput_rps"]
+        ),
+        "diurnal_all_terminal": diurnal["all_terminal"],
     }
     print(f"\n  throughput: {thr[1]:.1f} rps @1 -> {thr[8]:.1f} rps @8 "
           f"-> {'ok' if gates['throughput_scales'] else 'VIOLATED'}")
@@ -329,6 +640,20 @@ def main() -> None:
           f"{'ok' if gates['speculative_upgrade_iff_wins'] else 'VIOLATED'}")
     print(f"  all requests terminal: "
           f"{'ok' if gates['all_terminal'] else 'VIOLATED'}")
+    print(f"  network compat (sigma=0, loss=0) bit-exact with rtt_s: "
+          f"{'ok' if gates['network_compat_bitexact'] else 'VIOLATED'}")
+    print(f"  lossy local guarantee ({timeouts} timeouts over {n_lossy} "
+          f"races): "
+          f"{'ok' if gates['lossy_local_guarantee'] else 'VIOLATED'}")
+    print(f"  lossy upgrade iff wins: "
+          f"{'ok' if gates['lossy_upgrade_iff_wins'] else 'VIOLATED'}")
+    print(f"  lossy matrix deterministic: "
+          f"{'ok' if gates['lossy_deterministic'] else 'VIOLATED'}")
+    print(f"  scale-up thr {elastic['throughput_rps']:.1f} rps "
+          f"(4->8) vs static-4 {static4['throughput_rps']:.1f} -> "
+          f"{'ok' if gates['scaleup_throughput_no_worse'] else 'VIOLATED'}")
+    print(f"  diurnal ramp all terminal: "
+          f"{'ok' if gates['diurnal_all_terminal'] else 'VIOLATED'}")
 
     payload = {
         "meta": {
@@ -343,10 +668,28 @@ def main() -> None:
             "race": {"local_done_s": RACE_LOCAL_DONE,
                      "remote_done_s": RACE_REMOTE_DONE,
                      "deadline_s": RACE_DEADLINE},
+            "lossy": dict(lossy_cfg, n_matrix=n_matrix,
+                          deadline_s=RACE_DEADLINE),
+            "diurnal": {"period_s": 0.5, "peak": 3.0},
         },
         "scaling": {str(a["n_replicas"]): a for a in scaling},
         "affinity": {"on": aff_on, "off": aff_off},
         "offload": races,
+        "network": {
+            "compat": net_races,
+            "lossy": {
+                "races": lossy,
+                "n": n_lossy,
+                "loss_rate": (uplink_lost + downlink_lost) / (2 * n_lossy),
+                "upgrade_rate": upgrades / n_lossy,
+                "timeout_rate": timeouts / n_lossy,
+                "uplink_lost": uplink_lost,
+                "downlink_lost": downlink_lost,
+                "timeouts": timeouts,
+            },
+        },
+        "scale_up": {"static_4": static4, "elastic_4_to_8": elastic},
+        "diurnal": diurnal,
         "gates": gates,
     }
     with open(args.out, "w") as f:

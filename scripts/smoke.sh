@@ -27,7 +27,8 @@ python -m pytest -q -m "fleet and not slow" -x
 # steady-state engagement (marker `fused`)
 python -m pytest -q -m "fused and not slow" -x
 # sharded-fleet layer: replica routing, session affinity, failover,
-# speculative offload (marker `mesh`); the 8-device placement scenario
+# host failure domains, elastic scale-up, speculative offload on the
+# seeded lossy NetworkModel (marker `mesh`); the 8-device placement scenario
 # itself is `slow` — the device-count flag here covers any test that
 # inits jax, and the mesh bench below runs under the same flag
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
@@ -40,8 +41,10 @@ python -m pytest -q -m "not slow and not scenarios and not serve and not deadlin
 python -m benchmarks.scenario_suite --quick
 python -m benchmarks.tracking_suite --quick
 python -m benchmarks.fleet_suite --quick
-# sharded-fleet gates (scaling curve, affinity ablation, offload race),
-# on the forced 8-device host mesh so replica placement is real
+# sharded-fleet gates (scaling curve, affinity ablation, offload race
+# + network-compat bit-exactness, lossy local guarantee, deterministic
+# replay, elastic 4->8 scale-up, diurnal ramp), exit-code gated, on the
+# forced 8-device host mesh so replica placement is real
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m benchmarks.mesh_suite --quick
 python scripts/check_f1.py

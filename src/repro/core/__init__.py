@@ -23,6 +23,9 @@ from .plan import (  # noqa: F401
 from .metrics import (  # noqa: F401
     DetectionScore, aggregate_scores, match_peaks, score_batch, score_frame,
 )
+from .network import (  # noqa: F401
+    Delivery, NetworkConfig, NetworkModel, expected_rtt_s, force_lost,
+)
 from .offload import Placement, place, plan, plan_line_detection  # noqa: F401
 from .tracking import (  # noqa: F401
     LaneTracker, Track, TrackedFrame, TrackerConfig, TrackingPipeline,

@@ -31,6 +31,7 @@ import dataclasses
 import math
 from typing import Iterable, Optional
 
+from .network import NetworkConfig
 from .profiling import StageCost
 
 # TPU v5e model constants (also used by launch/roofline.py).
@@ -91,24 +92,45 @@ def plan_line_detection(H: int, W: int, *, fused: bool = False
 class SpeculativeConfig:
     """Modeled network for the local/remote race.
 
-    ``rtt_s`` is the full round trip (request uplink + response
-    downlink); the race model charges it on top of the remote replica's
-    completion time, so "remote wins" means the *upgraded answer is in
-    the vehicle's hands* before the deadline — not merely computed
+    Two modes:
+
+    * ``network`` set (:class:`repro.core.network.NetworkConfig`): the
+      honest model.  The uplink leg is charged *before* the remote
+      replica's submit (the remote pass cannot start until the request
+      lands), the downlink leg on the response, each independently
+      jittered and droppable; ``rtt_s`` is ignored.
+    * ``network=None`` (the PR-7 compatibility path): ``rtt_s`` is the
+      full round trip charged **once, on the response** — the uplink is
+      *not* modeled and the remote clone is submitted with zero delay,
+      so remote starts are optimistic by one uplink.  Kept so the PR-7
+      race gates stay meaningful; new call sites should pass a
+      ``network``.
+
+    Either way "remote wins" means the *upgraded answer is in the
+    vehicle's hands* before the deadline — not merely computed
     somewhere.  ``local_shape`` is the low-res bucket the guaranteed
-    local pass runs at (None = the service's smallest bucket)."""
+    local pass runs at (None = the service's smallest bucket).
+
+    ``race_timeout_s`` bounds deadline-less races: a race whose remote
+    is still pending ``race_timeout_s`` after submit resolves to the
+    local answer with ``timed_out=True``.  Deadlined races need no
+    extra knob — their own ``deadline_at`` is the timeout (past it the
+    remote can no longer upgrade, so waiting longer is pointless)."""
     rtt_s: float = 0.03
     local_shape: Optional[tuple[int, int]] = None
+    network: Optional["NetworkConfig"] = None
+    race_timeout_s: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class RaceDecision:
     """Deterministic outcome of one speculative race (pure data)."""
     local_done_at: float        # when the local low-res answer landed
-    remote_ready_at: float      # remote completion + downlink rtt
+    remote_ready_at: float      # remote completion + downlink delay
     deadline_at: Optional[float]
     upgraded: bool              # remote answer replaces the local one
     local_met_deadline: bool    # the guarantee the local tier exists for
+    timed_out: bool = False     # resolved by timeout, remote still pending
 
     @property
     def winner(self) -> str:
@@ -116,25 +138,34 @@ class RaceDecision:
 
 
 def decide_race(local_done_at: float, remote_done_at: Optional[float],
-                deadline_at: Optional[float], *,
-                rtt_s: float) -> RaceDecision:
+                deadline_at: Optional[float], *, rtt_s: float,
+                downlink_s: Optional[float] = None,
+                timed_out: bool = False) -> RaceDecision:
     """Pick the answer of one local/remote speculative race.
 
     The local pass is authoritative by default — it is the deadline
     guarantee.  The remote high-res answer upgrades it iff the remote
     replica actually completed (``remote_done_at`` not None: a shed,
     refused, or dead-replica remote pass never upgrades anything) and
-    its answer, after the downlink (+``rtt_s``, the modeled network),
-    is in hand by the deadline.  With no deadline the remote answer
-    always upgrades once complete — there is nothing to race.
+    its answer, after the response leg, is in hand by the deadline.
+    The response leg is ``downlink_s`` when given (the honest
+    ``NetworkModel`` path: one sampled downlink, ``math.inf`` for a
+    lost one — a lost response never upgrades), else the compat
+    ``rtt_s`` (PR 7's whole round trip charged here, uplink unmodeled).
+    With no deadline a *delivered* remote answer always upgrades once
+    complete — there is nothing to race.  ``timed_out`` is a
+    passthrough stamp: the caller resolved this race by timeout with
+    the remote still pending (a timeout can never flip a correct
+    upgrade — past the deadline the remote cannot win anyway).
     """
+    leg = rtt_s if downlink_s is None else downlink_s
     remote_ready = (math.inf if remote_done_at is None
-                    else remote_done_at + rtt_s)
+                    else remote_done_at + leg)
     upgraded = remote_ready <= (
         deadline_at if deadline_at is not None else math.inf
     ) if remote_done_at is not None else False
     if remote_done_at is not None and deadline_at is None:
-        upgraded = True
+        upgraded = math.isfinite(remote_ready)
     return RaceDecision(
         local_done_at=local_done_at,
         remote_ready_at=remote_ready,
@@ -142,4 +173,5 @@ def decide_race(local_done_at: float, remote_done_at: Optional[float],
         upgraded=upgraded,
         local_met_deadline=(deadline_at is None
                             or local_done_at <= deadline_at),
+        timed_out=timed_out,
     )

@@ -29,6 +29,16 @@ against :class:`repro.serve.detection.DetectionService`:
     fails the dead replica's in-flight work, re-routes its queue to
     survivors, and drops its session pins (trackers die with the
     replica — failover is explicit, never silent).
+  * **host death** — ``hosts_to_kill(k)`` is the same schedule one
+    failure domain up: a host id whose *entire replica group* dies
+    before router step ``k`` (``ShardedDetectionService.kill_host``
+    marks the whole group dead first, then fails/re-routes, so no
+    victim's queue can land on a dying same-host sibling).
+  * **message loss** — ``loses_uplink(i)`` / ``loses_downlink(i)``
+    force-drop the named leg of speculative race ``i`` (the race
+    ordinal, 0-based).  The ``NetworkModel`` already loses messages
+    probabilistically; these make the lost-uplink / lost-downlink
+    harness arms *exact* instead of fishing for a lossy seed.
 
 Every trigger fires exactly once (the ``_fired`` set), so an injected
 fault can never livelock a bounded driver loop, and every schedule is a
@@ -55,6 +65,11 @@ class ServiceFaultInjector:
     clock_jump_s: float = 10.0               # forward jump per trigger
     # (router step, replica index) pairs: replica dies before that step
     kill_replica_at: tuple[tuple[int, int], ...] = ()
+    # (router step, host id) pairs: the host's whole group dies
+    kill_host_at: tuple[tuple[int, int], ...] = ()
+    # speculative-race ordinals whose named leg is force-dropped
+    lose_uplink_races: tuple[int, ...] = ()
+    lose_downlink_races: tuple[int, ...] = ()
     _stage_calls: int = 0
     _fired: set = dataclasses.field(default_factory=set)
 
@@ -108,3 +123,22 @@ class ServiceFaultInjector:
                                         ((k, replica),)):
                 out.append(replica)
         return tuple(out)
+
+    # -- hosts (fleet front tier) ----------------------------------------
+    def hosts_to_kill(self, k: int) -> tuple[int, ...]:
+        """Host ids scheduled to die before router step ``k`` — a whole
+        failure domain at once (one-shot per (step, host) pair)."""
+        out = []
+        for step, host in self.kill_host_at:
+            if step == k and self._once("host", (k, host), ((k, host),)):
+                out.append(host)
+        return tuple(out)
+
+    # -- network (speculative race legs) ---------------------------------
+    def loses_uplink(self, race: int) -> bool:
+        """Force-drop race ``race``'s request leg (one-shot)."""
+        return self._once("uplink", race, self.lose_uplink_races)
+
+    def loses_downlink(self, race: int) -> bool:
+        """Force-drop race ``race``'s response leg (one-shot)."""
+        return self._once("downlink", race, self.lose_downlink_races)

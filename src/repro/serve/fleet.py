@@ -24,23 +24,38 @@ EMAs, and session trackers:
     ``migrate_session`` moves the tracker + SLO + coast budget to
     another replica explicitly — affinity is a routing *invariant*, not
     a cage.
-  * **Replica death + failover** — ``runtime.faults`` schedules
+  * **Replica + host death, failover** — ``runtime.faults`` schedules
     ``kill_replica_at`` (step, replica) pairs: the dead replica's
     in-flight and slotted work fails explicitly (``FAILED`` — the
     batch died with the device), its queue re-routes to survivors with
     original deadlines preserved, and its session pins drop (the
     tracker died with it; the next frame re-pins wherever routing
     lands and rebuilds — the warm-start coast rule shortens the blind
-    window).  Nothing hangs; every request still terminates.
+    window).  Replicas group into *host* failure domains
+    (``hosts=``); ``kill_host`` / ``kill_host_at`` kill a whole group
+    at once, marked dead before any teardown so no victim's backlog
+    lands on a dying same-host sibling.  Nothing hangs; every request
+    still terminates.
+  * **Elastic scale-up** — ``add_replica`` grows the fleet at runtime:
+    the newcomer joins the host mesh with a warmed service-time
+    estimator and pinned sessions above the post-growth fair share
+    migrate onto it via ``migrate_session`` (the scale-up dual of the
+    death path; one tracker per session throughout).
   * **Speculative local/remote offload** (Schafhalter et al.,
-    PAPERS.md; policy in ``core.offload``) — ``submit_speculative``
-    races a fast low-res *local* pass (forced downshift on the local
-    replica: the deadline guarantee) against a full-res *remote* pass
-    on a designated replica behind a modeled network
-    (``SpeculativeConfig.rtt_s`` charged on the response); the remote
-    answer upgrades the local one iff it is in hand by the deadline.
-    On the shared :class:`VirtualClock` the race is a pure function of
-    the schedule — deterministic to test, like every other policy here.
+    PAPERS.md; policy in ``core.offload``, link model in
+    ``core.network``) — ``submit_speculative`` races a fast low-res
+    *local* pass (forced downshift, preferring a different host than
+    the remote: the deadline guarantee) against a full-res *remote*
+    pass on a designated replica.  With
+    ``SpeculativeConfig.network`` the link is honest: a seeded
+    lognormal *uplink* delays the remote's start (lost uplink — the
+    remote never runs), a seeded *downlink* delays the response (lost
+    downlink — no upgrade), and a race whose remote is still pending
+    at the deadline resolves to the local answer with
+    ``timed_out=True``.  Without it, the PR-7 compat path charges
+    ``rtt_s`` once on the response.  On the shared
+    :class:`VirtualClock` the race is a pure function of
+    (schedule, seed) — deterministic to test, like every policy here.
 
 ``benchmarks/mesh_suite.py`` drives the scaling curve (1 -> 8 replicas
 at equal offered load), the affinity ablation, and the offload race and
@@ -50,11 +65,13 @@ writes ``BENCH_mesh.json``.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.core.network import Delivery, NetworkModel, force_lost
 from repro.core.offload import RaceDecision, SpeculativeConfig, decide_race
 from repro.core.plan import PipelineConfig
 from repro.core.tracking import Track
@@ -70,16 +87,30 @@ class _Replica:
     index: int
     service: DetectionService
     alive: bool = True
+    host: int = 0               # failure domain (host death kills the group)
 
 
 @dataclasses.dataclass
 class SpeculativeTicket:
     """One speculative race in flight: the caller's request plus its two
-    racing clones (resolved by ``resolve_speculative`` / ``run``)."""
+    racing clones (resolved by ``resolve_speculative`` / ``run``).
+
+    Under the honest network (``SpeculativeConfig.network``) both legs
+    are sampled at race creation — ``uplink``/``downlink`` — so the
+    race's fate is fixed at submit regardless of when it resolves.  The
+    remote clone is *not* submitted until the uplink lands
+    (``remote_submit_at``, ``inf`` for a lost uplink — the remote pass
+    then never runs and the race resolves by timeout)."""
     request: DetectionRequest
     local: DetectionRequest
     remote: DetectionRequest
     decision: Optional[RaceDecision] = None
+    uplink: Optional[Delivery] = None
+    downlink: Optional[Delivery] = None
+    remote_submit_at: Optional[float] = None
+    remote_submitted: bool = True   # compat path submits immediately
+    created_at: float = 0.0
+    race_idx: int = 0
 
     @property
     def resolved(self) -> bool:
@@ -109,12 +140,18 @@ class ShardedDetectionService:
                  affinity: bool = True,
                  speculative: Optional[SpeculativeConfig] = None,
                  remote_replica: Optional[int] = None,
+                 hosts: Optional[Sequence[int]] = None,
                  faults: Optional[object] = None,
                  **svc_kw):
         assert n_replicas >= 1
         if devices is None:
             devices = replica_devices(n_replicas)
         assert len(devices) == n_replicas, (len(devices), n_replicas)
+        if hosts is None:
+            # default: every replica its own failure domain (the PR-7
+            # semantics — replica death IS host death)
+            hosts = tuple(range(n_replicas))
+        assert len(hosts) == n_replicas, (len(hosts), n_replicas)
         self.cfg = cfg
         self.clock = clock
         self.affinity = affinity
@@ -123,10 +160,16 @@ class ShardedDetectionService:
             remote_replica if remote_replica is not None else n_replicas - 1
         )
         self.faults = faults
+        self._svc_kw = dict(svc_kw)
+        self.network = (
+            NetworkModel(speculative.network)
+            if speculative is not None and speculative.network is not None
+            else None
+        )
         self.replicas = [
             _Replica(i, DetectionService(
                 cfg, clock=clock, device=devices[i], **svc_kw,
-            ))
+            ), host=hosts[i])
             for i in range(n_replicas)
         ]
         self._session_replica: dict[str, int] = {}
@@ -140,6 +183,11 @@ class ShardedDetectionService:
         self.failed_on_death = 0       # in-flight/slotted work that died
         self.speculative_races = 0
         self.speculative_upgrades = 0
+        self.speculative_timeouts = 0  # races resolved with remote pending
+        self.uplink_lost_total = 0
+        self.downlink_lost_total = 0
+        self.scale_up_migrations = 0   # sessions rebalanced by add_replica
+        self.host_kills = 0
 
     # --- introspection --------------------------------------------------
     @property
@@ -191,6 +239,18 @@ class ShardedDetectionService:
         horizon = svc.load_controller.horizon_s(shape, ahead)
         return (horizon, svc.queued, rep.index)
 
+    @staticmethod
+    def _busy_extra_s(rep: _Replica, shape: tuple[int, int]) -> float:
+        """Seconds the device is still occupied by a batch already in
+        flight — the wave arithmetic counts queued + slotted work but
+        forgets the batch computing right now, which delays everything
+        behind it by up to one service time."""
+        svc = rep.service
+        grid = svc.grids[shape]
+        if grid.in_flight is None:
+            return 0.0
+        return svc.load_controller.est_s(shape)
+
     def _route(self, req: DetectionRequest) -> int:
         """Pick a replica: affinity pin first, else the shortest
         projected completion horizon for the request's bucket."""
@@ -235,7 +295,14 @@ class ShardedDetectionService:
         deadline_at = now + req.deadline_s
         grid = svc.grids[shape]
         ahead = grid.active + len(svc.queues[shape])
-        if svc.load_controller.feasible(shape, deadline_at, now, ahead):
+        # the in-flight batch holds the device for up to one more
+        # service time before anything queued can start: charge it
+        # against the deadline on both sides of the comparison
+        if svc.load_controller.feasible(
+                shape,
+                deadline_at - self._busy_extra_s(self.replicas[pinned],
+                                                 shape),
+                now, ahead):
             return None
         best = min(self.alive_replicas,
                    key=lambda r: self._route_cost(r, shape))
@@ -243,8 +310,10 @@ class ShardedDetectionService:
             return None
         b = best.service
         b_ahead = (b.grids[shape].active + len(b.queues[shape]))
-        if not b.load_controller.feasible(shape, deadline_at, now,
-                                          b_ahead):
+        if not b.load_controller.feasible(
+                shape,
+                deadline_at - self._busy_extra_s(best, shape),
+                now, b_ahead):
             return None             # nowhere better: the ladder's problem
         self.migrate_session(req.session_id, best.index)
         self.session_migrations += 1
@@ -291,15 +360,57 @@ class ShardedDetectionService:
         self._session_replica[session_id] = to_replica
         return True
 
-    # --- replica death + failover ---------------------------------------
+    # --- replica/host death + failover ----------------------------------
     def kill_replica(self, index: int) -> None:
         """Kill one replica: in-flight and slotted work dies with the
         device (``FAILED``), queued work re-routes to survivors with its
         original deadlines, session pins drop (trackers are gone)."""
-        rep = self.replicas[index]
-        if not rep.alive:
+        self._kill_replicas((index,))
+
+    def kill_host(self, host: int) -> None:
+        """Kill a whole failure domain: every live replica with this
+        ``host`` id dies at once.  The group is marked dead *before* any
+        teardown, so no victim's queue can re-route onto a dying sibling
+        on the same host — survivors on other hosts absorb the re-routed
+        work with its original deadlines."""
+        victims = tuple(
+            r.index for r in self.replicas if r.alive and r.host == host
+        )
+        if not victims:
             return
-        rep.alive = False
+        self.host_kills += 1
+        self._kill_replicas(victims)
+
+    def _kill_replicas(self, indices: Sequence[int]) -> None:
+        """Shared death path: mark every victim dead FIRST (so
+        ``_resubmit`` routing only sees true survivors), then tear each
+        down, then re-route the merged queue backlog in arrival order."""
+        dead: list[_Replica] = []
+        for i in indices:
+            rep = self.replicas[i]
+            if rep.alive:
+                rep.alive = False
+                dead.append(rep)
+        if not dead:
+            return
+        requeue: list[DetectionRequest] = []
+        for rep in dead:
+            requeue += self._teardown_replica(rep)
+        gone = {rep.index for rep in dead}
+        survivors = {
+            s: r for s, r in self._session_replica.items() if r not in gone
+        }
+        self.session_failovers += (
+            len(self._session_replica) - len(survivors)
+        )
+        self._session_replica = survivors
+        # re-route in arrival order (the seq was part of the heap key)
+        for req in sorted(requeue, key=lambda r: r.submitted_at):
+            self._resubmit(req)
+
+    def _teardown_replica(self, rep: _Replica) -> list[DetectionRequest]:
+        """Fail a dead replica's in-flight/slotted work and return its
+        queued backlog for re-routing (caller owns the resubmit)."""
         svc = rep.service
         now = svc.clock()
         victims: list[DetectionRequest] = []
@@ -319,16 +430,77 @@ class ShardedDetectionService:
             requeue += [entry[3] for entry in q]
             q.clear()
         svc.close()
-        survivors = {
-            s: r for s, r in self._session_replica.items() if r != index
-        }
-        self.session_failovers += (
-            len(self._session_replica) - len(survivors)
+        return requeue
+
+    # --- elastic scale-up ------------------------------------------------
+    def add_replica(self, *, device=None, host: Optional[int] = None
+                    ) -> int:
+        """Grow the fleet by one replica and rebalance pinned sessions
+        onto it (the scale-up dual of ``kill_replica`` — until now only
+        death was handled).
+
+        The newcomer gets the next device from the host mesh and its own
+        fresh failure domain by default.  Its per-bucket service-time
+        estimator is warmed from a live veteran — routing is
+        horizon-based, and a cold EMA would make the newcomer look
+        infinitely fast and swallow the whole fleet's traffic.  Pinned
+        sessions above the post-growth fair share migrate over via
+        :meth:`migrate_session` (tracker + SLO + coast budget move
+        atomically, counted in ``scale_up_migrations``), so the
+        one-tracker-per-session invariant survives the rebalance.
+        Returns the new replica's index."""
+        n_new = len(self.replicas) + 1
+        if device is None:
+            device = replica_devices(n_new)[n_new - 1]
+        if host is None:
+            host = max(r.host for r in self.replicas) + 1
+        svc = DetectionService(
+            self.cfg, clock=self.clock, device=device, **self._svc_kw,
         )
-        self._session_replica = survivors
-        # re-route in arrival order (the seq was part of the heap key)
-        for req in sorted(requeue, key=lambda r: r.submitted_at):
-            self._resubmit(req)
+        rep = _Replica(len(self.replicas), svc, host=host)
+        donor = next((r for r in self.replicas if r.alive), None)
+        if donor is not None:
+            for shape, g in svc.grids.items():
+                dg = donor.service.grids.get(shape)
+                if dg is not None:
+                    g.est_s = dg.est_s
+                    g.est_measured = dg.est_measured
+        self.replicas.append(rep)
+        self._rebalance_onto(rep)
+        return rep.index
+
+    def _rebalance_onto(self, rep: _Replica) -> None:
+        """Drain pins above the post-growth fair share into replicas
+        below it, the newcomer first (deterministic: donors, sessions,
+        and receivers all visit in sorted order)."""
+        if not self.affinity or not self._session_replica:
+            return
+        alive = self.alive_replicas
+        fair = math.ceil(len(self._session_replica) / len(alive))
+        counts = {r.index: 0 for r in alive}
+        by_rep: dict[int, list[str]] = {}
+        for sid in sorted(self._session_replica):
+            idx = self._session_replica[sid]
+            by_rep.setdefault(idx, []).append(sid)
+            counts[idx] = counts.get(idx, 0) + 1
+        for idx in sorted(by_rep):
+            sids = by_rep[idx]
+            k = 0
+            while counts[idx] > fair and k < len(sids):
+                sid = sids[k]
+                k += 1
+                recv = min(
+                    (r for r in alive if counts[r.index] < fair),
+                    key=lambda r: (r.index != rep.index,
+                                   counts[r.index], r.index),
+                    default=None,
+                )
+                if recv is None:
+                    return
+                if self.migrate_session(sid, recv.index):
+                    counts[idx] -= 1
+                    counts[recv.index] += 1
+                    self.scale_up_migrations += 1
 
     def _resubmit(self, req: DetectionRequest) -> None:
         """Re-route one queued request off a dead replica, preserving
@@ -363,11 +535,20 @@ class ShardedDetectionService:
         ``SpeculativeConfig.local_shape`` (default: the smallest
         registered bucket) on the best non-remote replica — small enough
         that its answer always lands inside the deadline (the
-        guarantee).  The *remote* clone runs full-res, shed-only (a
-        degraded remote answer is pointless: the local tier already
-        covers degraded) on the designated remote replica; the modeled
-        network charges ``rtt_s`` on its response.  ``run`` (or an
-        explicit ``resolve_speculative``) applies
+        guarantee), preferring a replica on a *different host* than the
+        remote so one host death cannot take both racers.  The *remote*
+        clone runs full-res, shed-only (a degraded remote answer is
+        pointless: the local tier already covers degraded) on the
+        designated remote replica.
+
+        With ``SpeculativeConfig.network`` set both legs are sampled
+        here: the remote clone is submitted only when the uplink *lands*
+        (a lost uplink means it never runs — the sender cannot observe
+        the loss, so the race resolves through the deadline timeout),
+        and the sampled downlink is charged on the response.  Without a
+        network config (the PR-7 compat path) the remote is submitted
+        immediately and ``rtt_s`` is charged once on the response.
+        ``run`` (or an explicit ``resolve_speculative``) applies
         :func:`repro.core.offload.decide_race` and stamps the winner
         onto ``req``.  Clones are sessionless by construction — a
         tracker must see ONE stream, not a race's two interleaved
@@ -381,6 +562,9 @@ class ShardedDetectionService:
             raise RuntimeError("no live replicas")
         remote_rep = self.replicas[self.remote_replica]
         locals_ = [r for r in alive if r.index != self.remote_replica]
+        cross_host = [r for r in locals_ if r.host != remote_rep.host]
+        if cross_host:
+            locals_ = cross_host
         local_rep = locals_[0] if locals_ else alive[0]
         if len(locals_) > 1:
             shape = local_rep.service.bucket_for(req.frame)
@@ -399,33 +583,116 @@ class ShardedDetectionService:
             priority=req.priority, render_output=req.render_output,
             policy=SHED_ONLY,
         )
+        now = self.clock()
+        race_idx = self.speculative_races
+        ticket = SpeculativeTicket(req, local, remote,
+                                   created_at=now, race_idx=race_idx)
         local_rep.service.submit(local, force_bucket=local_shape)
-        if remote_rep.alive:
-            remote_rep.service.submit(remote)
+        if self.network is None:
+            # PR-7 compat: free uplink, remote starts immediately
+            if remote_rep.alive:
+                remote_rep.service.submit(remote)
+            else:
+                remote.status = RequestStatus.FAILED
+                remote.finished_at = now
         else:
-            remote.status = RequestStatus.FAILED
-            remote.finished_at = self.clock()
-        ticket = SpeculativeTicket(req, local, remote)
+            up, down = self.network.uplink(), self.network.downlink()
+            if self.faults is not None:
+                if getattr(self.faults, "loses_uplink",
+                           lambda i: False)(race_idx):
+                    up = force_lost(up)
+                if getattr(self.faults, "loses_downlink",
+                           lambda i: False)(race_idx):
+                    down = force_lost(down)
+            self.uplink_lost_total += up.lost
+            self.downlink_lost_total += down.lost
+            ticket.uplink, ticket.downlink = up, down
+            ticket.remote_submit_at = up.arrives_at(now)
+            ticket.remote_submitted = False
+            if ticket.remote_submit_at <= now:
+                self._submit_remote(ticket)
         self._tickets.append(ticket)
         self.speculative_races += 1
         return ticket
 
+    def _submit_remote(self, ticket: SpeculativeTicket) -> None:
+        """The uplink landed: submit the remote clone (or fail it if the
+        remote replica died while the request was in flight).  The clone
+        keeps the race's ORIGINAL absolute deadline — the uplink delay
+        must not hand the remote pass a fresh budget."""
+        ticket.remote_submitted = True
+        rep = self.replicas[self.remote_replica]
+        if not rep.alive:
+            ticket.remote.status = RequestStatus.FAILED
+            ticket.remote.finished_at = self.clock()
+            return
+        rep.service.submit(ticket.remote)
+        if ticket.local.deadline_at is not None:
+            ticket.remote.deadline_at = ticket.local.deadline_at
+
+    def _pump_speculative(self) -> None:
+        """Submit every deferred remote clone whose uplink has landed
+        (no-op on the compat path — remotes submit at race creation)."""
+        if self.network is None:
+            return
+        now = self.clock()
+        for t in self._tickets:
+            if (not t.resolved and not t.remote_submitted
+                    and t.remote_submit_at is not None
+                    and t.remote_submit_at <= now):
+                self._submit_remote(t)
+
+    def _race_timeout_at(self, ticket: SpeculativeTicket
+                         ) -> Optional[float]:
+        """When this race gives up on a still-pending remote: the
+        request's own absolute deadline (past it the remote cannot win
+        anyway), else ``created_at + race_timeout_s`` for deadline-less
+        races, else None (no timeout configured)."""
+        if ticket.local.deadline_at is not None:
+            return ticket.local.deadline_at
+        if self.speculative.race_timeout_s is not None:
+            return ticket.created_at + self.speculative.race_timeout_s
+        return None
+
     def resolve_speculative(self, ticket: SpeculativeTicket
                             ) -> Optional[RaceDecision]:
-        """Apply the race policy once both clones are terminal; stamps
-        the winning answer onto the caller's request.  Returns None
-        while either side is still pending."""
+        """Apply the race policy and stamp the winning answer onto the
+        caller's request.  Resolves when both clones are terminal — or,
+        with the remote still pending (never submitted, lost response,
+        stalled dispatch), once the race's timeout passes: the local
+        answer then wins with ``timed_out=True`` (the unresolvable-race
+        fix — a dead network must never leave the caller without the
+        answer the local tier guaranteed).  Returns None while the race
+        is genuinely still open."""
         if ticket.resolved:
             return ticket.decision
+        self._pump_speculative()
         local, remote, req = ticket.local, ticket.remote, ticket.request
-        if not (local.is_terminal and remote.is_terminal):
+        if not local.is_terminal:
             return None
-        decision = decide_race(
-            local.finished_at,
-            remote.finished_at if remote.ok else None,
-            local.deadline_at,
-            rtt_s=self.speculative.rtt_s,
-        )
+        remote_pending = not (ticket.remote_submitted
+                              and remote.is_terminal)
+        if remote_pending:
+            timeout_at = self._race_timeout_at(ticket)
+            if timeout_at is None or self.clock() < timeout_at:
+                return None
+            decision = decide_race(
+                local.finished_at, None, local.deadline_at,
+                rtt_s=self.speculative.rtt_s, timed_out=True,
+            )
+            self.speculative_timeouts += 1
+        else:
+            downlink_s = None
+            if ticket.downlink is not None:
+                downlink_s = (math.inf if ticket.downlink.lost
+                              else ticket.downlink.delay_s)
+            decision = decide_race(
+                local.finished_at,
+                remote.finished_at if remote.ok else None,
+                local.deadline_at,
+                rtt_s=self.speculative.rtt_s,
+                downlink_s=downlink_s,
+            )
         win = remote if decision.upgraded else local
         req.result = win.result
         req.status = win.status
@@ -444,23 +711,27 @@ class ShardedDetectionService:
 
     # --- scheduling -----------------------------------------------------
     def step(self, *, flush: bool = False) -> bool:
-        """One router step: injected replica deaths fire first, then
-        every live replica takes one scheduler step.  Returns True while
-        any replica still has work."""
+        """One router step: injected replica/host deaths fire first,
+        then deferred speculative remotes whose uplink has landed are
+        submitted, then every live replica takes one scheduler step.
+        Returns True while any replica still has work."""
         k = self._steps
         self._steps += 1
         if self.faults is not None:
             for victim in self.faults.replicas_to_kill(k):
                 self.kill_replica(victim)
+            hosts = getattr(self.faults, "hosts_to_kill", None)
+            if hosts is not None:
+                for host in hosts(k):
+                    self.kill_host(host)
+        self._pump_speculative()
         busy = False
         for rep in self.replicas:
             if rep.alive:
                 busy = rep.service.step(flush=flush) or busy
         return busy
 
-    def run(self, max_steps: int = 10_000) -> None:
-        """Drive every replica until the fleet drains, then resolve any
-        open speculative tickets."""
+    def _drain(self, max_steps: int) -> None:
         while max_steps > 0:
             busy = self.step(flush=True)
             pending = any(
@@ -472,8 +743,40 @@ class ShardedDetectionService:
             if not busy and not pending and not queued:
                 break
             max_steps -= 1
-        for t in self._tickets:
-            self.resolve_speculative(t)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        """Drive every replica until the fleet drains, then resolve the
+        speculative tickets.  A ticket that cannot resolve yet because
+        its clock hasn't reached a known event — a deferred remote's
+        uplink arrival, a race's timeout — advances a jumpable clock
+        (``VirtualClock.jump_to``) to the next such event and re-drains,
+        so every race with a timeout resolves; only a deadline-less race
+        with no ``race_timeout_s`` and a dead remote leg stays open
+        (there is nothing to wait for — the config opted out)."""
+        guard = 4 * len(self._tickets) + 4
+        while True:
+            self._drain(max_steps)
+            for t in self._tickets:
+                self.resolve_speculative(t)
+            open_ = [t for t in self._tickets if not t.resolved]
+            jump = getattr(self.clock, "jump_to", None)
+            if not open_ or jump is None or guard <= 0:
+                break
+            now = self.clock()
+            events = []
+            for t in open_:
+                if (not t.remote_submitted
+                        and t.remote_submit_at is not None
+                        and math.isfinite(t.remote_submit_at)):
+                    events.append(t.remote_submit_at)
+                timeout_at = self._race_timeout_at(t)
+                if timeout_at is not None and math.isfinite(timeout_at):
+                    events.append(timeout_at)
+            events = [e for e in events if e > now]
+            if not events:
+                break
+            jump(min(events))
+            guard -= 1
 
     def close(self) -> None:
         for rep in self.replicas:

@@ -10,6 +10,7 @@ per-replica plan caches) runs in a subprocess with
 pattern as ``test_distributed.py``.
 """
 
+import math
 import os
 import subprocess
 import sys
@@ -18,6 +19,7 @@ import textwrap
 import numpy as np
 import pytest
 
+from repro.core.network import NetworkConfig
 from repro.core.plan import HoughConfig, PipelineConfig
 from repro.core.offload import SpeculativeConfig
 from repro.data import make_drive_cycle, make_scenario
@@ -368,6 +370,234 @@ def test_speculative_race_is_deterministic():
     d2, p2 = arm()
     assert d1 == d2
     np.testing.assert_array_equal(p1, p2)
+
+
+# --- speculative race on the honest network ------------------------------
+
+def _net_fleet(clock: VirtualClock, *, seed: int = 0, loss: float = 0.0,
+               sigma: float = 0.0, rtt: float = 0.03,
+               fraction: float = 0.5,
+               race_timeout_s: float = None,
+               faults: ServiceFaultInjector = None,
+               n: int = 2, hosts: tuple = None) -> ShardedDetectionService:
+    return make_fleet(
+        n, clock=clock, remote_replica=n - 1, faults=faults, hosts=hosts,
+        speculative=SpeculativeConfig(
+            local_shape=(96, 128), race_timeout_s=race_timeout_s,
+            network=NetworkConfig(seed=seed, rtt_median_s=rtt,
+                                  uplink_fraction=fraction,
+                                  jitter_sigma=sigma, loss=loss),
+        ),
+    )
+
+
+def test_network_race_charges_the_uplink_before_remote_starts():
+    clock = VirtualClock()
+    svc = _net_fleet(clock)     # rtt 0.03, half per leg, no jitter/loss
+    req = DetectionRequest(uid=0, frame=_frame(), deadline_s=0.1)
+    ticket = svc.submit_speculative(req)
+    # the remote clone is NOT in any queue yet: its request is on the wire
+    assert not ticket.remote_submitted
+    assert ticket.remote_submit_at == pytest.approx(0.015)
+    svc.run()
+    # the remote's submit stamp carries the uplink (the free-uplink fix),
+    # and its deadline is the race's ORIGINAL absolute deadline
+    assert ticket.remote.submitted_at == pytest.approx(0.015)
+    assert ticket.remote.deadline_at == ticket.local.deadline_at
+    d = ticket.decision
+    assert d is not None and d.upgraded and not d.timed_out
+    # in hand at uplink + compute(0 virtual) + downlink
+    assert req.finished_at == pytest.approx(0.03)
+    svc.close()
+
+
+def test_network_race_decision_stream_is_deterministic():
+    def arm():
+        clock = VirtualClock()
+        svc = _net_fleet(clock, seed=11, loss=0.2, sigma=0.6)
+        for i in range(6):
+            req = DetectionRequest(uid=i, frame=_frame(seed=i),
+                                   deadline_s=0.1)
+            svc.submit_speculative(req)
+            svc.run()
+        decisions = [t.decision for t in svc._tickets]
+        svc.close()
+        return decisions
+
+    d1, d2 = arm(), arm()
+    assert all(d is not None for d in d1)   # every race resolved
+    assert d1 == d2                          # same seed -> same stream
+
+
+def test_lost_uplink_remote_never_runs_local_still_answers():
+    clock = VirtualClock()
+    faults = ServiceFaultInjector(lose_uplink_races=(0,))
+    svc = _net_fleet(clock, faults=faults)
+    req = DetectionRequest(uid=0, frame=_frame(), deadline_s=0.1)
+    ticket = svc.submit_speculative(req)
+    svc.run()
+    d = ticket.decision
+    assert d is not None and d.timed_out and d.winner == "local"
+    # the remote pass never ran: the request died on the wire
+    assert not ticket.remote_submitted
+    assert svc.replicas[1].service.dispatches == 0
+    assert req.served and req.finished_at <= req.deadline_at
+    assert req.bucket == (96, 128)
+    assert svc.speculative_timeouts == 1
+    assert svc.uplink_lost_total == 1
+    svc.close()
+
+
+def test_lost_downlink_computes_but_never_upgrades():
+    clock = VirtualClock()
+    faults = ServiceFaultInjector(lose_downlink_races=(0,))
+    svc = _net_fleet(clock, faults=faults)
+    req = DetectionRequest(uid=0, frame=_frame(), deadline_s=0.2)
+    ticket = svc.submit_speculative(req)
+    svc.run()
+    d = ticket.decision
+    assert d is not None and not d.upgraded and not d.timed_out
+    # the remote DID compute — the answer just never came back
+    assert ticket.remote_submitted and ticket.remote.ok
+    assert svc.replicas[1].service.dispatches == 1
+    assert req.bucket == (96, 128)
+    assert svc.downlink_lost_total == 1
+    assert svc.speculative_upgrades == 0
+    svc.close()
+
+
+def test_deadline_less_race_resolves_via_race_timeout():
+    clock = VirtualClock()
+    faults = ServiceFaultInjector(lose_uplink_races=(0,))
+    svc = _net_fleet(clock, faults=faults, race_timeout_s=0.5)
+    req = DetectionRequest(uid=0, frame=_frame())   # no deadline
+    ticket = svc.submit_speculative(req)
+    svc.run()
+    d = ticket.decision
+    assert d is not None and d.timed_out and d.winner == "local"
+    assert clock() >= 0.5           # run() jumped to the timeout
+    assert svc.speculative_timeouts == 1
+    assert req.served
+    svc.close()
+
+
+def test_speculative_local_prefers_a_different_host_than_remote():
+    svc = make_fleet(
+        4, clock=VirtualClock(), hosts=(0, 0, 1, 1), remote_replica=3,
+        speculative=SpeculativeConfig(local_shape=(96, 128)),
+    )
+    req = DetectionRequest(uid=0, frame=_frame(), deadline_s=1.0)
+    svc.submit_speculative(req)
+    # remote sits on host 1 (replica 3); the local guarantee must not
+    # share its failure domain — replica 2 (host 1) takes nothing
+    assert svc.replicas[2].service.queued == 0
+    assert (svc.replicas[0].service.queued
+            + svc.replicas[1].service.queued) == 1
+    svc.run()
+    assert req.served
+    svc.close()
+
+
+# --- elastic scale-up + host failure domains ------------------------------
+
+def test_migrate_session_to_replica_dying_same_step():
+    svc = make_fleet(3)
+    for t in range(3):
+        svc.submit(DetectionRequest(uid=t, frame=_frame(seed=0),
+                                    session_id="ego"))
+        svc.run()
+    src = svc.session_location("ego")
+    dst = (src + 1) % 3
+    assert svc.migrate_session("ego", dst)
+    svc.kill_replica(dst)   # the tracker just moved onto a corpse
+    assert svc.session_location("ego") is None
+    assert svc.session_failovers >= 1
+    # the next frame re-pins on a survivor and rebuilds — nothing hangs
+    req = DetectionRequest(uid=99, frame=_frame(seed=0), session_id="ego")
+    svc.submit(req)
+    svc.run()
+    assert req.ok
+    pin = svc.session_location("ego")
+    assert pin is not None and pin != dst and svc.replicas[pin].alive
+    holders = [rep.index for rep in svc.replicas
+               if rep.alive and "ego" in rep.service.sessions]
+    assert holders == [pin]
+    svc.close()
+
+
+def test_add_replica_rebalances_to_fair_share():
+    svc = make_fleet(2)
+    for s in range(6):
+        for t in range(2):
+            svc.submit(DetectionRequest(uid=s * 10 + t,
+                                        frame=_frame(seed=s),
+                                        session_id=f"s{s}"))
+            svc.run()
+    assert all(svc.session_location(f"s{s}") is not None for s in range(6))
+    new = svc.add_replica()
+    assert new == 2 and len(svc.replicas) == 3
+    assert svc.scale_up_migrations > 0
+    # the newcomer's estimator was warmed from a veteran, not cold
+    for shape, g in svc.replicas[new].service.grids.items():
+        assert g.est_s == svc.replicas[0].service.grids[shape].est_s
+    counts: dict[int, int] = {}
+    for s in range(6):
+        sid = f"s{s}"
+        pin = svc.session_location(sid)
+        holders = [rep.index for rep in svc.replicas
+                   if sid in rep.service.sessions]
+        # one tracker per session, living exactly at the pin
+        assert holders == [pin], (sid, holders, pin)
+        counts[pin] = counts.get(pin, 0) + 1
+    assert max(counts.values()) <= math.ceil(6 / 3)
+    # migrated streams keep serving on their new replica
+    for s in range(6):
+        req = DetectionRequest(uid=100 + s, frame=_frame(seed=s),
+                               session_id=f"s{s}")
+        svc.submit(req)
+        svc.run()
+        assert req.ok
+    assert svc.replicas[new].service.dispatches > 0
+    svc.close()
+
+
+def test_host_kill_takes_the_whole_group_survivors_absorb():
+    clock = VirtualClock()
+    svc = make_fleet(4, clock=clock, hosts=(0, 0, 1, 1), max_queue=16)
+    reqs = [DetectionRequest(uid=i, frame=_frame(seed=i), deadline_s=5.0)
+            for i in range(8)]
+    for r in reqs:
+        svc.submit(r)
+    deadlines = [r.deadline_at for r in reqs]
+    clock.advance(0.5)
+    svc.kill_host(0)
+    assert [rep.alive for rep in svc.replicas] == [False, False, True, True]
+    assert svc.host_kills == 1
+    # re-routed work kept its ORIGINAL absolute deadline
+    for r, dl in zip(reqs, deadlines):
+        assert r.deadline_at == dl
+    assert svc.requeued > 0
+    svc.run()
+    assert all(r.is_terminal for r in reqs)
+    # everything that wasn't caught in flight was served by host 1
+    assert sum(r.ok for r in reqs) + svc.failed_on_death == len(reqs)
+    assert (svc.replicas[2].service.dispatches
+            + svc.replicas[3].service.dispatches) >= svc.requeued
+    svc.close()
+
+
+def test_host_kill_via_fault_schedule():
+    faults = ServiceFaultInjector(kill_host_at=((1, 0),))
+    svc = make_fleet(4, faults=faults, hosts=(0, 0, 1, 1))
+    reqs = [DetectionRequest(uid=i, frame=_frame(seed=i)) for i in range(6)]
+    for r in reqs:
+        svc.submit(r)
+    svc.run()
+    assert not svc.replicas[0].alive and not svc.replicas[1].alive
+    assert svc.replicas[2].alive and svc.replicas[3].alive
+    assert all(r.is_terminal for r in reqs)
+    assert sum(r.ok for r in reqs) + svc.failed_on_death == len(reqs)
+    svc.close()
 
 
 # --- real 8-device placement (subprocess, slow) --------------------------

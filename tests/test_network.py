@@ -1,0 +1,138 @@
+"""Seeded network model: determinism, loss, legs, race arithmetic.
+
+Pure-policy tests for :mod:`repro.core.network` and the
+``downlink_s``/``timed_out`` extensions of
+:func:`repro.core.offload.decide_race` — no service, no devices: the
+model is a deterministic function of (config seed, send sequence), so
+everything here asserts exact values, not distributions.
+"""
+
+import math
+
+import pytest
+
+from repro.core.network import (
+    Delivery, NetworkConfig, NetworkModel, expected_rtt_s, force_lost,
+)
+from repro.core.offload import decide_race
+
+pytestmark = pytest.mark.mesh
+
+JITTERY = NetworkConfig(seed=7, rtt_median_s=0.03, uplink_fraction=0.5,
+                        jitter_sigma=0.6, loss=0.05)
+
+
+def _stream(cfg: NetworkConfig, n: int = 32) -> list[Delivery]:
+    m = NetworkModel(cfg)
+    out = []
+    for _ in range(n):
+        out.append(m.uplink())
+        out.append(m.downlink())
+    return out
+
+
+# --- determinism ---------------------------------------------------------
+
+def test_same_seed_same_delivery_stream():
+    assert _stream(JITTERY) == _stream(JITTERY)
+
+
+def test_different_seed_different_stream():
+    other = NetworkConfig(seed=8, rtt_median_s=0.03, uplink_fraction=0.5,
+                          jitter_sigma=0.6, loss=0.05)
+    a, b = _stream(JITTERY), _stream(other)
+    assert [d.delay_s for d in a] != [d.delay_s for d in b]
+
+
+def test_message_ids_are_sequential():
+    assert [d.msg_id for d in _stream(JITTERY, n=4)] == list(range(8))
+
+
+# --- the compat limit: sigma=0 is the fixed-delay model, bit-exact -------
+
+def test_zero_jitter_is_exactly_the_median():
+    m = NetworkModel(NetworkConfig(rtt_median_s=0.03, uplink_fraction=0.5))
+    for _ in range(8):
+        assert m.uplink().delay_s == 0.015
+        assert m.downlink().delay_s == 0.015
+
+
+def test_uplink_compat_mode_charges_everything_on_the_response():
+    # uplink_fraction=0: a free uplink, the whole RTT on the downlink —
+    # PR 7's arithmetic, reproduced exactly (the mesh-suite compat gate)
+    m = NetworkModel(NetworkConfig(rtt_median_s=0.03, uplink_fraction=0.0))
+    assert m.uplink().delay_s == 0.0
+    assert m.downlink().delay_s == 0.03
+
+
+# --- loss ----------------------------------------------------------------
+
+def test_loss_zero_never_loses():
+    cfg = NetworkConfig(seed=3, jitter_sigma=0.6, loss=0.0)
+    assert not any(d.lost for d in _stream(cfg, n=128))
+
+
+def test_loss_rate_tracks_config():
+    cfg = NetworkConfig(seed=3, jitter_sigma=0.6, loss=0.3)
+    m = NetworkModel(cfg)
+    for _ in range(500):
+        m.uplink()
+        m.downlink()
+    assert m.sent == 1000
+    assert m.lost / m.sent == pytest.approx(0.3, abs=0.05)
+
+
+def test_lost_message_never_arrives():
+    d = Delivery("uplink", 0, 0.01, lost=True)
+    assert math.isinf(d.arrives_at(5.0))
+    ok = Delivery("uplink", 0, 0.01, lost=False)
+    assert ok.arrives_at(5.0) == 5.01
+
+
+def test_force_lost_keeps_the_sampled_delay():
+    d = NetworkModel(JITTERY).uplink()
+    f = force_lost(d)
+    assert f.lost and f.delay_s == d.delay_s and f.msg_id == d.msg_id
+
+
+# --- leg split + diagnostics ---------------------------------------------
+
+def test_uplink_fraction_splits_the_median():
+    cfg = NetworkConfig(rtt_median_s=0.04, uplink_fraction=0.25)
+    assert cfg.uplink_median_s == 0.01
+    assert cfg.downlink_median_s == pytest.approx(0.03)
+
+
+def test_expected_rtt_grows_with_jitter():
+    flat = NetworkConfig(rtt_median_s=0.03, jitter_sigma=0.0)
+    jittery = NetworkConfig(rtt_median_s=0.03, jitter_sigma=0.8)
+    assert expected_rtt_s(flat) == 0.03
+    # lognormal mean = median * exp(sigma^2/2) > median
+    assert expected_rtt_s(jittery) > 0.03
+
+
+# --- decide_race: downlink override + timeout stamp ----------------------
+
+def test_decide_race_rtt_path_unchanged():
+    d = decide_race(0.02, 0.07, 0.10, rtt_s=0.01)
+    assert d.upgraded and d.remote_ready_at == 0.08 and not d.timed_out
+
+
+def test_decide_race_downlink_overrides_rtt():
+    # sampled downlink (0.04) blows the deadline even though rtt_s says fine
+    d = decide_race(0.02, 0.07, 0.10, rtt_s=0.01, downlink_s=0.04)
+    assert not d.upgraded and d.remote_ready_at == pytest.approx(0.11)
+
+
+def test_decide_race_lost_downlink_never_upgrades():
+    d = decide_race(0.02, 0.07, 0.10, rtt_s=0.01, downlink_s=math.inf)
+    assert not d.upgraded and math.isinf(d.remote_ready_at)
+    # even with no deadline: an undelivered answer is not an answer
+    d2 = decide_race(0.02, 0.07, None, rtt_s=0.01, downlink_s=math.inf)
+    assert not d2.upgraded
+
+
+def test_decide_race_timed_out_is_a_passthrough_stamp():
+    d = decide_race(0.02, None, 0.10, rtt_s=0.01, timed_out=True)
+    assert d.timed_out and not d.upgraded and d.winner == "local"
+    assert d.local_met_deadline
