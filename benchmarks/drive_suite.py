@@ -1,0 +1,307 @@
+"""Closed-loop drive benchmark -> ``BENCH_drive.json``.
+
+The trajectory-error counterpart to the F1 suites: every arm drives the
+same :class:`repro.data.ClosedLoopCycle` (plant + rigid-warp world
+model, drift+gust disturbance, exact analytic truth) and is scored on
+**cross-track error in meters**, so a detection failure costs where it
+matters — the vehicle's path — not just a scoring-table cell.
+
+Arms, all deterministic (seeded imagery, closed-form disturbance,
+virtual clock; a rerun is bit-identical):
+
+  * **blind** — no steering at all (``advance(None)`` every frame); the
+    reference drift that any controlled arm must beat by a wide margin.
+  * **per_frame** — ``LineDetector`` -> ``LateralController`` straight
+    from each frame's raw peaks; dropouts leave only the decayed hold.
+  * **tracked** — ``TrackingPipeline`` with the controller hooked in
+    (``process(frame, controller=...)``): smoothed tracks steer, and the
+    tracker coasts through the mid-transient dropout on predictions.
+  * **service** — the session-stateful ``DetectionService`` drives the
+    loop through ``submit``/``step``/``drain`` on the virtual clock with
+    a real deadline; two overload windows are forced via the grid's
+    latency estimator.  With the degradation ladder ON, coasting keeps
+    fresh commands flowing (then budget-exhausted refusals hold); with
+    the ladder OFF every overload frame is a refusal.  Gate: ladder-on
+    strictly beats ladder-off on both max and mean cross-track.
+
+Gates (exit code 1 on any violation; ``benchmarks/run.py --drive``
+aggregates them and ``scripts/check_drive.py`` pins the committed
+per-family baseline):
+
+  * every tracked arm's max cross-track stays under its family floor;
+  * tracked mean cross-track <= per-frame mean on every noisy family
+    (the temporal layer must pay in trajectory error exactly where
+    per-frame detection degrades);
+  * ladder-on < ladder-off on max AND mean cross-track;
+  * a repeated tracked run reproduces the identical trajectory.
+
+Usage: PYTHONPATH=src python -m benchmarks.drive_suite [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.core import (
+    ControlConfig, HoughConfig, LateralController, LineDetector,
+    PipelineConfig, TrackingPipeline,
+)
+from repro.data import NOISY_FAMILIES, standard_closed_loop
+from repro.serve.detection import (
+    DetectionRequest, DetectionService, RequestStatus, VirtualClock,
+)
+
+from .common import print_table
+
+#: Families the committed baseline pins (scripts/check_drive.py): the
+#: noisy three — where coasting must pay — plus the clean reference.
+GATED_FAMILIES: tuple[str, ...] = NOISY_FAMILIES + ("straight",)
+
+#: Tracked-arm max-cross-track floors, meters.  The lane half-width of
+#: the closed-loop world is 0.5 m: a floor below it means the tracked
+#: vehicle never leaves its lane.  Committed values sit ~1.5x above the
+#: measured maxima (~0.25-0.26 m) so only a real control/perception
+#: regression trips them, not float jitter (there is none) or a retuned
+#: detector's few-centimeter shift.
+MAX_CROSS_TRACK_FLOOR_M: dict[str, float] = {
+    "straight": 0.40, "rain": 0.40, "night": 0.40, "glare": 0.40,
+}
+
+N_FRAMES = 48           # NOT a --quick knob: the trajectory of a family
+                        # is deterministic per cycle, so quick runs must
+                        # measure the same number the baseline pins.
+DEADLINE_S = 0.08       # service arm per-frame deadline (< frame_dt)
+MODEL_COST_S = 0.02     # virtual-clock cost per dispatched batch
+OVERLOAD_EST_S = 1.0    # estimator preset that makes dispatch hopeless
+#: Two overload windows: one mid-transient (coasting has to carry the
+#: recovery) and one in steady state (holding is cheap — the ladder win
+#: must come from the hard window, not an easy average).
+OVERLOAD_WINDOWS: tuple[range, ...] = (range(8, 14), range(28, 34))
+
+
+def _cfg() -> PipelineConfig:
+    return PipelineConfig(hough=HoughConfig(compact=True, max_edges="auto"))
+
+
+def _summary(cyc, extra: dict | None = None) -> dict:
+    out = {
+        "n_frames": cyc.n_frames,
+        "max_cross_track_m": cyc.max_cross_track_m,
+        "mean_cross_track_m": cyc.mean_cross_track_m,
+        "final_cross_track_m": float(abs(cyc.trajectory[-1][1])),
+        "trajectory": [
+            [int(t), float(e), float(psi), float(k)]
+            for t, e, psi, k in cyc.trajectory
+        ],
+    }
+    if extra:
+        out.update(extra)
+    return out
+
+
+def drive_blind(family: str, height: int, width: int) -> dict:
+    cyc = standard_closed_loop(family, N_FRAMES, height, width, seed=0)
+    for _ in range(N_FRAMES):
+        cyc.observe()
+        cyc.advance(None)
+    return _summary(cyc)
+
+
+def drive_per_frame(family: str, height: int, width: int) -> dict:
+    cyc = standard_closed_loop(family, N_FRAMES, height, width, seed=0)
+    det = LineDetector(_cfg())
+    ctl = LateralController(clock=lambda: float(cyc.t))
+    for _ in range(N_FRAMES):
+        fr = cyc.observe()
+        res = det.detect(np.asarray(fr.scene.image, np.float32))
+        cmd = ctl.command(np.asarray(res.peaks), np.asarray(res.valid))
+        cyc.advance(cmd.curvature)
+    return _summary(cyc, {"fresh_commands": ctl.fresh_commands,
+                          "held_commands": ctl.held_commands})
+
+
+def drive_tracked(family: str, height: int, width: int) -> dict:
+    cyc = standard_closed_loop(family, N_FRAMES, height, width, seed=0)
+    ctl = LateralController(clock=lambda: float(cyc.t))
+    tp = TrackingPipeline(_cfg(), height=height, width=width)
+    for _ in range(N_FRAMES):
+        fr = cyc.observe()
+        tf = tp.process(fr.scene.image, controller=ctl)
+        cyc.advance(tf.steering.curvature)
+    return _summary(cyc, {"fresh_commands": ctl.fresh_commands,
+                          "held_commands": ctl.held_commands})
+
+
+def drive_service(family: str, height: int, width: int, *,
+                  ladder: bool) -> dict:
+    """Drive the closed loop through the full serving stack.
+
+    Each frame: advance the virtual clock one frame period, submit the
+    rendered frame as a session request with a real deadline, pump the
+    service to a terminal state, and feed whatever steering came back —
+    fresh fit, coast from predicted tracks, or decayed hold — into the
+    plant.  Overload is forced by presetting the grid's measured
+    latency estimate inside the windows (the same mechanism the fleet
+    suite uses), so both ladder arms see identical offered load.
+    """
+    clock = VirtualClock()
+    svc = DetectionService(
+        _cfg(), buckets=((height, width),), batch_size=1, prefetch=False,
+        ladder=ladder, steering=ControlConfig(), clock=clock,
+    )
+    grid = svc.grids[(height, width)]
+    cyc = standard_closed_loop(family, N_FRAMES, height, width, seed=0)
+    statuses: dict[str, int] = {}
+    try:
+        for t in range(N_FRAMES):
+            clock.advance(cyc.cfg.frame_dt_s)
+            overload = any(t in w for w in OVERLOAD_WINDOWS)
+            grid.est_s = OVERLOAD_EST_S if overload else MODEL_COST_S
+            grid.est_measured = True
+            fr = cyc.observe()
+            req = DetectionRequest(uid=t, frame=fr.scene.image,
+                                   deadline_s=DEADLINE_S,
+                                   session_id="ego")
+            svc.submit(req)
+            svc.step()
+            if grid.in_flight is not None:
+                clock.advance(MODEL_COST_S)
+                svc.drain()
+            for _ in range(4):
+                if req.is_terminal:
+                    break
+                svc.step()
+                svc.drain()
+            assert req.is_terminal, (family, ladder, t, req.status)
+            statuses[req.status.name] = statuses.get(req.status.name, 0) + 1
+            cmd = req.steering
+            cyc.advance(None if cmd is None else cmd.curvature)
+    finally:
+        svc.close()
+    return _summary(cyc, {
+        "ladder": ladder,
+        "statuses": statuses,
+        "overload_frames": sum(len(w) for w in OVERLOAD_WINDOWS),
+        "coasts": statuses.get(RequestStatus.DEGRADED_COAST.name, 0),
+        "refusals": statuses.get(RequestStatus.DEADLINE_EXCEEDED.name, 0),
+    })
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="one noisy family + the clean reference, skip "
+                         "the blind arm (cycle length is pinned — quick "
+                         "trims arms, never the measurement)")
+    ap.add_argument("--height", type=int, default=240)
+    ap.add_argument("--width", type=int, default=320)
+    ap.add_argument("--out", default="BENCH_drive.json")
+    args = ap.parse_args()
+
+    families = (("rain", "straight") if args.quick else GATED_FAMILIES)
+    h, w = args.height, args.width
+
+    rows = {}
+    for fam in families:
+        arms = {
+            "per_frame": drive_per_frame(fam, h, w),
+            "tracked": drive_tracked(fam, h, w),
+        }
+        if not args.quick:
+            arms["blind"] = drive_blind(fam, h, w)
+        rows[fam] = arms
+
+    # determinism: the tracked arm replayed end-to-end must reproduce
+    # the identical trajectory — seeded imagery, closed-form
+    # disturbance, no wall clock anywhere in the loop
+    rerun = drive_tracked(families[0], h, w)
+    deterministic = rerun["trajectory"] == rows[families[0]]["tracked"][
+        "trajectory"]
+
+    service = {
+        "ladder_on": drive_service("straight", h, w, ladder=True),
+        "ladder_off": drive_service("straight", h, w, ladder=False),
+    }
+
+    print_table(
+        f"closed-loop cross-track error, meters ({h}x{w}, "
+        f"{N_FRAMES} frames, lane half-width 0.50)",
+        ["family", "noisy", "arm", "max", "mean", "final", "fresh",
+         "held"],
+        [[fam, "*" if fam in NOISY_FAMILIES else "", arm,
+          f"{r['max_cross_track_m']:.3f}",
+          f"{r['mean_cross_track_m']:.3f}",
+          f"{r['final_cross_track_m']:.3f}",
+          r.get("fresh_commands", ""), r.get("held_commands", "")]
+         for fam in families for arm, r in sorted(rows[fam].items())],
+    )
+    print_table(
+        f"service arm (straight, deadline {DEADLINE_S * 1e3:.0f} ms, "
+        f"overload frames "
+        f"{sorted(t for wd in OVERLOAD_WINDOWS for t in wd)})",
+        ["ladder", "max", "mean", "coasts", "refusals", "statuses"],
+        [[name.removeprefix("ladder_"),
+          f"{r['max_cross_track_m']:.3f}",
+          f"{r['mean_cross_track_m']:.3f}", r["coasts"], r["refusals"],
+          json.dumps(r["statuses"], sort_keys=True)]
+         for name, r in service.items()],
+    )
+
+    gates = {
+        "tracked_under_floor": all(
+            rows[f]["tracked"]["max_cross_track_m"]
+            <= MAX_CROSS_TRACK_FLOOR_M[f]
+            for f in families
+        ),
+        "tracked_le_per_frame_on_noisy": all(
+            rows[f]["tracked"]["mean_cross_track_m"]
+            <= rows[f]["per_frame"]["mean_cross_track_m"]
+            for f in families if f in NOISY_FAMILIES
+        ),
+        "ladder_on_beats_off": (
+            service["ladder_on"]["max_cross_track_m"]
+            < service["ladder_off"]["max_cross_track_m"]
+            and service["ladder_on"]["mean_cross_track_m"]
+            < service["ladder_off"]["mean_cross_track_m"]
+        ),
+        "deterministic_replay": deterministic,
+    }
+    if not args.quick:
+        # the controlled arms must beat the uncontrolled drift by a wide
+        # margin — the loop is genuinely closed, not coasting on a
+        # benign world
+        gates["controlled_beats_blind"] = all(
+            rows[f]["tracked"]["max_cross_track_m"]
+            < 0.5 * rows[f]["blind"]["max_cross_track_m"]
+            for f in families
+        )
+    for name, ok in gates.items():
+        print(f"gate {name}: {'ok' if ok else 'VIOLATED'}")
+
+    out = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "height": h, "width": w, "n_frames": N_FRAMES,
+            "quick": args.quick,
+            "deadline_s": DEADLINE_S,
+            "overload_windows": [[wd.start, wd.stop]
+                                 for wd in OVERLOAD_WINDOWS],
+            "floors_m": MAX_CROSS_TRACK_FLOOR_M,
+        },
+        "families": rows,
+        "service": service,
+        "gates": gates,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, default=float)
+    print(f"wrote {args.out}")
+    if not all(gates.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

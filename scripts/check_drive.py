@@ -1,0 +1,165 @@
+#!/usr/bin/env python
+"""CI trajectory-error gate: closed-loop cross-track must not regress.
+
+The drive-suite counterpart of ``scripts/check_f1.py``: compares
+``BENCH_drive.json`` (``python -m benchmarks.drive_suite``) against the
+committed baseline ``benchmarks/baselines/drive_baseline.json`` and
+fails CI (nonzero exit) on any regression, so a perception or control
+change that quietly widens the vehicle's path fails loudly instead of
+landing:
+
+  * per family, the tracked arm's max and mean cross-track (meters)
+    must stay <= baseline + tolerance, and under the suite's registered
+    per-family floor;
+  * the service ladder-on arm's max/mean must stay <= baseline +
+    tolerance (the overload windows, deadline, and estimator preset are
+    pinned by the suite, so this is one deterministic number);
+  * every gate the suite publishes must hold in the bench run.
+
+The cycle, detector, tracker, controller, and virtual-clock service are
+all deterministic, so a genuine improvement shows up as an exact
+decrease — record it with ``--update`` (review the diff like any other
+baseline bump).  ``--update`` refuses a ``--quick`` bench run: it
+covers only a subset of the pinned families.
+
+Usage:
+  PYTHONPATH=src python scripts/check_drive.py [--bench BENCH_drive.json]
+      [--baseline benchmarks/baselines/drive_baseline.json]
+      [--tolerance 0.0] [--update]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def tracked_errors(bench: dict) -> dict[str, dict]:
+    """{family: {"max_cross_track_m", "mean_cross_track_m"}} for the
+    tracked arm — the deployment configuration the baseline pins."""
+    return {
+        fam: {
+            "max_cross_track_m": float(arms["tracked"]["max_cross_track_m"]),
+            "mean_cross_track_m": float(
+                arms["tracked"]["mean_cross_track_m"]),
+        }
+        for fam, arms in bench["families"].items()
+        if "tracked" in arms
+    }
+
+
+def ladder_on_errors(bench: dict) -> dict:
+    on = bench["service"]["ladder_on"]
+    return {
+        "max_cross_track_m": float(on["max_cross_track_m"]),
+        "mean_cross_track_m": float(on["mean_cross_track_m"]),
+    }
+
+
+def _load(path: str, what: str) -> dict | None:
+    if not os.path.exists(path):
+        print(f"check_drive: {path} not found — run {what} first",
+              file=sys.stderr)
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="BENCH_drive.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/drive_baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.0,
+                    help="allowed cross-track increase in meters before "
+                         "failing (default: none)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current bench run")
+    args = ap.parse_args()
+
+    bench = _load(args.bench, "`python -m benchmarks.drive_suite`")
+    if bench is None:
+        return 2
+    current = tracked_errors(bench)
+    service = ladder_on_errors(bench)
+    floors = bench["meta"]["floors_m"]
+
+    if args.update:
+        if bench.get("meta", {}).get("quick"):
+            print("check_drive: refusing --update from a --quick run — "
+                  "it covers only a subset of the pinned families; rerun "
+                  "`python -m benchmarks.drive_suite` (full)",
+                  file=sys.stderr)
+            return 2
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        payload = {
+            "tracked": {f: current[f] for f in sorted(current)},
+            "service_ladder_on": service,
+        }
+        with open(args.baseline, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"check_drive: wrote baseline for {len(current)} families "
+              f"+ the ladder-on service arm -> {args.baseline}")
+        return 0
+
+    baseline = _load(args.baseline, "`scripts/check_drive.py --update`")
+    if baseline is None:
+        return 2
+
+    quick = bool(bench.get("meta", {}).get("quick"))
+    failures, checked = [], 0
+    for fam, base in sorted(baseline["tracked"].items()):
+        if fam not in current:
+            if not quick:
+                failures.append(
+                    f"{fam}: family missing from full drive bench run")
+            continue
+        cur = current[fam]
+        checked += 1
+        for key, short in (("max_cross_track_m", "max"),
+                           ("mean_cross_track_m", "mean")):
+            if cur[key] > base[key] + args.tolerance:
+                failures.append(
+                    f"{fam}: tracked {short} cross-track {cur[key]:.4f} m "
+                    f"> baseline {base[key]:.4f} m")
+        floor = floors.get(fam)
+        if floor is not None and cur["max_cross_track_m"] > floor:
+            failures.append(
+                f"{fam}: tracked max cross-track "
+                f"{cur['max_cross_track_m']:.4f} m above registered "
+                f"floor {floor:.2f} m")
+    if checked == 0:
+        failures.append("no drive family overlaps the baseline — bench "
+                        "and baseline disagree on families")
+    base_svc = baseline.get("service_ladder_on")
+    if base_svc:
+        for key, short in (("max_cross_track_m", "max"),
+                           ("mean_cross_track_m", "mean")):
+            if service[key] > base_svc[key] + args.tolerance:
+                failures.append(
+                    f"service ladder-on: {short} cross-track "
+                    f"{service[key]:.4f} m > baseline "
+                    f"{base_svc[key]:.4f} m")
+    for gate, ok in bench.get("gates", {}).items():
+        if not ok:
+            failures.append(f"suite gate violated in bench run: {gate}")
+    new_families = sorted(set(current) - set(baseline["tracked"]))
+    if new_families:
+        print(f"check_drive: families without baseline (add with "
+              f"--update): {', '.join(new_families)}")
+
+    if failures:
+        print("check_drive: FAIL")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print(f"check_drive: OK — {checked} families + the ladder-on service "
+          f"arm at or below baseline"
+          + (f" (tolerance {args.tolerance})" if args.tolerance else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -26,6 +26,9 @@ python -m pytest -q -m "fleet and not slow" -x
 # fused hot path: kernel parity, corridor filtering, exact-count tiering,
 # steady-state engagement (marker `fused`)
 python -m pytest -q -m "fused and not slow" -x
+# perception-to-control layer: bird's-eye geometry, waypoints + pure
+# pursuit, closed-loop plant, service steering (marker `drive`)
+python -m pytest -q -m "drive and not slow" -x
 # sharded-fleet layer: replica routing, session affinity, failover,
 # host failure domains, elastic scale-up, speculative offload on the
 # seeded lossy NetworkModel (marker `mesh`); the 8-device placement scenario
@@ -33,7 +36,7 @@ python -m pytest -q -m "fused and not slow" -x
 # inits jax, and the mesh bench below runs under the same flag
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -q -m "mesh and not slow" -x
-python -m pytest -q -m "not slow and not scenarios and not serve and not deadline and not tracking and not fleet and not mesh and not fused"
+python -m pytest -q -m "not slow and not scenarios and not serve and not deadline and not tracking and not fleet and not mesh and not fused and not drive"
 # CI F1 gate: regenerate the scenario + drive-cycle + fleet suites and
 # compare per-family (static, tracked, and coast-only) F1 against the
 # committed baseline (benchmarks/baselines/f1_baseline.json); the fleet
@@ -48,3 +51,9 @@ python -m benchmarks.fleet_suite --quick
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m benchmarks.mesh_suite --quick
 python scripts/check_f1.py
+# closed-loop trajectory gate: the drive suite self-gates (floors,
+# tracked<=per-frame on noisy, ladder on<off, deterministic replay) and
+# check_drive.py compares cross-track error against the committed
+# baseline (benchmarks/baselines/drive_baseline.json)
+python -m benchmarks.drive_suite --quick
+python scripts/check_drive.py

@@ -23,6 +23,13 @@ from .plan import (  # noqa: F401
 from .metrics import (  # noqa: F401
     DetectionScore, aggregate_scores, match_peaks, score_batch, score_frame,
 )
+from .geometry import (  # noqa: F401
+    DEFAULT_CAMERA, CameraConfig, CameraGeometry, canonical_rho_theta,
+)
+from .control import (  # noqa: F401
+    ControlConfig, LateralController, SteeringCommand, Waypoints,
+    extract_waypoints, ground_boundaries,
+)
 from .network import (  # noqa: F401
     Delivery, NetworkConfig, NetworkModel, expected_rtt_s, force_lost,
 )

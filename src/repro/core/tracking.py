@@ -528,6 +528,19 @@ class TrackedFrame(NamedTuple):
     result: DetectionResult     # raw detector output for the frame
     tracks: list[Track]         # reported (smoothed) tracks
     gated: bool                 # True iff the frame ran the gated sweep
+    steering: Optional[object] = None   # SteeringCommand when a
+                                        # controller is attached
+
+    @property
+    def control_peaks(self) -> tuple[np.ndarray, np.ndarray]:
+        """The (peaks, valid) a controller should steer from: smoothed
+        tracks when the tracker reports any, the frame's raw detections
+        otherwise (cold start / track loss — steering falls back exactly
+        like detection falls back to the full sweep)."""
+        if self.tracks:
+            return tracks_as_peaks(self.tracks)
+        return (np.asarray(self.result.peaks).reshape(-1, 2),
+                np.asarray(self.result.valid).reshape(-1))
 
 
 class TrackingPipeline:
@@ -597,7 +610,13 @@ class TrackingPipeline:
         self.full_frames = 0
         self.fused_frames = 0
 
-    def process(self, frame) -> TrackedFrame:
+    def process(self, frame, controller=None) -> TrackedFrame:
+        """Detect + track one frame; with a ``controller``
+        (``core.control.LateralController``) attached, also emit the
+        frame's steering command (from the smoothed tracks when any are
+        reported, the raw detections otherwise — see
+        ``TrackedFrame.control_peaks``) so callers get the full
+        perception -> control spine in one call."""
         img = load_frame(frame)
         bins = None
         if self.gated_plan is not None:
@@ -617,4 +636,9 @@ class TrackingPipeline:
             self.gated_frames += 1
         tracks = self.tracker.step(np.asarray(res.peaks),
                                    np.asarray(res.valid))
-        return TrackedFrame(res, tracks, bins is not None)
+        out = TrackedFrame(res, tracks, bins is not None)
+        if controller is not None:
+            out = out._replace(
+                steering=controller.command(*out.control_peaks)
+            )
+        return out

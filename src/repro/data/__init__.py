@@ -5,6 +5,8 @@ and a deterministic, resumable, shard-aware token pipeline for the LM archs."""
 from .images import RoadScene, frame_stream, synthetic_road  # noqa: F401
 from .scenarios import (  # noqa: F401
     NOISY_FAMILIES,
+    ClosedLoopConfig,
+    ClosedLoopCycle,
     DriveCycle,
     DriveCycleFrame,
     ScenarioFamily,
@@ -15,6 +17,7 @@ from .scenarios import (  # noqa: F401
     scenario_names,
     scenario_stream,
     segment_rho_theta,
+    standard_closed_loop,
     standard_drive_cycle,
     transform_rho_theta,
 )

@@ -137,7 +137,13 @@ from repro.core.plan import (
     DetectionPlan, DetectionResult, PipelineConfig, PlanCache,
     downshift_frame, load_frame,
 )
-from repro.core.tracking import LaneTracker, Track, TrackerConfig
+from repro.core.control import (
+    ControlConfig, LateralController, SteeringCommand,
+)
+from repro.core.geometry import CameraConfig, CameraGeometry
+from repro.core.tracking import (
+    LaneTracker, Track, TrackerConfig, tracks_as_peaks,
+)
 from repro.runtime.heartbeat import Heartbeat
 from repro.runtime.supervisor import WorkerFailure
 
@@ -413,6 +419,10 @@ class DetectionRequest:
     # filled by the service
     result: Optional[DetectionResult] = None
     tracks: Optional[list[Track]] = None    # smoothed tracks (sessions only)
+    steering: Optional[SteeringCommand] = None  # lateral command (sessions
+                                                # with steering enabled):
+                                                # fresh on served answers,
+                                                # a decayed hold on refusals
     status: RequestStatus = RequestStatus.PENDING
     bucket: Optional[tuple[int, int]] = None
     downshift: int = 1                      # resolution divisor served at
@@ -770,6 +780,8 @@ class DetectionService:
                  max_stager_restarts: int = 3,
                  gate_band: Optional[int] = 40,
                  fused_corridors: Optional[int] = None,
+                 steering: Optional[ControlConfig] = None,
+                 camera: Optional[CameraConfig] = None,
                  device: Optional[object] = None):
         if cfg.hough.theta_band is not None:
             raise ValueError(
@@ -797,6 +809,17 @@ class DetectionService:
         self.batch_size = batch_size
         self.tracker_cfg = tracker
         self.sessions: dict[str, LaneTracker] = {}
+        # Steering surface: with a ControlConfig, every *session* request
+        # leaves the service carrying a SteeringCommand — a fresh
+        # pure-pursuit command on served answers (full, downshifted, or
+        # coast), a decayed hold on refusals — so a vehicle consuming
+        # the stream always has a lateral command, degradation included.
+        # One LateralController per session, on the service clock; the
+        # camera model is one fixed rig rescaled to each session's
+        # native resolution (CameraConfig.for_image).
+        self.steering_cfg = steering
+        self.camera_cfg = camera if camera is not None else CameraConfig()
+        self.controllers: dict[str, LateralController] = {}
         self.buckets = tuple(sorted(buckets))
         self.max_queue = max_queue
         self.est_smoothing = est_smoothing
@@ -882,6 +905,23 @@ class DetectionService:
         — accounting outlives the stream it measured)."""
         self.sessions.pop(session_id, None)
         self._session_coasts.pop(session_id, None)
+        self.controllers.pop(session_id, None)
+
+    def _controller(self, req: DetectionRequest
+                    ) -> Optional[LateralController]:
+        """The per-session lateral controller (None unless steering is
+        enabled and the request belongs to a session)."""
+        if self.steering_cfg is None or req.session_id is None:
+            return None
+        ctl = self.controllers.get(req.session_id)
+        if ctl is None:
+            H, W = req.frame.shape[:2]
+            ctl = LateralController(
+                CameraGeometry(self.camera_cfg.for_image(H, W)),
+                self.steering_cfg, clock=self.clock,
+            )
+            self.controllers[req.session_id] = ctl
+        return ctl
 
     def session_slo(self, session_id: str) -> SessionSLO:
         """The session's SLO accounting (zeros if never seen)."""
@@ -1002,6 +1042,11 @@ class DetectionService:
         req._staged = None
         if req.session_id is not None:
             self._slo(req.session_id).refused += 1
+            ctl = self._controller(req)
+            if ctl is not None:
+                # no answer still needs a lateral command: the vehicle
+                # holds the last one, decayed toward straight
+                req.steering = ctl.hold()
 
     def _evict_for(self, req: DetectionRequest, now: float) -> bool:
         """Priority-tiered backpressure: free one queue slot for ``req``
@@ -1226,6 +1271,11 @@ class DetectionService:
         req.status = RequestStatus.DEGRADED_COAST
         req.finished_at = now
         req._staged = None
+        ctl = self._controller(req)
+        if ctl is not None:
+            # a coast answer still steers: the command comes from the
+            # tracker's predicted lanes, exactly like a served frame
+            req.steering = ctl.command(*tracks_as_peaks(tracks))
         self._session_coasts[req.session_id] = steps
         self.served_coast += 1
         self._slo(req.session_id).served_coast += 1
@@ -1398,6 +1448,21 @@ class DetectionService:
                     np.asarray(req.result.valid),
                     scale=req.downshift,
                 )
+                ctl = self._controller(req)
+                if ctl is not None:
+                    # steer from the smoothed tracks when the tracker
+                    # reports any, from the frame's raw detections
+                    # otherwise (session warmup) — the same fallback as
+                    # TrackedFrame.control_peaks
+                    if req.tracks:
+                        req.steering = ctl.command(
+                            *tracks_as_peaks(req.tracks)
+                        )
+                    else:
+                        req.steering = ctl.command(
+                            np.asarray(req.result.peaks),
+                            np.asarray(req.result.valid),
+                        )
                 # a real frame re-grounds the tracker: the coast budget
                 # resets (see _try_coast)
                 self._session_coasts.pop(req.session_id, None)

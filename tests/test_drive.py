@@ -1,0 +1,686 @@
+"""Perception-to-control tests: bird's-eye geometry, waypoint/pure-pursuit
+control, the closed-loop drive harness, and steering on the service.
+
+Layered like the stack:
+
+  * geometry: homography round trips (image -> ground -> image exact to
+    float precision), horizon guards, resolution rescaling;
+  * transform_rho_theta: the PR-10 wrap bugfix (theta in [0, pi) for ANY
+    yaw) and the compose-vs-one-shot invariant the closed-loop truth
+    bookkeeping relies on (hypothesis property where available, seeded
+    deterministic twin always);
+  * dy threading: make_drive_cycle's surge leg recovers truth;
+  * control: centerline extraction on analytic truth, fallback ladder,
+    hold decay, pure-pursuit signs;
+  * closed loop: convergence with working detection, divergence when
+    blind, bit-reproducibility;
+  * service: steering attached on served/coast/refused session requests.
+
+Detector-in-the-loop tests run at the harness resolution 240x320 (the
+camera model's native frame); everything else is pure host math.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CameraConfig, CameraGeometry, ControlConfig, LateralController,
+    canonical_rho_theta, extract_waypoints, ground_boundaries,
+)
+from repro.core.hough import HoughConfig
+from repro.core.pipeline import LineDetector, PipelineConfig
+from repro.core.tracking import TrackingPipeline
+from repro.data import (
+    ClosedLoopConfig, ClosedLoopCycle, make_drive_cycle, make_scenario,
+    standard_closed_loop, transform_rho_theta,
+)
+from repro.serve.detection import (
+    DetectionRequest, DetectionService, RequestStatus, VirtualClock,
+)
+
+pytestmark = pytest.mark.drive
+
+HW = (240, 320)
+
+
+def _cfg() -> PipelineConfig:
+    return PipelineConfig(hough=HoughConfig(compact=True,
+                                            max_edges="auto"))
+
+
+# --- geometry ---------------------------------------------------------------
+
+
+def test_canonical_rho_theta_all_wraps():
+    rho, theta = 40.0, 0.7
+    for k in range(-6, 7):
+        r, t = canonical_rho_theta(rho if k % 2 == 0 else rho,
+                                   theta + k * math.pi)
+        assert 0.0 <= t < math.pi
+        assert t == pytest.approx(theta, abs=1e-9)
+        assert r == pytest.approx(rho if k % 2 == 0 else -rho, abs=1e-9)
+
+
+def test_pixel_ground_round_trip():
+    geo = CameraGeometry(CameraConfig())
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        u = rng.uniform(0, 319)
+        v = rng.uniform(geo.horizon_v + 5.0, 239)
+        X, Y = geo.pixel_to_ground(u, v)
+        assert Y > 0.0
+        u2, v2 = geo.ground_to_pixel(X, Y)
+        assert (u2, v2) == pytest.approx((u, v), abs=1e-8)
+
+
+def test_ground_depth_increases_toward_horizon():
+    geo = CameraGeometry(CameraConfig())
+    ys = [geo.pixel_to_ground(159.5, v)[1] for v in (239, 180, 120, 60)]
+    assert ys == sorted(ys)
+    assert ys[0] < 2.5          # image bottom: a couple meters ahead
+    assert ys[-1] > 10.0        # near the horizon: far field
+
+
+def test_above_horizon_raises():
+    geo = CameraGeometry(CameraConfig())
+    with pytest.raises(ValueError):
+        geo.pixel_to_ground(160.0, geo.horizon_v - 1.0)
+
+
+def test_line_round_trip_image_ground_image():
+    """image -> ground -> image is the identity to float precision (the
+    homography maps lines exactly; no rasterization in this path)."""
+    geo = CameraGeometry(CameraConfig())
+    rng = np.random.default_rng(1)
+    n = 0
+    for _ in range(80):
+        theta = rng.uniform(0.0, math.pi)
+        rho = rng.uniform(-200.0, 200.0)
+        try:
+            rg, tg = geo.line_to_ground(rho, theta)
+        except ValueError:
+            continue        # the horizon line itself
+        r2, t2 = geo.line_to_image(rg, tg)
+        assert t2 == pytest.approx(theta, abs=1e-8)
+        assert r2 == pytest.approx(rho, abs=1e-6)
+        n += 1
+    assert n > 70
+
+
+def test_line_round_trip_ground_image_ground():
+    geo = CameraGeometry(CameraConfig())
+    rng = np.random.default_rng(2)
+    for _ in range(40):
+        tg = rng.uniform(0.0, math.pi)
+        rg = rng.uniform(-3.0, 3.0)
+        try:
+            ri, ti = geo.line_to_image(rg, tg)
+        except ValueError:
+            continue
+        rg2, tg2 = geo.line_to_ground(ri, ti)
+        assert tg2 == pytest.approx(tg, abs=1e-8)
+        assert rg2 == pytest.approx(rg, abs=1e-8)
+
+
+def test_vertical_center_line_maps_to_centerline():
+    """The image's vertical center line is the ground's X=0 axis."""
+    geo = CameraGeometry(CameraConfig())
+    cx = (320 - 1) / 2.0
+    rg, tg = geo.line_to_ground(cx, 0.0)    # x = cx in the image
+    # ground line X*cos(tg) + Y*sin(tg) = rg with X=0 for all Y
+    assert rg == pytest.approx(0.0, abs=1e-9)
+    assert tg == pytest.approx(0.0, abs=1e-9)
+
+
+def test_camera_for_image_rescales():
+    base = CameraConfig()
+    half = base.for_image(120, 160)
+    assert half.focal_px == pytest.approx(base.focal_px / 2.0)
+    geo_b, geo_h = CameraGeometry(base), CameraGeometry(half)
+    # the same physical ray: pixel (u, v) at full res is (u/2, v/2) at
+    # half res, and both see the same ground point
+    Xb, Yb = geo_b.pixel_to_ground(200.0, 200.0)
+    Xh, Yh = geo_h.pixel_to_ground(100.0, 100.0)
+    assert (Xh, Yh) == pytest.approx((Xb, Yb), abs=1e-6)
+    assert base.for_image(240, 320) is base
+
+
+def test_lines_to_ground_respects_valid_mask():
+    geo = CameraGeometry(CameraConfig())
+    peaks = np.array([[150.0, 0.1], [120.0, 0.2], [80.0, 2.9]], float)
+    all_g = geo.lines_to_ground(peaks)
+    masked = geo.lines_to_ground(peaks, [True, False, True])
+    assert all_g.shape == (3, 2)
+    assert masked.shape == (2, 2)
+    assert np.allclose(masked, all_g[[0, 2]])
+
+
+# --- transform_rho_theta: wrap bugfix + composition invariant ---------------
+
+
+def test_transform_theta_canonical_for_large_yaw():
+    """Regression (PR 10): the old single +-pi correction returned
+    theta=3.358 for yaw=3.5 — outside [0, pi).  Any accumulated yaw must
+    canonicalize."""
+    for yaw in (3.5, -3.5, 7.2, -9.9, 2.0 * math.pi, 11.0,
+                math.pi, -math.pi, 100.0):
+        rp, tp = transform_rho_theta(30.0, 0.5, yaw_rad=yaw, dx=3.0,
+                                     dy=-2.0, cx=159.5, cy=119.5)
+        assert 0.0 <= tp < math.pi, f"yaw={yaw}: theta'={tp}"
+
+
+def test_transform_wrap_parity_flips_rho():
+    """A full pi of extra yaw is the same line with the normal flipped:
+    theta' identical, rho' negated."""
+    r1, t1 = transform_rho_theta(40.0, 0.8, yaw_rad=0.3, dx=0.0, dy=0.0,
+                                 cx=80.0, cy=60.0)
+    # same rotation composed with a half turn about the same center: the
+    # frame's lines coincide (a line is invariant under point-reflection
+    # through any of its... not its own points — but rho/theta quotient:
+    # rotating the *normal* by pi flips its sign)
+    r2, t2 = transform_rho_theta(-40.0, 0.8 + math.pi, yaw_rad=0.3,
+                                 dx=0.0, dy=0.0, cx=80.0, cy=60.0)
+    assert t2 == pytest.approx(t1, abs=1e-9)
+    assert r2 == pytest.approx(r1, abs=1e-9)
+
+
+def _compose_poses(poses):
+    """Accumulate rigid center-rotations q = R(p - c) + c + t: yaw adds,
+    translation composes as t_acc' = R2 t_acc + t2."""
+    yaw_acc, tx, ty = 0.0, 0.0, 0.0
+    for yaw, dx, dy in poses:
+        c, s = math.cos(yaw), math.sin(yaw)
+        tx, ty = c * tx - s * ty + dx, s * tx + c * ty + dy
+        yaw_acc += yaw
+    return yaw_acc, tx, ty
+
+
+def _check_compose(poses, rho, theta, cx, cy, tol=1e-6):
+    r_step, t_step = rho, theta
+    for yaw, dx, dy in poses:
+        r_step, t_step = transform_rho_theta(
+            r_step, t_step, yaw_rad=yaw, dx=dx, dy=dy, cx=cx, cy=cy)
+    yaw_acc, tx, ty = _compose_poses(poses)
+    r_one, t_one = transform_rho_theta(rho, theta, yaw_rad=yaw_acc,
+                                       dx=tx, dy=ty, cx=cx, cy=cy)
+    # compare in the (rho, theta) ~ (-rho, theta+pi) quotient: float
+    # rounding can land the canonical theta on either side of the seam
+    dt = abs(t_step - t_one)
+    if dt > math.pi / 2.0:
+        dt = abs(dt - math.pi)
+        r_one = -r_one
+    assert dt <= tol, (t_step, t_one)
+    assert abs(r_step - r_one) <= max(tol, tol * abs(r_step)), \
+        (r_step, r_one)
+
+
+def test_transform_composition_matches_one_shot_seeded():
+    """Deterministic twin of the hypothesis property below: stepping a
+    line through k incremental poses equals one transform of the
+    accumulated pose — the invariant ClosedLoopCycle's truth relies on
+    (it carries the ABSOLUTE pose and transforms once per frame)."""
+    rng = np.random.default_rng(7)
+    for _ in range(200):
+        k = int(rng.integers(1, 8))
+        poses = [(float(rng.uniform(-1.2, 1.2)),
+                  float(rng.uniform(-30, 30)),
+                  float(rng.uniform(-30, 30))) for _ in range(k)]
+        rho = float(rng.uniform(-150, 150))
+        theta = float(rng.uniform(0, math.pi))
+        _check_compose(poses, rho, theta, cx=159.5, cy=119.5, tol=1e-6)
+
+
+def test_transform_composition_matches_one_shot_hypothesis():
+    """Property form over the pose space (skips w/o hypothesis)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    finite = dict(allow_nan=False, allow_infinity=False)
+
+    @settings(max_examples=150, deadline=None)
+    @given(
+        poses=st.lists(
+            st.tuples(st.floats(-1.5, 1.5, **finite),
+                      st.floats(-40.0, 40.0, **finite),
+                      st.floats(-40.0, 40.0, **finite)),
+            min_size=1, max_size=8),
+        rho=st.floats(-150.0, 150.0, **finite),
+        theta=st.floats(0.0, math.pi - 1e-9, **finite),
+    )
+    def prop(poses, rho, theta):
+        _check_compose(poses, rho, theta, cx=159.5, cy=119.5, tol=1e-5)
+
+    prop()
+
+
+# --- dy threading through make_drive_cycle ----------------------------------
+
+
+def test_drive_cycle_surge_moves_frames_and_truth_follows():
+    """The dy leg end to end: a surge-only cycle produces per-frame
+    images that differ, and every planted stroke pixel lies on the
+    transformed analytic truth — same invariant as the sway test in
+    test_tracking.py, now for longitudinal motion."""
+    cyc = make_drive_cycle("straight", 8, 120, 160, seed=1,
+                           sway_px=0.0, surge_px=7.0, surge_period=9.0,
+                           yaw_amp_deg=0.0)
+    assert len({f.scene.image.tobytes() for f in cyc}) > 1
+    saw_nonzero = False
+    for f in cyc:
+        if abs(f.dy_px) > 0.5:
+            saw_nonzero = True
+        ys, xs = np.nonzero(f.scene.image >= 230)
+        assert len(xs) > 50
+        dists = []
+        for rho, theta in f.scene.lines_rho_theta:
+            dists.append(np.abs(xs * math.cos(theta)
+                                + ys * math.sin(theta) - rho))
+        assert np.min(dists, axis=0).max() <= 3.0
+    assert saw_nonzero
+
+
+def test_drive_cycle_surge_truth_recovered_by_detector():
+    """The detector finds the surged truth: dy threads through warp and
+    truth consistently enough to score (localization within the
+    matcher's gate)."""
+    from repro.core.metrics import score_frame
+    det = LineDetector(_cfg())
+    cyc = make_drive_cycle("straight", 6, *HW, seed=0, sway_px=3.0,
+                           surge_px=6.0, surge_period=7.0)
+    for f in cyc:
+        res = det.detect(f.scene.image)
+        s = score_frame(np.asarray(res.peaks), np.asarray(res.valid),
+                        f.scene.lines_rho_theta)
+        # every surged line is found where the transform says it is
+        # (precision can dip on duplicate raster peaks — recall and
+        # localization are what prove the dy leg's truth)
+        assert s.recall == 1.0
+        assert s.mean_rho_err <= 2.0
+        assert s.mean_theta_err_deg <= 2.0
+
+
+def test_drive_cycle_default_has_no_surge():
+    a = make_drive_cycle("straight", 4, 120, 160, seed=3)
+    b = make_drive_cycle("straight", 4, 120, 160, seed=3, surge_px=0.0)
+    for fa, fb in zip(a, b):
+        assert fa.scene.image.tobytes() == fb.scene.image.tobytes()
+        assert fa.dy_px == 0.0
+
+
+# --- control: centerline, fallbacks, pure pursuit ---------------------------
+
+
+def _truth_peaks(family="straight", seed=0):
+    return make_scenario(family, *HW, seed=seed).lines_rho_theta
+
+
+def test_ground_boundaries_filters_cross_traffic():
+    geo = CameraGeometry(CameraConfig())
+    cfg = ControlConfig()
+    lanes = _truth_peaks()
+    # a horizontal image line (theta ~ pi/2) is a stop line / horizon
+    # artifact, not a lane boundary
+    peaks = np.vstack([lanes, [[200.0, math.pi / 2.0]]])
+    bounds = ground_boundaries(peaks, None, geo, cfg)
+    assert len(bounds) == 2
+
+
+def test_extract_waypoints_pair_centered_on_truth():
+    geo = CameraGeometry(CameraConfig())
+    wps = extract_waypoints(_truth_peaks(), None, geo, ControlConfig())
+    assert wps.source == "pair"
+    assert wps.points.shape == (5, 2)
+    # the straight family's lanes are symmetric about the image center:
+    # the centerline runs up the middle
+    assert abs(wps.offset_m) < 0.05
+    assert abs(wps.slope) < 0.05
+    # waypoints ordered by increasing forward distance
+    assert np.all(np.diff(wps.points[:, 1]) > 0)
+
+
+def test_extract_waypoints_single_boundary_fallback():
+    geo = CameraGeometry(CameraConfig())
+    cfg = ControlConfig()
+    lanes = _truth_peaks()
+    left_only = extract_waypoints(lanes[:1], None, geo, cfg)
+    right_only = extract_waypoints(lanes[1:], None, geo, cfg)
+    assert {left_only.source, right_only.source} == {"left", "right"}
+    none = extract_waypoints(np.zeros((0, 2)), None, geo, cfg)
+    assert none.source == "none" and not none.found
+
+
+def test_controller_steers_toward_center():
+    """Perceived offset right of center -> negative curvature (turn
+    left), and vice versa: the pure-pursuit sign that closes the loop."""
+    geo = CameraGeometry(CameraConfig())
+    H, W = HW
+    cx, cy = (W - 1) / 2.0, (H - 1) / 2.0
+    lanes = _truth_peaks()
+    for dx_img, want in ((-30.0, -1.0), (30.0, +1.0)):
+        # scene shifted right (dx>0) = vehicle left of center = steer
+        # right (positive curvature)
+        ctl = LateralController(geo, clock=lambda: 0.0)
+        shifted = np.array([
+            transform_rho_theta(float(r), float(t), yaw_rad=0.0,
+                                dx=dx_img, dy=0.0, cx=cx, cy=cy)
+            for r, t in lanes], np.float32)
+        cmd = ctl.command(shifted)
+        assert cmd.fresh and cmd.source == "pair"
+        assert math.copysign(1.0, cmd.curvature) == want
+        assert cmd.steer_rad == pytest.approx(
+            math.atan(ctl.cfg.wheelbase_m * cmd.curvature))
+
+
+def test_controller_single_boundary_uses_pair_memory():
+    """After one full pair, a single visible boundary reconstructs the
+    same centerline the pair gave (no half-width-prior jump)."""
+    geo = CameraGeometry(CameraConfig())
+    lanes = _truth_peaks()
+    ctl = LateralController(geo, clock=lambda: 0.0)
+    full = ctl.command(lanes)
+    only_left = ctl.command(lanes[:1])
+    assert only_left.source == "left"
+    assert only_left.cross_track_m == pytest.approx(full.cross_track_m,
+                                                    abs=1e-6)
+    assert only_left.heading_rad == pytest.approx(full.heading_rad,
+                                                  abs=1e-6)
+    # stateless extraction (no memory) lands elsewhere: the memory is
+    # doing real work
+    stateless = extract_waypoints(lanes[:1], None, geo, ctl.cfg)
+    assert abs(-stateless.offset_m - full.cross_track_m) > 0.01
+
+
+def test_controller_hold_decays_to_straight():
+    geo = CameraGeometry(CameraConfig())
+    ctl = LateralController(geo, clock=lambda: 0.0)
+    first = ctl.command(_truth_peaks())
+    k0 = first.curvature
+    ks = []
+    for i in range(ctl.cfg.hold_frames + 3):
+        cmd = ctl.hold()
+        ks.append(cmd.curvature)
+        if i < ctl.cfg.hold_frames:
+            assert cmd.source == "hold" and cmd.age == i + 1
+    assert ks[0] == pytest.approx(k0 * ctl.cfg.hold_decay)
+    assert ks[-1] == 0.0            # budget spent: command straight
+    assert ctl.hold().source == "none"
+    # empty detections route through hold, not a crash
+    ctl2 = LateralController(geo, clock=lambda: 0.0)
+    assert ctl2.command(np.zeros((0, 2))).source == "none"
+
+
+def test_controller_accepts_tracks():
+    """Track objects (anything with .rho/.theta) are valid input — the
+    tracked pipeline and the service coast path feed tracks directly."""
+    from repro.core.tracking import Track
+    geo = CameraGeometry(CameraConfig())
+    lanes = _truth_peaks()
+    tracks = [Track(track_id=i, rho=float(r), theta=float(t))
+              for i, (r, t) in enumerate(lanes)]
+    a = LateralController(geo, clock=lambda: 0.0).command(lanes)
+    b = LateralController(geo, clock=lambda: 0.0).command(tracks)
+    assert b.curvature == pytest.approx(a.curvature, abs=1e-6)
+
+
+# --- closed loop ------------------------------------------------------------
+
+
+def test_closed_loop_truth_matches_scripted_cycle_pose():
+    """ClosedLoopCycle's absolute-pose truth agrees with the composed
+    per-step transforms of the same commanded motion (the deterministic
+    composition invariant, end to end through the plant)."""
+    cyc = ClosedLoopCycle("straight", 8, *HW, seed=0)
+    H, W = HW
+    cx, cy = (W - 1) / 2.0, (H - 1) / 2.0
+    for _ in range(5):
+        fr = cyc.observe()
+        yaw, dx, dy = cyc.pose()
+        want = np.array([
+            transform_rho_theta(float(r), float(t), yaw_rad=yaw, dx=dx,
+                                dy=dy, cx=cx, cy=cy)
+            for r, t in cyc.base.lines_rho_theta], np.float32)
+        assert np.allclose(fr.scene.lines_rho_theta, want)
+        cyc.advance(0.05)
+
+
+def test_closed_loop_blind_drifts_off():
+    """No steering = the disturbance wins: cross-track error exceeds any
+    controlled run's by a wide margin."""
+    cyc = standard_closed_loop("straight", 48, seed=0)
+    for _ in range(48):
+        cyc.observe()
+        cyc.advance(None)
+    assert cyc.max_cross_track_m > 0.6
+
+
+def test_closed_loop_oracle_converges():
+    """Steering from the analytic truth (a perfect detector) pulls the
+    off-center start toward the lane center and keeps it there — the
+    controller gains + world-model signs close the loop stably."""
+    cyc = standard_closed_loop("straight", 48, seed=0)
+    ctl = LateralController(clock=lambda: float(cyc.t))
+    for _ in range(48):
+        fr = cyc.observe()
+        cmd = ctl.command(fr.scene.lines_rho_theta)
+        cyc.advance(cmd.curvature)
+    ct = cyc.cross_track
+    assert cyc.max_cross_track_m <= 0.30       # never worse than start
+    assert float(ct[-12:].max()) < 0.15        # settled by the end
+    assert cyc.mean_cross_track_m < 0.12
+
+
+@pytest.mark.slow
+def test_closed_loop_detector_converges_and_is_reproducible():
+    """The REAL spine — detector -> tracker -> controller -> plant —
+    converges like the oracle, and two identical runs produce
+    bit-identical trajectories (seeded rngs + virtual clock only)."""
+    def run():
+        cyc = standard_closed_loop("straight", 40, seed=0)
+        ctl = LateralController(clock=lambda: float(cyc.t))
+        tp = TrackingPipeline(_cfg())
+        for _ in range(40):
+            fr = cyc.observe()
+            tf = tp.process(fr.scene.image, controller=ctl)
+            cyc.advance(tf.steering.curvature)
+        return cyc
+
+    a, b = run(), run()
+    assert a.max_cross_track_m <= 0.30
+    assert float(a.cross_track[-10:].max()) < 0.15
+    assert a.trajectory == b.trajectory
+
+
+def test_closed_loop_dropout_costs_trajectory_error():
+    """A mid-transient camera blackout measurably degrades the oracle
+    trajectory vs the same cycle without it — detection failures now
+    cost trajectory error, which is the point of this PR."""
+    def run(drop):
+        cyc = ClosedLoopCycle("straight", 32, *HW, seed=0,
+                              dropout_frames=drop)
+        ctl = LateralController(clock=lambda: float(cyc.t))
+        for _ in range(32):
+            fr = cyc.observe()
+            if fr.dropout:
+                cmd = ctl.hold()
+            else:
+                cmd = ctl.command(fr.scene.lines_rho_theta)
+            cyc.advance(cmd.curvature)
+        return cyc.mean_cross_track_m
+
+    assert run(tuple(range(6, 12))) > run(()) * 1.05
+
+
+def test_closed_loop_advance_none_holds_decayed():
+    cyc = ClosedLoopCycle("straight", 8, *HW, seed=0)
+    cyc.advance(0.5)
+    assert cyc.trajectory[-1][3] == pytest.approx(0.5)
+    cyc.advance(None)
+    assert cyc.trajectory[-1][3] == pytest.approx(
+        0.5 * cyc.cfg.hold_decay)
+    cyc.advance(None)
+    assert cyc.trajectory[-1][3] == pytest.approx(
+        0.5 * cyc.cfg.hold_decay ** 2)
+
+
+def test_closed_loop_curvature_clamped():
+    cyc = ClosedLoopCycle("straight", 4, *HW, seed=0)
+    cyc.advance(99.0)
+    assert cyc.trajectory[-1][3] == cyc.cfg.max_curvature
+
+
+# --- service steering -------------------------------------------------------
+
+
+def _service(clock, **kw):
+    kw.setdefault("buckets", (HW,))
+    kw.setdefault("batch_size", 1)
+    kw.setdefault("prefetch", False)
+    kw.setdefault("steering", ControlConfig())
+    return DetectionService(_cfg(), clock=clock, **kw)
+
+
+def _pump(svc, clock, req, cost=0.02):
+    svc.step()
+    grid = svc.grids[HW]
+    if grid.in_flight is not None:
+        clock.advance(cost)
+        svc.drain()
+    for _ in range(4):
+        if req.is_terminal:
+            break
+        svc.step()
+        svc.drain()
+    assert req.is_terminal
+    return req
+
+
+def test_service_attaches_steering_on_session_requests():
+    clock = VirtualClock()
+    svc = _service(clock)
+    img = make_scenario("straight", *HW, seed=0).image
+    try:
+        for t in range(3):
+            clock.advance(0.1)
+            req = DetectionRequest(uid=t, frame=img, deadline_s=0.5,
+                                   session_id="ego")
+            svc.submit(req)
+            _pump(svc, clock, req)
+            assert req.status is RequestStatus.DONE
+            assert req.steering is not None
+            assert req.steering.t == clock()
+        # the warm session steers from smoothed tracks: a pair fit
+        assert req.steering.source == "pair"
+        # non-session requests carry no steering
+        solo = DetectionRequest(uid=99, frame=img, deadline_s=0.5)
+        svc.submit(solo)
+        _pump(svc, clock, solo)
+        assert solo.steering is None
+    finally:
+        svc.close()
+
+
+def test_service_coast_and_refusal_keep_steering():
+    """Overload: ladder-on coasts carry a FRESH command from predicted
+    tracks; refusals carry a decayed hold — the vehicle is never left
+    without a lateral command mid-session."""
+    clock = VirtualClock()
+    svc = _service(clock)
+    grid = svc.grids[HW]
+    img = make_scenario("straight", *HW, seed=0).image
+    try:
+        for t in range(8):      # warm the tracker past coast_hits
+            clock.advance(0.1)
+            req = DetectionRequest(uid=t, frame=img, deadline_s=0.5,
+                                   session_id="ego")
+            svc.submit(req)
+            _pump(svc, clock, req)
+        k_warm = req.steering.curvature
+        # overload: estimator says a dispatch cannot meet any deadline
+        grid.est_s, grid.est_measured = 5.0, True
+        coasts, holds = [], []
+        for t in range(8, 14):
+            clock.advance(0.1)
+            req = DetectionRequest(uid=t, frame=img, deadline_s=0.1,
+                                   session_id="ego")
+            svc.submit(req)
+            svc.step()
+            assert req.is_terminal
+            assert req.steering is not None
+            if req.status is RequestStatus.DEGRADED_COAST:
+                coasts.append(req)
+            else:
+                assert req.status is RequestStatus.DEADLINE_EXCEEDED
+                holds.append(req)
+        assert coasts and holds     # budget covers some, not all
+        for r in coasts:
+            assert r.steering.fresh and r.tracks
+        ages = [r.steering.age for r in holds]
+        assert ages == sorted(ages)     # hold chain: ages increase
+        assert all(r.steering.source == "hold" for r in holds)
+        # decay compounds off the last fresh command
+        assert abs(holds[0].steering.curvature) <= abs(k_warm) + 1e-9
+    finally:
+        svc.close()
+
+
+def test_service_ladder_off_refusals_still_hold():
+    clock = VirtualClock()
+    svc = _service(clock, ladder=False)
+    grid = svc.grids[HW]
+    img = make_scenario("straight", *HW, seed=0).image
+    try:
+        clock.advance(0.1)
+        req = DetectionRequest(uid=0, frame=img, deadline_s=0.5,
+                               session_id="ego")
+        svc.submit(req)
+        _pump(svc, clock, req)
+        grid.est_s, grid.est_measured = 5.0, True
+        clock.advance(0.1)
+        shed = DetectionRequest(uid=1, frame=img, deadline_s=0.1,
+                                session_id="ego")
+        svc.submit(shed)
+        svc.step()
+        assert shed.status is RequestStatus.DEADLINE_EXCEEDED
+        assert shed.steering is not None
+        assert shed.steering.source == "hold"
+    finally:
+        svc.close()
+
+
+def test_end_session_drops_controller():
+    clock = VirtualClock()
+    svc = _service(clock)
+    img = make_scenario("straight", *HW, seed=0).image
+    try:
+        req = DetectionRequest(uid=0, frame=img, session_id="ego")
+        svc.submit(req)
+        _pump(svc, clock, req)
+        assert "ego" in svc.controllers
+        svc.end_session("ego")
+        assert "ego" not in svc.controllers
+    finally:
+        svc.close()
+
+
+def test_tracking_pipeline_steering_hook():
+    """TrackingPipeline.process(frame, controller=...) attaches the
+    command, steering from tracks once confirmed and from raw
+    detections during warmup."""
+    cyc = standard_closed_loop("straight", 6, seed=0)
+    ctl = LateralController(clock=lambda: float(cyc.t))
+    tp = TrackingPipeline(_cfg())
+    sources = []
+    for _ in range(4):
+        fr = cyc.observe()
+        tf = tp.process(fr.scene.image, controller=ctl)
+        assert tf.steering is not None
+        sources.append(tf.steering.source)
+        cyc.advance(tf.steering.curvature)
+    assert sources[0] == "pair"     # raw detections cover warmup
+    # once the tracker confirms, control_peaks prefers tracks
+    assert tp.tracker.tracks
+    peaks, valid = tf.control_peaks
+    assert peaks.shape[0] == len(tf.tracks)
